@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["table", "check", "Result"]
+
+
+class Result:
+    def __init__(self, name: str):
+        self.name = name
+        self.checks: list[tuple[str, bool, str]] = []
+
+    def check(self, label: str, got, want, rtol: float = 0.02):
+        g = np.asarray(got, dtype=np.float64)
+        w = np.asarray(want, dtype=np.float64)
+        ok = bool(np.all(np.abs(g - w) <= rtol * np.maximum(np.abs(w), 1e-12)))
+        self.checks.append((label, ok, f"got {got} want {want} (rtol {rtol})"))
+        mark = "PASS" if ok else "FAIL"
+        print(f"  [{mark}] {label}: {got} (paper: {want})")
+        return ok
+
+    def note(self, label: str, value):
+        print(f"  [note] {label}: {value}")
+
+    @property
+    def passed(self) -> bool:
+        return all(ok for _, ok, _ in self.checks)
+
+
+def table(headers, rows, fmt="{:>12}"):
+    line = " ".join(fmt.format(str(h)[:12]) for h in headers)
+    print(line)
+    print("-" * len(line))
+    for r in rows:
+        print(" ".join(
+            fmt.format(f"{v:.4g}" if isinstance(v, float) else str(v)[:12])
+            for v in r))
+
+
+def check(name):
+    return Result(name)

@@ -1,0 +1,50 @@
+"""Paper Fig 12 — minimal finish time vs number of sources and processors.
+
+Table 3 parameters: G=(0.5, 0.6, 0.7), R=(2, 3, 4), A=(1.1, 1.2, ..., 3.0),
+J=100, no front-ends.  Claims reproduced: finish time falls monotonically
+in both the source count and the processor count, with diminishing returns
+in processors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dlt import SystemSpec, solve
+from .common import check, table
+
+
+def run():
+    r = check("fig12_finish_time")
+    A = np.round(np.arange(1.1, 3.01, 0.1), 10)
+    G = [0.5, 0.6, 0.7]
+    R = [2.0, 3.0, 4.0]
+
+    curves = {}
+    for n in (1, 2, 3):
+        tfs = []
+        for m in range(1, 21):
+            spec = SystemSpec(G=G[:n], R=R[:n], A=A[:m], J=100)
+            tfs.append(solve(spec, frontend=False).finish_time)
+        curves[n] = np.asarray(tfs)
+
+    rows = [[m] + [round(curves[n][m - 1], 2) for n in (1, 2, 3)]
+            for m in (1, 2, 4, 8, 12, 16, 20)]
+    table(["m", "1 source", "2 sources", "3 sources"], rows)
+
+    for n in (1, 2, 3):
+        r.check(f"{n}-source curve non-increasing in m",
+                bool(np.all(np.diff(curves[n]) <= 1e-9)), True, rtol=0)
+    r.check("more sources help (2 <= 1, 3 <= 2 at m=20)",
+            bool(curves[2][-1] <= curves[1][-1] + 1e-9
+                 and curves[3][-1] <= curves[2][-1] + 1e-9), True, rtol=0)
+    # diminishing returns: improvement from m=1->2 exceeds m=19->20
+    d_first = curves[3][0] - curves[3][1]
+    d_last = curves[3][-2] - curves[3][-1]
+    r.check("diminishing returns (first delta > last delta)",
+            bool(d_first > d_last), True, rtol=0)
+    return r
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run().passed else 1)

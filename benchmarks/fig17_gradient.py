@@ -1,0 +1,37 @@
+"""Paper Figs 17-18 / Eq 18 — finish time and its gradient vs processors.
+
+Same Table 5 system as fig16.  Published gradient magnitudes: ~8.4% at m=5
+and ~5.3% at m=6; with the paper's 6% rule the user should run 5 processors.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dlt import plan_with_cost_budget
+from .common import check, table
+from .fig16_cost import make_sweep
+
+
+def run():
+    r = check("fig17_gradient")
+    sweep = make_sweep()
+    grad = sweep.gradient()
+    rows = [[int(m), round(t, 3), f"{g:+.3%}" if np.isfinite(g) else "-"]
+            for m, t, g in zip(sweep.m, sweep.finish_time, grad)][:10]
+    table(["m", "T_f", "gradient"], rows)
+
+    r.check("gradient at m=5 (~-8.4%)", round(float(grad[4]), 3), -0.084,
+            rtol=0.02)
+    r.check("gradient at m=6 (~-5.3%)", round(float(grad[5]), 3), -0.053,
+            rtol=0.02)
+    plan = plan_with_cost_budget(sweep, budget_cost=3450.0,
+                                 gradient_threshold=0.06)
+    r.note("plan under Budget_cost=3450 & 6% rule", plan.reason)
+    r.check("paper's recommendation: use 5 processors", plan.recommended_m, 5,
+            rtol=0)
+    return r
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run().passed else 1)

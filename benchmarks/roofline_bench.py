@@ -1,0 +1,61 @@
+"""Roofline table from the dry-run JSONs (results/dryrun/*.json).
+
+Reads the single-pod records and prints the three roofline terms, the
+bottleneck, and MODEL_FLOPS/HLO_FLOPs per (arch x shape) cell — the data
+behind EXPERIMENTS.md Section Roofline.  Does not recompile anything.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from .common import check, table
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(str(RESULTS / f"*__{mesh}.json"))):
+        recs.append(json.loads(Path(f).read_text()))
+    return recs
+
+
+def run():
+    r = check("roofline_bench")
+    recs = load_records("single")
+    if not recs:
+        r.note("status", "no dry-run results yet — run "
+               "`python -m repro.launch.dryrun --all` first")
+        return r
+    rows = []
+    n_ok = n_skip = n_err = 0
+    for rec in recs:
+        if rec["status"] == "skipped":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_err += 1
+            continue
+        n_ok += 1
+        rf = rec.get("roofline")
+        if not rf:
+            continue
+        rows.append([
+            rec["arch"][:18], rec["shape"],
+            f"{rf['compute_s']:.3g}", f"{rf['memory_s']:.3g}",
+            f"{rf['collective_s']:.3g}", rf["bottleneck"],
+            f"{rf['roofline_fraction']:.3f}",
+            f"{rf['useful_flops_ratio']:.2f}",
+        ])
+    table(["arch", "shape", "compute_s", "memory_s", "collect_s",
+           "bottleneck", "frac", "useful"], rows, fmt="{:>14}")
+    r.note("cells ok/skipped/error", f"{n_ok}/{n_skip}/{n_err}")
+    r.check("no failed cells", n_err, 0, rtol=0)
+    return r
+
+
+if __name__ == "__main__":
+    raise SystemExit(0 if run().passed else 1)

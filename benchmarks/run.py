@@ -1,0 +1,40 @@
+"""Run every paper-reproduction benchmark: `python -m benchmarks.run`."""
+
+from __future__ import annotations
+
+import importlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.table1_frontend",
+    "benchmarks.table2_nofrontend",
+    "benchmarks.fig12_finish_time",
+    "benchmarks.fig13_jobsize",
+    "benchmarks.fig15_speedup",
+    "benchmarks.fig16_cost",
+    "benchmarks.fig17_gradient",
+    "benchmarks.fig19_budgets",
+    "benchmarks.roofline_bench",
+]
+
+
+def main(argv=None) -> int:
+    results = []
+    for name in MODULES:
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.time()
+        mod = importlib.import_module(name)
+        res = mod.run()
+        results.append((name, res.passed, time.time() - t0))
+
+    print("\n" + "=" * 70)
+    n_pass = sum(1 for _, ok, _ in results if ok)
+    for name, ok, dt in results:
+        print(f"  {'PASS' if ok else 'FAIL'}  {name:40s} {dt:6.1f}s")
+    print(f"benchmarks: {n_pass}/{len(results)} passed")
+    return 0 if n_pass == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

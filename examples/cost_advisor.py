@@ -1,0 +1,76 @@
+"""Cluster-sizing advisor: the paper's Sec 6 trade-off on REAL dry-run data.
+
+Reads the compiled roofline estimates from results/dryrun (llama3-8b x
+train_4k by default), extrapolates step time across TPU v5e slice sizes,
+and answers the paper's three questions: what to buy under a cost budget,
+under a deadline, and under both.
+
+Run: PYTHONPATH=src python examples/cost_advisor.py
+"""
+
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.core.advisor import ClusterAdvisor, SliceCandidate
+
+
+def load_step_time(arch="llama3-8b", shape="train_4k"):
+    f = ROOT / "results" / "dryrun" / f"{arch}__{shape}__single.json"
+    if f.exists():
+        rec = json.loads(f.read_text())
+        rf = rec.get("roofline")
+        if rf:
+            t = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            return t, 256, f"{arch} x {shape} dry-run"
+    return 0.75, 256, "fallback estimate (run the dry-run for real numbers)"
+
+
+def main():
+    step_256, chips_ref, origin = load_step_time()
+    print(f"== step-time estimate: {step_256:.3f}s @ {chips_ref} chips "
+          f"({origin}) ==")
+
+    # scale: compute-bound part scales ~1/chips, a fixed overhead doesn't
+    fixed = 0.15 * step_256
+    scalable = step_256 - fixed
+    cands = [SliceCandidate(c, scalable * chips_ref / c + fixed)
+             for c in (32, 64, 128, 256, 512, 1024)]
+    for c in cands:
+        print(f"  {c.chips:5d} chips -> {c.step_time_s*1e3:7.1f} ms/step")
+
+    steps = 50_000
+    adv = ClusterAdvisor(cands, num_steps=steps, dollars_per_chip_hour=1.20)
+    # pick budgets relative to this workload so the example is meaningful
+    # for whatever the dry-run measured
+    min_cost = float(adv.sweep.cost.min())
+    min_time = float(adv.sweep.finish_time.min())
+    budget_cost = 1.5 * min_cost
+    budget_time = 3.0 * min_time
+
+    def show(label, p):
+        if p.feasible:
+            print(f"  {label:22s} -> {p.recommended_m} chips "
+                  f"({p.finish_time/3600:.1f}h, ${p.cost:,.0f}) [{p.reason}]")
+        else:
+            print(f"  {label:22s} -> INFEASIBLE: {p.reason}")
+
+    print(f"\n== training run: {steps} steps @ $1.20/chip-hour ==")
+    show(f"cost <= ${budget_cost:,.0f}",
+         adv.with_cost_budget(budget_dollars=budget_cost))
+    show(f"time <= {budget_time/3600:.1f}h",
+         adv.with_time_budget(budget_seconds=budget_time))
+    show("both budgets",
+         adv.with_both_budgets(budget_dollars=budget_cost,
+                               budget_seconds=budget_time))
+    # and the paper's Fig 20 case: impossible pair
+    show("impossible pair",
+         adv.with_both_budgets(budget_dollars=0.5 * min_cost,
+                               budget_seconds=0.9 * min_time))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Multi-source data pipeline: the paper's system feeding a training fleet.
+
+Three storage hosts with different bandwidths and release times (cold start)
+feed five worker groups of different speeds.  The DLT LP plans who ships
+what to whom and when; the virtual-time simulator verifies the paper's
+sequential-link and release-time invariants; then real batches flow.
+
+Run: PYTHONPATH=src python examples/multisource_pipeline.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+from repro.data import MultiSourcePipeline, SourceSpec, SyntheticCorpus
+
+
+def main():
+    sources = [
+        SourceSpec("us-east-ssd", seconds_per_doc=0.02, release_time=0.0,
+                   doc_start=0),
+        SourceSpec("us-west-ssd", seconds_per_doc=0.03, release_time=2.0,
+                   doc_start=1_000_000),
+        SourceSpec("eu-cold-hdd", seconds_per_doc=0.08, release_time=10.0,
+                   doc_start=2_000_000),
+    ]
+    worker_rates = [0.10, 0.12, 0.15, 0.22, 0.30]   # seconds per doc
+    pipe = MultiSourcePipeline(
+        sources, worker_rates, docs_per_round=2_000,
+        corpus=SyntheticCorpus(vocab_size=32_000, seq_len=128),
+        frontend=True,
+    )
+
+    events = pipe.plan()
+    print(f"== plan: {len(events)} transfers, LP makespan "
+          f"{pipe.makespan:.2f}s ==")
+    for e in events[:6]:
+        print(f"  t={e.start:7.2f}..{e.finish:7.2f}  "
+              f"{sources[e.source].name:12s} -> worker {e.worker}  "
+              f"{len(e.doc_ids):5d} docs")
+    print("  ...")
+
+    sim = pipe.simulate()
+    print(f"\n== simulation: makespan {sim['makespan']:.2f}s, "
+          f"violations: {sim['violations'] or 'none'} ==")
+    print("  per-worker finish:",
+          np.round(sim["worker_finish"], 2).tolist())
+
+    # single-source comparison (paper Sec 5's speedup, on the pipeline)
+    single = MultiSourcePipeline(sources[:1], worker_rates,
+                                 docs_per_round=2_000, frontend=True)
+    s = single.simulate()["makespan"] / sim["makespan"]
+    print(f"\n== speedup vs single source: {s:.2f}x ==")
+
+    n = 0
+    for batch in pipe.iter_batches(batch_docs_per_worker=32):
+        n += 1
+        if n <= 3:
+            print(f"  batch for worker {batch['worker']}: "
+                  f"tokens {batch['tokens'].shape}")
+        if n >= 12:
+            break
+    print(f"== delivered {n} batches ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""Generate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+results/dryrun/*.json.  Usage:
+    python scripts/gen_experiments.py > /tmp/tables.md
+"""
+
+import glob
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def load(mesh):
+    recs = {}
+    for f in sorted(glob.glob(str(ROOT / "results" / "dryrun" /
+                                  f"*__{mesh}.json"))):
+        r = json.loads(Path(f).read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+ARCH_ORDER = [
+    "whisper-medium", "h2o-danube-1.8b", "nemotron-4-15b", "phi4-mini-3.8b",
+    "llama3-8b", "olmoe-1b-7b", "qwen3-moe-30b-a3b",
+    "llava-next-mistral-7b", "rwkv6-7b", "recurrentgemma-9b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table():
+    single, multi = load("single"), load("multi")
+    print("| arch | shape | single-pod (16,16) | GiB/chip | multi-pod "
+          "(2,16,16) | GiB/chip | compile s / m |")
+    print("|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            rs, rm = single.get((a, s)), multi.get((a, s))
+            if rs is None:
+                continue
+            if rs["status"] == "skipped":
+                print(f"| {a} | {s} | SKIP (full attention @524k) | — | "
+                      f"SKIP | — | — |")
+                continue
+            ms = rs["memory_analysis"].get("peak_live_bytes_est", 0)
+            mm = rm["memory_analysis"].get("peak_live_bytes_est", 0)
+            print(f"| {a} | {s} | ok | {fmt_bytes(ms)} | ok | {fmt_bytes(mm)}"
+                  f" | {rs.get('compile_s','?')} / {rm.get('compile_s','?')} |")
+
+
+def roofline_table():
+    single = load("single")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "bottleneck | roofline frac | useful FLOPs | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = single.get((a, s))
+            if r is None or r["status"] != "ok" or "roofline" not in r:
+                continue
+            rf = r["roofline"]
+            note = ""
+            if s.startswith("decode") or s.startswith("long"):
+                note = "1-token step: inherently bandwidth-bound"
+            print(f"| {a} | {s} | {rf['compute_s']:.3f} | "
+                  f"{rf['memory_s']:.2f} | {rf['collective_s']:.2f} | "
+                  f"{rf['bottleneck']} | {rf['roofline_fraction']:.3f} | "
+                  f"{rf['useful_flops_ratio']:.2f} | {note} |")
+
+
+def collective_table():
+    single = load("single")
+    print("| arch | shape | all-gather GB | all-reduce GB | all-to-all GB | "
+          "permute GB |")
+    print("|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = single.get((a, s))
+            if r is None or r["status"] != "ok" or "roofline" not in r:
+                continue
+            cb = r["roofline"]["collective_bytes"]
+            row = [cb.get(k, 0) / 1e9 for k in
+                   ("all-gather", "all-reduce", "all-to-all",
+                    "collective-permute")]
+            print(f"| {a} | {s} | " + " | ".join(f"{v:.1f}" for v in row)
+                  + " |")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+    if which in ("all", "roofline"):
+        print("\n### Roofline (single-pod, per step)\n")
+        roofline_table()
+    if which in ("all", "collectives"):
+        print("\n### Collective bytes per device per step (single-pod)\n")
+        collective_table()

@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dev tool: compile one dry-run cell and dump its biggest tensors +
+collectives.  Usage: PYTHONPATH=src python scripts/probe_cell.py ARCH SHAPE [MESH]"""
+
+import sys
+
+import jax
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis import hlo_parse as hp
+from repro.configs import SHAPES
+from repro.distributed.sharding import use_sharding_rules
+from repro.launch.dryrun import _rules_for, build_cell
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    mesh_name = sys.argv[3] if len(sys.argv) > 3 else "single"
+    step, in_sh, out_sh, args, meta, mesh = build_cell(arch, shape, mesh_name)
+    rules = _rules_for(mesh_name, SHAPES[shape])
+    with mesh, use_sharding_rules(mesh, rules):
+        compiled = jax.jit(step, in_shardings=in_sh,
+                           out_shardings=out_sh).lower(*args).compile()
+    txt = compiled.as_text()
+    out = f"/tmp/{arch}_{shape}_{mesh_name}.hlo"
+    open(out, "w").write(txt)
+    print("HLO saved:", out, f"({len(txt)/1e6:.1f} MB)")
+
+    comps = hp._parse(txt)
+    rows = [(ins.result_bytes, ins.opcode, ins.name, c)
+            for c, inss in comps.items() for ins in inss]
+    rows.sort(reverse=True)
+    seen = set()
+    n = 0
+    print("--- biggest tensors ---")
+    for b, o, nm, c in rows:
+        if (o, b) in seen:
+            continue
+        seen.add((o, b))
+        n += 1
+        print(f"{b/2**30:8.2f} GiB {o:20s} {nm[:40]:42s} {c[:44]}")
+        if n >= 12:
+            break
+    stats = hp.analyze_hlo(txt)
+    print("flops %.3e traffic %.3e coll_s %.2f" %
+          (stats.flops, stats.hbm_traffic_bytes,
+           stats.collective_link_seconds))
+    print("coll:", {k: f"{v/1e9:.1f}GB" for k, v in
+                    stats.collective_bytes.items()})
+
+
+if __name__ == "__main__":
+    main()

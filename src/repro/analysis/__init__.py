@@ -1,0 +1,20 @@
+from .hlo_parse import HloStats, analyze_hlo
+from .roofline import (
+    HBM_BW,
+    ICI_LINK_BW,
+    PEAK_FLOPS_BF16,
+    RooflineTerms,
+    model_flops,
+    roofline_from_hlo,
+)
+
+__all__ = [
+    "analyze_hlo",
+    "HloStats",
+    "roofline_from_hlo",
+    "RooflineTerms",
+    "model_flops",
+    "PEAK_FLOPS_BF16",
+    "HBM_BW",
+    "ICI_LINK_BW",
+]

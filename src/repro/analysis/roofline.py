@@ -1,0 +1,106 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs_global / (chips x 197 TFLOP/s)
+    memory term     = HBM_traffic_global / (chips x 819 GB/s)
+    collective term = per-chip ring-model link seconds (~50 GB/s/link)
+
+All three are seconds-per-step for one chip under SPMD (FLOPs and traffic
+are measured per device from the partitioned module, so the chip count
+cancels).  The bottleneck is the max term; the roofline fraction reported
+in EXPERIMENTS.md SPerf is ``compute_term / max(all terms)`` — how close
+the step is to being MXU-bound at peak.
+
+MODEL_FLOPS (the "useful work" yardstick):
+    train:    6 * N_active * tokens      (fwd 2x + bwd 4x)
+    prefill:  2 * N_active * tokens
+    decode:   2 * N_active * batch       (one token per sequence)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .hlo_parse import HloStats, analyze_hlo
+
+__all__ = ["RooflineTerms", "roofline_from_hlo", "model_flops",
+           "PEAK_FLOPS_BF16", "HBM_BW", "ICI_LINK_BW"]
+
+PEAK_FLOPS_BF16 = 197e12   # per v5e chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_LINK_BW = 50e9         # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    hbm_traffic_per_device: float
+    collective_bytes: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_global: float
+    useful_flops_ratio: float     # MODEL_FLOPS / HLO_FLOPs_global
+    bottleneck: str
+    roofline_fraction: float      # compute_s / max(terms)
+    memory_per_device_bytes: Optional[dict] = None
+    notes: Optional[list] = None
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops(kind: str, n_active_params: float, seq_len: int,
+                global_batch: int) -> float:
+    if kind == "train":
+        return 6.0 * n_active_params * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * n_active_params * seq_len * global_batch
+    return 2.0 * n_active_params * global_batch  # decode: one token/sequence
+
+
+def roofline_from_hlo(
+    hlo_text: str,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    kind: str,
+    n_active_params: float,
+    seq_len: int,
+    global_batch: int,
+    memory_stats: Optional[dict] = None,
+) -> RooflineTerms:
+    stats: HloStats = analyze_hlo(hlo_text, link_bw=ICI_LINK_BW)
+    compute_s = stats.flops / PEAK_FLOPS_BF16
+    memory_s = stats.hbm_traffic_bytes / HBM_BW
+    collective_s = stats.collective_link_seconds
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    peak = max(max(terms.values()), 1e-30)
+    mf = model_flops(kind, n_active_params, seq_len, global_batch)
+    hlo_flops_global = stats.flops * chips
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        flops_per_device=stats.flops,
+        hbm_traffic_per_device=stats.hbm_traffic_bytes,
+        collective_bytes=stats.collective_bytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        model_flops_global=mf,
+        useful_flops_ratio=mf / max(hlo_flops_global, 1e-30),
+        bottleneck=bottleneck,
+        roofline_fraction=compute_s / peak,
+        memory_per_device_bytes=memory_stats,
+        notes=stats.notes,
+    )

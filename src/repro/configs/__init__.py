@@ -1,0 +1,52 @@
+"""Config registry: ``get_config(arch_id)`` for the 10 assigned architectures."""
+
+from . import (
+    h2o_danube_1p8b,
+    llama3_8b,
+    llava_next_mistral_7b,
+    nemotron4_15b,
+    olmoe_1b_7b,
+    phi4_mini_3p8b,
+    qwen3_moe_30b_a3b,
+    recurrentgemma_9b,
+    rwkv6_7b,
+    whisper_medium,
+)
+from .base import ModelConfig
+from .shapes import SHAPES, ShapeSuite, cell_applicable, input_specs
+
+_REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        whisper_medium,
+        h2o_danube_1p8b,
+        nemotron4_15b,
+        phi4_mini_3p8b,
+        llama3_8b,
+        olmoe_1b_7b,
+        qwen3_moe_30b_a3b,
+        llava_next_mistral_7b,
+        rwkv6_7b,
+        recurrentgemma_9b,
+    )
+}
+
+ARCH_IDS = tuple(_REGISTRY)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        return _REGISTRY[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_REGISTRY)}") from None
+
+
+__all__ = [
+    "ModelConfig",
+    "get_config",
+    "ARCH_IDS",
+    "SHAPES",
+    "ShapeSuite",
+    "input_specs",
+    "cell_applicable",
+]

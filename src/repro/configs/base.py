@@ -1,0 +1,171 @@
+"""ModelConfig — one schema covering all 10 assigned architectures.
+
+``block_pattern`` expresses per-layer temporal-mix type as a repeating cycle:
+    ("attn",)                  uniform transformer (dense or MoE FFN)
+    ("rwkv",)                  RWKV-6 (attention-free)
+    ("rec", "rec", "local")    RecurrentGemma 2:1 RG-LRU : local-attention
+Layers = cycles of the pattern (+ a remainder prefix), which the model scans
+as stacked "super-blocks" so compile time is independent of depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    act: str = "swiglu"          # swiglu | gelu | relu2 | geglu
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    attn_bias: bool = False
+    mlp_bias: bool = False
+    pos: str = "rope"            # rope | learned | none
+    rope_theta: float = 10_000.0
+    rope_fraction: float = 1.0
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # SWA for global "attn" blocks
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_cap_factor: float = 1.25
+
+    # layer pattern
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_lora_rank: int = 32
+    rwkv_decay_lora_rank: int = 64
+
+    # recurrentgemma / griffin
+    rnn_width: int = 0           # 0 -> d_model
+    conv_width: int = 4
+    local_window: int = 2048
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0         # stub frontend frames (whisper: 1500)
+
+    # vlm (llava) — stub patch embeddings prepended to the text sequence
+    num_patch_tokens: int = 0
+
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    source: str = ""             # provenance note ([arXiv/hf; tier])
+
+    # ---- derived -----------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_rnn_width(self) -> int:
+        return self.rnn_width or self.d_model
+
+    @property
+    def jnp_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.dtype]
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def attention_free(self) -> bool:
+        return all(b == "rwkv" for b in self.block_pattern)
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: no unbounded-window attention block."""
+        for b in self.block_pattern:
+            if b == "attn" and self.sliding_window is None:
+                return False
+            if b == "local" and self.local_window is None:
+                return False
+        return not self.is_encoder_decoder
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for reporting."""
+        D, F, V = self.d_model, self.d_ff, self.vocab_size
+        H, K, Dh = self.num_heads, self.num_kv_heads, self.resolved_head_dim
+        n = V * D * (1 if self.tie_embeddings else 2)
+        per_attn = D * (H * Dh) * 2 + D * (K * Dh) * 2
+        n_mlp_mats = 3 if self.act in ("swiglu", "geglu") else 2
+        per_mlp = n_mlp_mats * D * F
+        per_moe = self.num_experts * n_mlp_mats * D * F + D * self.num_experts
+        W = self.resolved_rnn_width
+        per_rec = 2 * D * W + W * D + self.conv_width * W + 2 * W * W // 8 + 2 * W
+        per_rwkv = D * D * 4 + D * (2 * D) + per_mlp  # r,k,v,o + gate + channel-mix
+        for li in range(self.num_layers):
+            kind = self.block_pattern[li % len(self.block_pattern)]
+            if kind == "attn" or kind == "local":
+                n += per_attn
+                n += per_moe if self.is_moe else per_mlp
+            elif kind == "rec":
+                n += per_rec + per_mlp
+            elif kind == "rwkv":
+                n += per_rwkv
+        if self.is_encoder_decoder:
+            n += self.encoder_layers * (per_attn + per_mlp)
+            n += self.num_layers * per_attn  # cross-attention
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k experts only) — the N in
+        MODEL_FLOPS = 6*N_active*D."""
+        if not self.is_moe:
+            return self.param_count()
+        dense_like = dataclasses.replace(
+            self, num_experts=self.experts_per_token,
+            experts_per_token=self.experts_per_token)
+        # router always runs over all experts (negligible but exact)
+        router = self.num_layers * self.d_model * self.num_experts
+        dense_router = dense_like.num_layers * self.d_model * dense_like.num_experts
+        return dense_like.param_count() - dense_router + router
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        pat = self.block_pattern
+        small = dict(
+            num_layers=max(len(pat), 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 4) if self.num_kv_heads > 1 else 1,
+            head_dim=32,
+            d_ff=256 if not self.is_moe else 64,
+            vocab_size=512,
+            num_experts=8 if self.is_moe else 0,
+            experts_per_token=2 if self.is_moe else 0,
+            sliding_window=16 if self.sliding_window else None,
+            rwkv_head_dim=32,
+            rwkv_lora_rank=8,
+            rwkv_decay_lora_rank=8,
+            rnn_width=128 if self.rnn_width or "rec" in pat else 0,
+            local_window=16,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=24 if self.encoder_seq else 0,
+            num_patch_tokens=8 if self.num_patch_tokens else 0,
+            dtype="float32",
+        )
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

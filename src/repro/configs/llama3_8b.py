@@ -1,0 +1,24 @@
+"""llama3-8b [dense] — GQA, 128k vocab, rope theta 500k.
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=128256.
+[arXiv:2407.21783; unverified]
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    act="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    source="arXiv:2407.21783; unverified",
+)

@@ -1,0 +1,29 @@
+"""llava-next-mistral-7b [vlm] — anyres patch frontend (stub) + mistral-7b backbone.
+
+32L, d_model=4096, 32H (GQA kv=8), d_ff=14336, vocab=32000.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The anyres tiling vision tower + projector are a STUB: ``input_specs()``
+supplies precomputed patch embeddings (B, 2880, d_model) that the backbone
+prepends to the text sequence (2880 = 576 base + 4x576 anyres tiles).
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    act="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=1_000_000.0,  # mistral-7b-instruct-v0.2 backbone
+    num_patch_tokens=2880,
+    tie_embeddings=False,
+    source="hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified",
+)

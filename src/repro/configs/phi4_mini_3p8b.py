@@ -1,0 +1,25 @@
+"""phi4-mini-3.8b [dense] — RoPE (partial rotary) + SwiGLU + GQA, 200k vocab.
+
+32L, d_model=3072, 24H (GQA kv=8), d_ff=8192, vocab=200064.
+[arXiv:2412.08905; hf]
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b",
+    family="dense",
+    num_layers=32,
+    d_model=3072,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    act="swiglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=10_000.0,
+    rope_fraction=0.75,
+    tie_embeddings=True,
+    source="arXiv:2412.08905; hf",
+)

@@ -1,0 +1,30 @@
+"""recurrentgemma-9b [hybrid] — Griffin: RG-LRU + local attention, 1 attn : 2 rec.
+
+38L in repeating (rec, rec, local) blocks (12 cycles + rec,rec remainder),
+d_model=4096, 16H (MQA kv=1, head_dim 256), GeGLU d_ff=12288, vocab=256000,
+local attention window 2048.  [arXiv:2402.19427; unverified]
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    act="geglu",
+    norm="rmsnorm",
+    pos="rope",
+    rope_theta=10_000.0,
+    block_pattern=("rec", "rec", "local"),
+    rnn_width=4096,
+    conv_width=4,
+    local_window=2048,
+    tie_embeddings=True,
+    source="arXiv:2402.19427; unverified",
+)

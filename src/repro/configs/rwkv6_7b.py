@@ -1,0 +1,27 @@
+"""rwkv6-7b "Finch" [ssm] — attention-free, data-dependent decay.
+
+32L, d_model=4096 (64 heads x head_dim 64), channel-mix d_ff=14336,
+vocab=65536.  [arXiv:2404.05892; hf]
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,        # d_model / rwkv_head_dim
+    num_kv_heads=64,
+    d_ff=14336,
+    vocab_size=65536,
+    act="relu2",         # channel-mix uses squared ReLU internally
+    norm="layernorm",
+    pos="none",
+    block_pattern=("rwkv",),
+    rwkv_head_dim=64,
+    rwkv_lora_rank=32,
+    rwkv_decay_lora_rank=64,
+    tie_embeddings=False,
+    source="arXiv:2404.05892; hf",
+)

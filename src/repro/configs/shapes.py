@@ -1,0 +1,98 @@
+"""The four assigned input-shape suites and their ShapeDtypeStruct specs.
+
+    train_4k      seq_len=4,096    global_batch=256   (training)
+    prefill_32k   seq_len=32,768   global_batch=32    (inference-prefill)
+    decode_32k    seq_len=32,768   global_batch=128   (inference-decode)
+    long_500k     seq_len=524,288  global_batch=1     (long-context-decode)
+
+``decode_*`` / ``long_*`` lower ``serve_step`` — ONE new token against a KV
+cache (or recurrent state) of ``seq_len`` — not ``train_step``.  ``long_500k``
+requires sub-quadratic attention (``cfg.subquadratic``); full-attention archs
+skip it by assignment rule (see DESIGN.md §Arch-applicability).
+
+``input_specs`` returns weak-type-correct ``jax.ShapeDtypeStruct`` stand-ins
+for every model input — shardable, zero allocation — the same pattern the
+dry-run uses to prove the production mesh compiles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+__all__ = ["ShapeSuite", "SHAPES", "input_specs", "cell_applicable"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSuite:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSuite] = {
+    "train_4k": ShapeSuite("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSuite("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSuite("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSuite("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeSuite) -> tuple[bool, str]:
+    """(runs?, reason).  Implements the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "skipped: full-attention arch, O(L^2) at 524k (per assignment)"
+    return True, "ok"
+
+
+def _embed_inputs(cfg: ModelConfig, batch: int, dtype) -> dict:
+    """Stubbed modality frontends (precomputed embeddings)."""
+    extra = {}
+    if cfg.is_encoder_decoder:
+        extra["frame_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.num_patch_tokens:
+        extra["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patch_tokens, cfg.d_model), dtype)
+    return extra
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSuite,
+                seq_override: Optional[int] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: {tokens, labels?, frame_embeds?, patch_embeds?}
+    decode:        {tokens (B,1), pos (), cache (model.init_cache shapes)}
+    """
+    from repro.models import LM  # local import to avoid cycles
+
+    dtype = cfg.jnp_dtype
+    B = shape.global_batch
+    S = seq_override or shape.seq_len
+
+    if shape.kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            **_embed_inputs(cfg, B, dtype),
+        }
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return specs
+
+    model = LM(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "cache": cache,
+    }
+    if cfg.is_encoder_decoder:
+        # cross-attention K/V live inside the cache; no frame input per step
+        pass
+    return specs

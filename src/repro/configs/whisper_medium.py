@@ -1,0 +1,30 @@
+"""whisper-medium [audio] — enc-dec, conv frontend stubbed to frame embeddings.
+
+24L decoder + 24L encoder, d_model=1024, 16H (kv=16), d_ff=4096, vocab=51865.
+[arXiv:2212.04356; unverified]  Positional embeddings are sinusoidal here
+(whisper's decoder table is learned; a table would pin max_seq — noted in
+DESIGN.md).  The assigned seq shapes drive the DECODER; the encoder sees the
+stub's fixed 1500 frames.
+"""
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    act="gelu",
+    norm="layernorm",
+    attn_bias=True,
+    pos="learned",
+    rope_theta=0.0,
+    encoder_layers=24,
+    encoder_seq=1500,
+    tie_embeddings=True,
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,20 @@
+"""Core: the paper's DLT scheduling contribution + its framework integrations.
+
+- ``core.dlt``      — Sec 2/3/5/6 math: closed form, both LPs, speedup, cost.
+- ``core.balancer`` — DLT as data-parallel batch balancing (straggler mitigation).
+- ``core.advisor``  — Sec 6 trade-off plans over TPU slice sizes.
+"""
+
+from . import dlt
+from .advisor import ClusterAdvisor, SliceCandidate, TPU_V5E_DOLLARS_PER_CHIP_HOUR
+from .balancer import BatchPlan, balance_batch, uniform_makespan
+
+__all__ = [
+    "dlt",
+    "balance_batch",
+    "BatchPlan",
+    "uniform_makespan",
+    "ClusterAdvisor",
+    "SliceCandidate",
+    "TPU_V5E_DOLLARS_PER_CHIP_HOUR",
+]

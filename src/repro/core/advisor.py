@@ -1,0 +1,69 @@
+"""Cluster-sizing advisor — the paper's Sec 6 trade-off over real TPU fleets.
+
+The paper sweeps "number of processors" against finish time and monetary
+cost.  Here the processor is a TPU slice: the advisor takes per-slice-size
+step-time estimates (from the roofline analysis of the compiled dry-run),
+a step count, and a $/chip-hour rate, and answers the paper's three
+questions — what to buy under a cost budget, a deadline, or both — with
+the same gradient rule (Eq 18) used to stop adding hardware once marginal
+speedup decays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .dlt.cost import (
+    ProcessorSweep,
+    TradeoffPlan,
+    plan_with_both_budgets,
+    plan_with_cost_budget,
+    plan_with_time_budget,
+)
+
+__all__ = ["SliceCandidate", "ClusterAdvisor", "TPU_V5E_DOLLARS_PER_CHIP_HOUR"]
+
+# Public on-demand list price, us-central (order of magnitude; configurable).
+TPU_V5E_DOLLARS_PER_CHIP_HOUR = 1.20
+
+
+@dataclasses.dataclass(frozen=True)
+class SliceCandidate:
+    chips: int
+    step_time_s: float  # estimated step time at this slice size
+
+
+class ClusterAdvisor:
+    """Sec 6 trade-off plans over TPU slice sizes instead of processor counts."""
+
+    def __init__(
+        self,
+        candidates: Sequence[SliceCandidate],
+        num_steps: int,
+        dollars_per_chip_hour: float = TPU_V5E_DOLLARS_PER_CHIP_HOUR,
+    ):
+        cands = sorted(candidates, key=lambda c: c.chips)
+        chips = np.asarray([c.chips for c in cands], dtype=np.int64)
+        step_t = np.asarray([c.step_time_s for c in cands])
+        job_time = step_t * num_steps
+        cost = chips * dollars_per_chip_hour * (job_time / 3600.0)
+        # Reuse the paper's sweep container: "m" = chips.
+        self.sweep = ProcessorSweep(m=chips, finish_time=job_time, cost=cost)
+        self.num_steps = num_steps
+        self.rate = dollars_per_chip_hour
+
+    def gradient(self) -> np.ndarray:
+        """Eq 18 over slice sizes."""
+        return self.sweep.gradient()
+
+    def with_cost_budget(self, budget_dollars: float, gradient_threshold: float = 0.06) -> TradeoffPlan:
+        return plan_with_cost_budget(self.sweep, budget_dollars, gradient_threshold)
+
+    def with_time_budget(self, budget_seconds: float) -> TradeoffPlan:
+        return plan_with_time_budget(self.sweep, budget_seconds)
+
+    def with_both_budgets(self, budget_dollars: float, budget_seconds: float) -> TradeoffPlan:
+        return plan_with_both_budgets(self.sweep, budget_dollars, budget_seconds)

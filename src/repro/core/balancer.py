@@ -1,0 +1,108 @@
+"""DLT-driven heterogeneous batch balancing (straggler mitigation).
+
+This is where the paper's scheduler becomes a *training-systems* feature:
+data-parallel workers are the paper's processors (A_j = seconds per sample,
+measured), input hosts are the sources (G_i = seconds per sample shipped,
+R_i = availability), and the global batch is the divisible job J.  Solving
+the Sec 3.1/3.2 program yields per-worker load shares that minimize the
+step makespan when the fleet is heterogeneous — e.g. a thermally-throttled
+or contended worker (a straggler) simply shows up as a larger A_j and
+automatically receives less load instead of gating the whole step.
+
+On a homogeneous fleet the optimum degenerates to the uniform split, so
+enabling the balancer is free; it only deviates when measurements do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .dlt import Schedule, SystemSpec, solve
+
+__all__ = ["BatchPlan", "balance_batch", "uniform_makespan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Integer per-worker batch shares plus the schedule they came from."""
+
+    shares: np.ndarray          # (num_workers,) ints, sum == global_batch
+    makespan: float             # DLT-optimal step makespan estimate (seconds)
+    uniform_makespan: float     # makespan of the naive equal split
+    schedule: Schedule          # underlying DLT schedule (canonical order)
+    worker_perm: np.ndarray     # canonical index -> original worker index
+
+    @property
+    def speedup_vs_uniform(self) -> float:
+        return self.uniform_makespan / max(self.makespan, 1e-300)
+
+
+def uniform_makespan(seconds_per_sample: Sequence[float], global_batch: int) -> float:
+    """Step time of the equal split: the slowest worker gates the step."""
+    a = np.asarray(seconds_per_sample, dtype=np.float64)
+    per = global_batch / len(a)
+    return float(np.max(a * per))
+
+
+def _largest_remainder(fractions: np.ndarray, total: int) -> np.ndarray:
+    """Round nonnegative fractions (summing to ``total``) to ints, preserving sum."""
+    floors = np.floor(fractions).astype(np.int64)
+    short = int(total - floors.sum())
+    if short > 0:
+        order = np.argsort(-(fractions - floors), kind="stable")
+        floors[order[:short]] += 1
+    elif short < 0:  # numerical over-count; trim from smallest remainders
+        order = np.argsort(fractions - floors, kind="stable")
+        k = 0
+        while short < 0 and k < len(order):
+            if floors[order[k]] > 0:
+                floors[order[k]] -= 1
+                short += 1
+            k += 1
+    return floors
+
+
+def balance_batch(
+    seconds_per_sample: Sequence[float],
+    global_batch: int,
+    source_G: Optional[Sequence[float]] = None,
+    source_R: Optional[Sequence[float]] = None,
+    frontend: bool = True,
+    solver: str = "auto",
+) -> BatchPlan:
+    """Solve the DLT program for one training step's batch split.
+
+    Args:
+      seconds_per_sample: measured per-worker compute time per sample (A_j).
+      global_batch: job size J in samples.
+      source_G: seconds per sample shipped, per input host.  Defaults to a
+        single effectively-infinite-bandwidth source (pure compute balancing).
+      source_R: per-source release times (seconds), default all zero.
+      frontend: True = workers prefetch (compute overlaps input transfer).
+    """
+    A = np.asarray(seconds_per_sample, dtype=np.float64)
+    if source_G is None:
+        # pure compute balancing: one source whose link is far faster than
+        # any worker's compute, so communication never binds.
+        source_G = [float(A.min()) * 1e-6]
+    G = np.asarray(source_G, dtype=np.float64)
+    R = np.zeros_like(G) if source_R is None else np.asarray(source_R, np.float64)
+
+    spec = SystemSpec(G=G, R=R, A=A, J=float(global_batch))
+    cspec, _, pperm = spec.canonical()
+    sched = solve(cspec, frontend=frontend, solver=solver, presorted=True)
+
+    shares_canonical = _largest_remainder(sched.processor_load, global_batch)
+    shares = np.zeros_like(shares_canonical)
+    shares[pperm] = shares_canonical  # map back to caller's worker order
+
+    return BatchPlan(
+        shares=shares,
+        makespan=sched.finish_time,
+        uniform_makespan=uniform_makespan(A, global_batch),
+        schedule=sched,
+        worker_perm=pperm,
+    )

@@ -1,0 +1,47 @@
+"""Divisible Load Theory core — the paper's contribution as a library.
+
+Public API:
+    SystemSpec, Schedule, InfeasibleError          (types)
+    solve, verify_schedule                         (Sec 3.1 / 3.2 LPs)
+    solve_single_source                            (Sec 2 closed form)
+    monetary_cost, sweep_processors, plan_*        (Sec 6 trade-offs)
+    speedup_grid                                   (Sec 5 Amdahl analysis)
+"""
+
+from .cost import (
+    ProcessorSweep,
+    TradeoffPlan,
+    finish_time_gradient,
+    monetary_cost,
+    plan_with_both_budgets,
+    plan_with_cost_budget,
+    plan_with_time_budget,
+    sweep_processors,
+)
+from .simplex import LPResult, linprog_simplex
+from .single_source import finish_time_single_source, solve_single_source
+from .solve import solve, verify_schedule
+from .speedup import SpeedupGrid, speedup_grid
+from .types import InfeasibleError, Schedule, SystemSpec
+
+__all__ = [
+    "SystemSpec",
+    "Schedule",
+    "InfeasibleError",
+    "solve",
+    "verify_schedule",
+    "solve_single_source",
+    "finish_time_single_source",
+    "monetary_cost",
+    "sweep_processors",
+    "finish_time_gradient",
+    "plan_with_cost_budget",
+    "plan_with_time_budget",
+    "plan_with_both_budgets",
+    "ProcessorSweep",
+    "TradeoffPlan",
+    "speedup_grid",
+    "SpeedupGrid",
+    "linprog_simplex",
+    "LPResult",
+]

@@ -1,0 +1,175 @@
+"""Paper Sec 6 — monetary-cost model and time/cost trade-off plans.
+
+    Cost_total = sum_{i,j} beta_{i,j} A_j C_j                    (Eq 17)
+    Gradient_{T_f,m} = (T_f(m) - T_f(m-1)) / T_f(m-1)            (Eq 18)
+
+Three advisory plans (Secs 6.2-6.4):
+  1. cost budget  -> largest feasible m, trimmed by the gradient rule
+     (stop adding processors once the marginal finish-time gain drops
+     below ``gradient_threshold``; the paper uses 6%).
+  2. time budget  -> smallest m with T_f(m) <= budget (cheapest feasible).
+  3. both budgets -> intersection of the two solution areas; possibly empty
+     (paper Fig 20) in which case the advisor reports which budget binds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .solve import solve
+from .types import InfeasibleError, Schedule, SystemSpec
+
+__all__ = [
+    "monetary_cost",
+    "sweep_processors",
+    "finish_time_gradient",
+    "plan_with_cost_budget",
+    "plan_with_time_budget",
+    "plan_with_both_budgets",
+    "ProcessorSweep",
+    "TradeoffPlan",
+]
+
+
+def monetary_cost(sched: Schedule) -> float:
+    """Eq 17."""
+    return sched.monetary_cost()
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessorSweep:
+    """T_f(m) and Cost(m) for m = 1..M processors (canonical fast-first order)."""
+
+    m: np.ndarray            # (K,) processor counts
+    finish_time: np.ndarray  # (K,)
+    cost: np.ndarray         # (K,)
+
+    def gradient(self) -> np.ndarray:
+        """Eq 18 — first entry is NaN (no m-1 predecessor)."""
+        g = np.full_like(self.finish_time, np.nan)
+        g[1:] = (self.finish_time[1:] - self.finish_time[:-1]) / self.finish_time[:-1]
+        return g
+
+
+def sweep_processors(
+    spec: SystemSpec,
+    frontend: bool = True,
+    solver: str = "auto",
+    m_max: Optional[int] = None,
+) -> ProcessorSweep:
+    """Solve the DLT program for every prefix of the (sorted) processor list."""
+    cspec = spec.canonical()[0]
+    M = cspec.num_processors if m_max is None else min(m_max, cspec.num_processors)
+    ms, tfs, costs = [], [], []
+    for m in range(1, M + 1):
+        sub = cspec.subset_processors(m)
+        try:
+            sched = solve(sub, frontend=frontend, solver=solver, presorted=True)
+        except InfeasibleError:
+            continue
+        ms.append(m)
+        tfs.append(sched.finish_time)
+        costs.append(sched.monetary_cost() if cspec.C is not None else np.nan)
+    return ProcessorSweep(np.asarray(ms), np.asarray(tfs), np.asarray(costs))
+
+
+def finish_time_gradient(sweep: ProcessorSweep) -> np.ndarray:
+    return sweep.gradient()
+
+
+@dataclasses.dataclass(frozen=True)
+class TradeoffPlan:
+    feasible: bool
+    recommended_m: Optional[int]
+    finish_time: Optional[float]
+    cost: Optional[float]
+    feasible_m: np.ndarray  # processor counts satisfying all given budgets
+    reason: str
+
+
+def plan_with_cost_budget(
+    sweep: ProcessorSweep,
+    budget_cost: float,
+    gradient_threshold: float = 0.06,
+) -> TradeoffPlan:
+    """Sec 6.2 — under a cost budget, use more processors only while each one
+    still buys >= ``gradient_threshold`` relative finish-time improvement."""
+    ok = sweep.cost <= budget_cost
+    if not ok.any():
+        return TradeoffPlan(False, None, None, None, np.asarray([], int),
+                            "even one processor exceeds the cost budget")
+    grad = sweep.gradient()
+    feasible_m = sweep.m[ok]
+    # walk up while within budget and marginal gain is large enough
+    pick = 0
+    for k in range(1, len(sweep.m)):
+        if not ok[k]:
+            break
+        if np.isfinite(grad[k]) and (-grad[k]) < gradient_threshold:
+            break
+        pick = k
+    return TradeoffPlan(
+        True,
+        int(sweep.m[pick]),
+        float(sweep.finish_time[pick]),
+        float(sweep.cost[pick]),
+        feasible_m,
+        f"largest within-budget m whose marginal gain >= {gradient_threshold:.0%}",
+    )
+
+
+def plan_with_time_budget(sweep: ProcessorSweep, budget_time: float) -> TradeoffPlan:
+    """Sec 6.3 — cheapest m that meets the deadline."""
+    ok = sweep.finish_time <= budget_time
+    if not ok.any():
+        return TradeoffPlan(False, None, None, None, np.asarray([], int),
+                            "no processor count meets the time budget")
+    k = int(np.flatnonzero(ok)[0])  # finish time is non-increasing in m
+    return TradeoffPlan(
+        True,
+        int(sweep.m[k]),
+        float(sweep.finish_time[k]),
+        float(sweep.cost[k]) if np.isfinite(sweep.cost[k]) else None,
+        sweep.m[ok],
+        "smallest m meeting the deadline (cheapest feasible)",
+    )
+
+
+def plan_with_both_budgets(
+    sweep: ProcessorSweep,
+    budget_cost: float,
+    budget_time: float,
+) -> TradeoffPlan:
+    """Sec 6.4 — intersection of the cost and time solution areas.
+
+    Case 1 (overlap): recommend the cheapest m in the overlap.
+    Case 2 (no overlap, paper Fig 20): infeasible; report the binding side.
+    """
+    ok_c = sweep.cost <= budget_cost
+    ok_t = sweep.finish_time <= budget_time
+    both = ok_c & ok_t
+    if both.any():
+        k = int(np.flatnonzero(both)[0])
+        return TradeoffPlan(
+            True,
+            int(sweep.m[k]),
+            float(sweep.finish_time[k]),
+            float(sweep.cost[k]),
+            sweep.m[both],
+            "cheapest m inside the overlapped solution area",
+        )
+    if not ok_t.any():
+        why = "time budget unreachable at any processor count — relax Budget_time"
+    elif not ok_c.any():
+        why = "cost budget excludes every processor count — relax Budget_cost"
+    else:
+        t_min = int(sweep.m[np.flatnonzero(ok_t)[0]])
+        c_max = int(sweep.m[np.flatnonzero(ok_c)[-1]])
+        why = (
+            f"solution areas disjoint: deadline needs m >= {t_min} processors but the "
+            f"cost budget caps m <= {c_max} — raise Budget_cost or Budget_time"
+        )
+    return TradeoffPlan(False, None, None, None, np.asarray([], int), why)

@@ -1,0 +1,183 @@
+"""Self-contained dense two-phase simplex LP solver.
+
+Solves        minimize    c @ x
+              subject to  A_ub @ x <= b_ub
+                          A_eq @ x == b_eq
+                          x >= 0
+
+Dense numpy tableau implementation with Dantzig pricing and a Bland's-rule
+anti-cycling fallback.  Problem sizes in this framework are small (the paper's
+no-front-end LP at N=10 sources x M=20 processors is ~600 variables), so a
+dense tableau is the right tool: no sparse machinery, fully deterministic,
+zero dependencies.  ``scipy.optimize.linprog`` (HiGHS) is used as an optional
+cross-check in :mod:`repro.core.dlt.solve` and in the property tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["LPResult", "linprog_simplex"]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class LPResult:
+    x: np.ndarray
+    fun: float
+    status: int  # 0 ok, 1 iteration limit, 2 infeasible, 3 unbounded
+    message: str
+    nit: int
+
+    @property
+    def success(self) -> bool:
+        return self.status == 0
+
+
+def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int) -> None:
+    T[row] /= T[row, col]
+    piv = T[:, col].copy()
+    piv[row] = 0.0
+    T -= np.outer(piv, T[row])
+    basis[row] = col
+
+
+def _solve_phase(
+    T: np.ndarray,
+    basis: np.ndarray,
+    num_real: int,
+    max_iter: int,
+) -> tuple[int, int]:
+    """Run simplex iterations on tableau T (last row = objective).
+
+    Returns (status, iterations).  Dantzig pricing; switches to Bland's rule
+    after a stall window to guarantee termination.
+    """
+    nit = 0
+    stall = 0
+    bland = False
+    m = T.shape[0] - 1
+    while nit < max_iter:
+        obj = T[-1, :-1]
+        if bland:
+            eligible = np.flatnonzero(obj < -_EPS)
+            if eligible.size == 0:
+                return 0, nit
+            col = int(eligible[0])
+        else:
+            col = int(np.argmin(obj))
+            if obj[col] >= -_EPS:
+                return 0, nit
+        ratios = np.full(m, np.inf)
+        pos = T[:m, col] > _EPS
+        ratios[pos] = T[:m, -1][pos] / T[:m, col][pos]
+        row = int(np.argmin(ratios))
+        if not np.isfinite(ratios[row]):
+            return 3, nit  # unbounded
+        if bland:
+            # among ties pick smallest basis index (Bland)
+            ties = np.flatnonzero(np.abs(ratios - ratios[row]) <= _EPS)
+            row = int(ties[np.argmin(basis[ties])])
+        prev_obj = T[-1, -1]
+        _pivot(T, basis, row, col)
+        nit += 1
+        if abs(T[-1, -1] - prev_obj) <= _EPS * (1.0 + abs(prev_obj)):
+            stall += 1
+            if stall > 64:
+                bland = True
+        else:
+            stall = 0
+    return 1, nit
+
+
+def linprog_simplex(
+    c: np.ndarray,
+    A_ub: Optional[np.ndarray] = None,
+    b_ub: Optional[np.ndarray] = None,
+    A_eq: Optional[np.ndarray] = None,
+    b_eq: Optional[np.ndarray] = None,
+    max_iter: int = 50_000,
+) -> LPResult:
+    c = np.asarray(c, dtype=np.float64)
+    n = c.shape[0]
+    rows = []
+    rhs = []
+    n_ub = 0
+    if A_ub is not None and len(A_ub):
+        A_ub = np.atleast_2d(np.asarray(A_ub, dtype=np.float64))
+        b_ub = np.asarray(b_ub, dtype=np.float64)
+        n_ub = A_ub.shape[0]
+        rows.append(np.hstack([A_ub, np.eye(n_ub)]))
+        rhs.append(b_ub)
+    if A_eq is not None and len(A_eq):
+        A_eq = np.atleast_2d(np.asarray(A_eq, dtype=np.float64))
+        b_eq = np.asarray(b_eq, dtype=np.float64)
+        pad = np.zeros((A_eq.shape[0], n_ub))
+        rows.append(np.hstack([A_eq, pad]))
+        rhs.append(b_eq)
+    if not rows:
+        return LPResult(np.zeros(n), 0.0, 0, "trivial", 0)
+
+    width = n + n_ub
+    A = np.vstack([np.hstack([r, np.zeros((r.shape[0], width - r.shape[1]))]) for r in rows])
+    b = np.concatenate(rhs)
+    m = A.shape[0]
+
+    # normalize rhs >= 0
+    neg = b < 0
+    A[neg] *= -1.0
+    b[neg] *= -1.0
+
+    # ---- phase 1: minimize sum of artificials -------------------------------
+    T = np.zeros((m + 1, width + m + 1))
+    T[:m, :width] = A
+    T[:m, width : width + m] = np.eye(m)
+    T[:m, -1] = b
+    basis = np.arange(width, width + m)
+    # objective row: sum of artificial rows, negated into reduced-cost form
+    T[-1, :] = -T[:m].sum(axis=0)
+    T[-1, width : width + m] = 0.0
+
+    status, nit1 = _solve_phase(T, basis, width, max_iter)
+    if status != 0:
+        return LPResult(np.zeros(n), np.nan, 1, "phase-1 iteration limit", nit1)
+    if -T[-1, -1] > 1e-7 * (1.0 + np.abs(b).max()):
+        return LPResult(np.zeros(n), np.nan, 2, "infeasible", nit1)
+
+    # drive artificials out of the basis where possible
+    for r in range(m):
+        if basis[r] >= width:
+            cols = np.flatnonzero(np.abs(T[r, :width]) > _EPS)
+            if cols.size:
+                _pivot(T, basis, r, int(cols[0]))
+            # else: redundant row; harmless to leave the artificial at 0
+
+    # ---- phase 2 -------------------------------------------------------------
+    T2 = np.zeros((m + 1, width + 1))
+    T2[:m, :width] = T[:m, :width]
+    T2[:m, -1] = T[:m, -1]
+    c_full = np.concatenate([c, np.zeros(n_ub)])
+    T2[-1, :width] = c_full
+    # reduce objective row against current basis
+    for r in range(m):
+        if basis[r] < width and abs(T2[-1, basis[r]]) > 0:
+            T2[-1] -= T2[-1, basis[r]] * T2[r]
+    # forbid re-entry of any artificial stuck in basis (value is 0; treat its
+    # row as fixed by never pricing it — artificial columns are absent in T2).
+    basis2 = basis.copy()
+    status, nit2 = _solve_phase(T2, basis2, width, max_iter)
+    if status == 3:
+        return LPResult(np.zeros(n), np.nan, 3, "unbounded", nit1 + nit2)
+    if status != 0:
+        return LPResult(np.zeros(n), np.nan, 1, "phase-2 iteration limit", nit1 + nit2)
+
+    x_full = np.zeros(width + m)
+    for r in range(m):
+        if basis2[r] < width:
+            x_full[basis2[r]] = T2[r, -1]
+    x = x_full[:n]
+    return LPResult(x, float(c @ x), 0, "optimal", nit1 + nit2)

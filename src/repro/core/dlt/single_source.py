@@ -1,0 +1,76 @@
+"""Paper Sec 2 — classic single-source DLT closed forms.
+
+Without front-ends (paper Fig 2): processor P_i starts computing after fully
+receiving beta_i, the source transmits back-to-back, and all processors finish
+simultaneously:
+
+    T_f = sum_{k<=i} beta_k G + beta_i A_i          (Eq 1)
+    sum_i beta_i = J                                 (Eq 2)
+
+Consecutive equations give the recursion
+    beta_{i+1} (G + A_{i+1}) = beta_i A_i
+so beta follows a product chain, closed under normalization — O(M), no LP.
+
+With front-ends the source still transmits back-to-back but P_i computes from
+the moment its fraction STARTS arriving, so
+    T_f = sum_{k<i} beta_k G + beta_i A_i      (requires A_i >= G for sanity)
+giving the recursion beta_{i+1} A_{i+1} = beta_i (A_i - G) ... + beta_i G?
+Careful: T_f(i+1)-T_f(i) = beta_i G + beta_{i+1} A_{i+1} - beta_i A_i = 0
+    =>  beta_{i+1} = beta_i (A_i - G) / A_{i+1}.
+Valid (all beta > 0) iff A_i > G for i < M — i.e. compute is slower than the
+link, the paper's standing assumption ("much longer time to compute the data
+rather than transfer it").
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .types import Schedule, SystemSpec
+
+__all__ = ["solve_single_source", "finish_time_single_source"]
+
+
+def solve_single_source(spec: SystemSpec, frontend: bool = False) -> Schedule:
+    """Closed-form optimal schedule for a single-source system."""
+    if spec.num_sources != 1:
+        raise ValueError("solve_single_source requires exactly one source")
+    G = float(spec.G[0])
+    R0 = float(spec.R[0])
+    A = spec.A
+    M = spec.num_processors
+    J = float(spec.J)
+
+    ratios = np.empty(M)
+    ratios[0] = 1.0
+    for i in range(M - 1):
+        if frontend:
+            num = A[i] - G
+            if num <= 0:
+                # Link faster than compute is violated: fall back to the
+                # no-front-end recursion for the remaining chain (the
+                # front-end buys nothing if compute outruns the link).
+                num = A[i]
+                den = G + A[i + 1]
+            else:
+                den = A[i + 1]
+        else:
+            num = A[i]
+            den = G + A[i + 1]
+        ratios[i + 1] = ratios[i] * num / den
+
+    beta = ratios / ratios.sum() * J
+    if frontend:
+        tf = R0 + beta[0] * A[0]
+    else:
+        tf = R0 + beta[0] * G + beta[0] * A[0]
+    return Schedule(
+        spec=spec,
+        beta=beta[None, :],
+        finish_time=float(tf),
+        frontend=frontend,
+    )
+
+
+def finish_time_single_source(spec: SystemSpec, frontend: bool = False) -> float:
+    return solve_single_source(spec, frontend=frontend).finish_time

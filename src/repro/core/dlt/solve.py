@@ -1,0 +1,114 @@
+"""Unified solve API for the paper's DLT programs.
+
+``solve(spec, frontend=...)`` canonicalizes node order (G ascending, A
+ascending — paper Sec 3 sorting rule), builds the Sec 3.1 or Sec 3.2 LP,
+solves it with the self-contained simplex (or scipy/HiGHS when requested),
+verifies every paper constraint on the result, and returns a
+:class:`~repro.core.dlt.types.Schedule` in canonical order.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import numpy as np
+
+from .frontend_lp import build_frontend_lp, unpack_frontend, verify_frontend
+from .nofrontend_lp import build_nofrontend_lp, unpack_nofrontend, verify_nofrontend
+from .simplex import linprog_simplex
+from .single_source import solve_single_source
+from .types import InfeasibleError, Schedule, SystemSpec
+
+__all__ = ["solve", "verify_schedule"]
+
+Solver = Literal["simplex", "highs", "auto"]
+
+
+def _run_lp(c, A_ub, b_ub, A_eq, b_eq, solver: Solver):
+    if solver in ("highs", "auto"):
+        try:
+            from scipy.optimize import linprog  # local import: optional dep
+
+            res = linprog(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq, method="highs")
+            if res.status == 2:
+                raise InfeasibleError("DLT program infeasible (HiGHS)")
+            if not res.success:
+                raise RuntimeError(f"HiGHS failed: {res.message}")
+            return np.asarray(res.x)
+        except ImportError:
+            if solver == "highs":
+                raise
+    res = linprog_simplex(c, A_ub=A_ub, b_ub=b_ub, A_eq=A_eq, b_eq=b_eq)
+    if res.status == 2:
+        raise InfeasibleError("DLT program infeasible (simplex)")
+    if not res.success:
+        raise RuntimeError(f"simplex failed: {res.message}")
+    return res.x
+
+
+def solve(
+    spec: SystemSpec,
+    frontend: bool = True,
+    solver: Solver = "auto",
+    verify: bool = True,
+    presorted: bool = False,
+) -> Schedule:
+    """Minimal-makespan schedule for a multi-source multi-processor system.
+
+    Args:
+      spec: the system (G, R, A, [C], J).
+      frontend: True -> Sec 3.1 LP (compute overlaps receive);
+                False -> Sec 3.2 LP (compute after full receive).
+      solver: "simplex" (self-contained), "highs" (scipy), or "auto".
+      verify: re-check every paper constraint on the solution.
+      presorted: skip canonical sorting (inputs already G-/A-ascending).
+    """
+    cspec = spec if presorted else spec.canonical()[0]
+
+    if cspec.num_sources == 1 and not frontend:
+        # Sec 2 closed form — also serves as an LP cross-check in tests.
+        sched = solve_single_source(cspec, frontend=False)
+        return sched
+
+    if frontend:
+        c, A_ub, b_ub, A_eq, b_eq = build_frontend_lp(cspec)
+        x = _run_lp(c, A_ub, b_ub, A_eq, b_eq, solver)
+        beta, tf = unpack_frontend(cspec, x)
+        sched = Schedule(spec=cspec, beta=beta, finish_time=tf, frontend=True)
+        if verify:
+            bad = verify_frontend(cspec, beta, tf)
+            if bad:
+                raise RuntimeError(f"front-end solution violates constraints: {bad[:3]}")
+        return sched
+
+    c, A_ub, b_ub, A_eq, b_eq = build_nofrontend_lp(cspec)
+    x = _run_lp(c, A_ub, b_ub, A_eq, b_eq, solver)
+    beta, TS, TF, tf = unpack_nofrontend(cspec, x)
+    sched = Schedule(spec=cspec, beta=beta, finish_time=tf, frontend=False, TS=TS, TF=TF)
+    if verify:
+        bad = verify_nofrontend(cspec, beta, TS, TF, tf)
+        if bad:
+            raise RuntimeError(f"no-front-end solution violates constraints: {bad[:3]}")
+    return sched
+
+
+def verify_schedule(sched: Schedule, tol: float = 1e-6) -> list[str]:
+    """Re-validate a schedule against the paper's constraint set."""
+    if sched.frontend:
+        return verify_frontend(sched.spec, sched.beta, sched.finish_time, tol)
+    if sched.TS is None or sched.TF is None:
+        # closed-form single-source schedule: check Eq 1/2 directly
+        spec = sched.spec
+        G, A, J = float(spec.G[0]), spec.A, spec.J
+        beta = sched.beta[0]
+        bad = []
+        if abs(beta.sum() - J) > tol * max(1.0, J):
+            bad.append("Eq2 violated")
+        for i in range(spec.num_processors):
+            tf_i = float(spec.R[0]) + beta[: i + 1].sum() * G + beta[i] * A[i]
+            if abs(tf_i - sched.finish_time) > tol * max(1.0, sched.finish_time):
+                bad.append(f"Eq1 violated at i={i}")
+        return bad
+    return verify_nofrontend(
+        sched.spec, sched.beta, sched.TS, sched.TF, sched.finish_time, tol
+    )

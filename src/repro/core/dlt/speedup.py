@@ -1,0 +1,69 @@
+"""Paper Sec 5 — Amdahl-style speedup analysis.
+
+    S = T(1 source, n processors) / T(p sources, n processors)      (Eq 16)
+
+The paper evaluates this on a homogeneous fleet (Table 4: G=0.5, R=0,
+A=2, J=100, no front-ends) and reports e.g. S ~= 1.59 / 1.90 / 2.21 / 2.49
+at 12 processors with 2 / 3 / 5 / 10 sources.  ``speedup_grid`` reproduces
+the whole Fig 14/15 surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from .solve import solve
+from .types import SystemSpec
+
+__all__ = ["SpeedupGrid", "speedup_grid"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SpeedupGrid:
+    sources: np.ndarray        # (P,)
+    processors: np.ndarray     # (Q,)
+    finish_time: np.ndarray    # (P, Q)  T(p sources, n processors)
+    speedup: np.ndarray        # (P, Q)  Eq 16 against the p=first row
+
+    def at(self, p: int, n: int) -> float:
+        i = int(np.flatnonzero(self.sources == p)[0])
+        j = int(np.flatnonzero(self.processors == n)[0])
+        return float(self.speedup[i, j])
+
+
+def speedup_grid(
+    spec: SystemSpec,
+    source_counts: Sequence[int],
+    processor_counts: Sequence[int],
+    frontend: bool = False,
+    solver: str = "auto",
+) -> SpeedupGrid:
+    """Finish time + Eq 16 speedup over a (sources x processors) grid.
+
+    ``spec`` must contain at least ``max(source_counts)`` sources and
+    ``max(processor_counts)`` processors; prefixes are taken in canonical
+    order, matching the paper's sorted-node convention.
+    """
+    cspec = spec.canonical()[0]
+    P, Q = len(source_counts), len(processor_counts)
+    tf = np.full((P, Q), np.nan)
+    for a, p in enumerate(source_counts):
+        sub_s = cspec.subset_sources(p)
+        for b, n in enumerate(processor_counts):
+            sched = solve(
+                sub_s.subset_processors(n),
+                frontend=frontend,
+                solver=solver,
+                presorted=True,
+            )
+            tf[a, b] = sched.finish_time
+    base = tf[0:1, :]  # row for the smallest source count (paper: 1 source)
+    return SpeedupGrid(
+        sources=np.asarray(source_counts),
+        processors=np.asarray(processor_counts),
+        finish_time=tf,
+        speedup=base / tf,
+    )

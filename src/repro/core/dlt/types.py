@@ -1,0 +1,149 @@
+"""Core datatypes for the Divisible Load Theory (DLT) scheduling library.
+
+Notation follows Cao, Wu & Robertazzi, "Scheduling and Trade-off Analysis for
+Multi-Source Multi-Processor Systems with Divisible Loads" (2019):
+
+    G_i   inverse communication speed of source S_i      (time / unit load)
+    R_i   release time of source S_i                     (time)
+    A_j   inverse computation speed of processor P_j     (time / unit load)
+    C_j   monetary cost of processor P_j per unit time   ($ / time)
+    J     total divisible job size                       (load units)
+    beta[i, j]   load fraction sent from S_i to P_j      (load units)
+    T_f   system makespan / finish time                  (time)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["SystemSpec", "Schedule", "InfeasibleError"]
+
+
+class InfeasibleError(RuntimeError):
+    """Raised when the DLT program admits no feasible schedule."""
+
+
+def _as_f64(x) -> np.ndarray:
+    a = np.asarray(x, dtype=np.float64)
+    if a.ndim != 1:
+        raise ValueError(f"expected 1-D array, got shape {a.shape}")
+    return a
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """A multi-source multi-processor divisible-load system.
+
+    The paper sorts sources by ascending ``G`` (fastest link first) and
+    processors by ascending ``A`` (fastest compute first).  ``canonical()``
+    returns a sorted copy plus the permutations used, so callers can keep
+    their own node identities.
+    """
+
+    G: np.ndarray  # (N,)
+    R: np.ndarray  # (N,)
+    A: np.ndarray  # (M,)
+    J: float = 1.0
+    C: Optional[np.ndarray] = None  # (M,) $ / unit time, optional
+
+    def __post_init__(self):
+        object.__setattr__(self, "G", _as_f64(self.G))
+        object.__setattr__(self, "R", _as_f64(self.R))
+        object.__setattr__(self, "A", _as_f64(self.A))
+        if self.C is not None:
+            object.__setattr__(self, "C", _as_f64(self.C))
+        if self.G.shape != self.R.shape:
+            raise ValueError("G and R must have the same length (one per source)")
+        if self.C is not None and self.C.shape != self.A.shape:
+            raise ValueError("C must have one entry per processor")
+        if np.any(self.G <= 0) or np.any(self.A <= 0):
+            raise ValueError("G and A must be strictly positive (inverse speeds)")
+        if self.J <= 0:
+            raise ValueError("job size J must be positive")
+
+    @property
+    def num_sources(self) -> int:
+        return int(self.G.shape[0])
+
+    @property
+    def num_processors(self) -> int:
+        return int(self.A.shape[0])
+
+    def canonical(self) -> tuple["SystemSpec", np.ndarray, np.ndarray]:
+        """Sorted copy (G ascending, A ascending) + (source_perm, proc_perm).
+
+        ``perm`` arrays map canonical index -> original index.
+        Stable sort keeps ties in user order.
+        """
+        sperm = np.argsort(self.G, kind="stable")
+        pperm = np.argsort(self.A, kind="stable")
+        spec = SystemSpec(
+            G=self.G[sperm],
+            R=self.R[sperm],
+            A=self.A[pperm],
+            J=self.J,
+            C=None if self.C is None else self.C[pperm],
+        )
+        return spec, sperm, pperm
+
+    def subset_processors(self, m: int) -> "SystemSpec":
+        """Spec restricted to the first ``m`` processors (canonical order)."""
+        if not (1 <= m <= self.num_processors):
+            raise ValueError(f"m={m} out of range")
+        return SystemSpec(
+            G=self.G,
+            R=self.R,
+            A=self.A[:m],
+            J=self.J,
+            C=None if self.C is None else self.C[:m],
+        )
+
+    def subset_sources(self, n: int) -> "SystemSpec":
+        if not (1 <= n <= self.num_sources):
+            raise ValueError(f"n={n} out of range")
+        return SystemSpec(
+            G=self.G[:n], R=self.R[:n], A=self.A, J=self.J, C=self.C
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A solved load-distribution plan.
+
+    ``beta[i, j]`` is the load units source i ships to processor j, in the
+    *canonical* (sorted) node order of ``spec``.  For the no-front-end
+    formulation, ``TS``/``TF`` carry the per-fraction transmission intervals
+    (paper Eqs 7-12); they are ``None`` for the front-end formulation where
+    transmissions are back-to-back by construction.
+    """
+
+    spec: SystemSpec
+    beta: np.ndarray  # (N, M) load units
+    finish_time: float
+    frontend: bool
+    TS: Optional[np.ndarray] = None  # (N, M) transmission start times
+    TF: Optional[np.ndarray] = None  # (N, M) transmission finish times
+
+    @property
+    def alpha(self) -> np.ndarray:
+        """Per-source totals alpha_i = sum_j beta[i, j] (paper Sec 3.1.1)."""
+        return self.beta.sum(axis=1)
+
+    @property
+    def processor_load(self) -> np.ndarray:
+        """Per-processor totals sum_i beta[i, j]."""
+        return self.beta.sum(axis=0)
+
+    def monetary_cost(self) -> float:
+        """Paper Eq 17: Cost_total = sum_ij beta_ij * A_j * C_j."""
+        if self.spec.C is None:
+            raise ValueError("SystemSpec has no processor costs C")
+        return float(np.sum(self.beta * (self.spec.A * self.spec.C)[None, :]))
+
+    def utilization(self) -> np.ndarray:
+        """Fraction of the makespan each processor spends computing."""
+        busy = self.processor_load * self.spec.A
+        return busy / max(self.finish_time, 1e-300)

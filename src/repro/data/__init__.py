@@ -1,0 +1,5 @@
+from .synthetic import SyntheticCorpus
+from .pipeline import MultiSourcePipeline, SourceSpec, TransferEvent
+
+__all__ = ["SyntheticCorpus", "MultiSourcePipeline", "SourceSpec",
+           "TransferEvent"]

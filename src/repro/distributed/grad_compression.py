@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod all-reduce (int8 stochastic rounding).
+
+On the multi-pod mesh the "pod" axis is DCN-connected (much slower than
+ICI), so gradients crossing it benefit from 4x compression: per-tensor
+symmetric int8 quantization with stochastic rounding (unbiased — E[q] = g,
+so SGD/Adam convergence behaviour is preserved in expectation).
+
+``compressed_psum(x, axis)`` is the drop-in for ``jax.lax.psum`` inside
+``shard_map``: quantize -> psum int32 -> dequantize.  The scale itself is
+psum-maxed first, so every participant uses the same grid and the reduction
+stays exact in the quantized domain (no per-shard scale drift).
+
+``quantize``/``dequantize`` are exposed for the checkpoint/network layers
+and tested for unbiasedness (property test).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize", "dequantize", "compressed_psum", "compress_tree",
+           "decompress_tree"]
+
+
+def quantize(x, key, *, bits: int = 8):
+    """Stochastic-rounding symmetric quantization.
+
+    Returns (q int8/int16, scale f32 scalar) with E[dequantize(q)] == x.
+    """
+    assert bits in (8, 16)
+    qmax = 127.0 if bits == 8 else 32767.0
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    y = xf / scale
+    lo = jnp.floor(y)
+    p_up = y - lo                      # in [0, 1)
+    u = jax.random.uniform(key, x.shape)
+    q = lo + (u < p_up)                # unbiased: E[q] = y
+    q = jnp.clip(q, -qmax, qmax).astype(dtype)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x, axis_name: str, key, *, bits: int = 8):
+    """int8 all-reduce inside shard_map: shared grid, int32 accumulate."""
+    qmax = 127.0 if bits == 8 else 32767.0
+    xf = x.astype(jnp.float32)
+    # shared scale: max |x| across participants -> same grid everywhere
+    scale = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    y = xf / scale
+    lo = jnp.floor(y)
+    u = jax.random.uniform(key, x.shape)
+    q = (lo + (u < (y - lo))).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    return total.astype(jnp.float32) * scale
+
+
+def compress_tree(tree, key, *, bits: int = 8):
+    """Quantize every leaf; returns (q_tree, scale_tree)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    qs, ss = [], []
+    for leaf, k in zip(leaves, keys):
+        q, s = quantize(leaf, k, bits=bits)
+        qs.append(q)
+        ss.append(s)
+    return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, ss)
+
+
+def decompress_tree(q_tree, scale_tree):
+    return jax.tree.map(dequantize, q_tree, scale_tree)

@@ -1,0 +1,276 @@
+"""Logical-axis sharding: mesh-agnostic models, rule-driven placement.
+
+Models annotate activations with *logical* axes ("data", "model", "seq", ...).
+A context manager binds logical axes to physical mesh axes; outside any
+context every annotation is a no-op, so the same model code runs on a laptop
+CPU and on a 512-chip two-pod mesh unchanged.
+
+Parameter placement is derived from leaf names by convention (one place to
+audit): column-parallel weights shard their output dim over "model",
+row-parallel weights their input dim, expert tensors shard the expert dim
+(EP), embedding tables shard the vocab dim.  XLA/GSPMD tolerates non-divisible
+dims by padding (e.g. phi4's 24 heads on a 16-way axis), which we allow
+deliberately and account for in the roofline notes.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "use_sharding_rules",
+    "shard_act",
+    "current_mesh",
+    "logical_to_pspec",
+    "param_pspecs",
+    "param_shardings",
+    "DEFAULT_RULES",
+    "MULTIPOD_RULES",
+]
+
+_tls = threading.local()
+
+# logical axis -> physical mesh axis (or tuple of axes, or None = replicate)
+DEFAULT_RULES: dict[str, Any] = {
+    "data": "data",
+    "model": "model",
+    "expert": "model",   # EP: experts live on the model axis
+    "seq": None,         # SP off by default; long-context rules map it to "model"
+    "tokens": ("data", "model"),  # MoE dispatch groups: all chips
+}
+
+MULTIPOD_RULES: dict[str, Any] = {
+    "data": ("pod", "data"),  # gradients reduce over pod x data
+    "model": "model",
+    "expert": "model",
+    "seq": None,
+    "tokens": ("pod", "data", "model"),
+}
+
+
+def _ctx():
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding_rules(mesh: Mesh, rules: Optional[Mapping[str, Any]] = None):
+    """Bind logical axes to ``mesh`` axes for the duration of the context."""
+    prev = _ctx()
+    _tls.ctx = (mesh, dict(DEFAULT_RULES if rules is None else rules))
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    c = _ctx()
+    return None if c is None else c[0]
+
+
+def shard_count(logical_axis: str) -> int:
+    """Number of shards the current rules give ``logical_axis`` (1 outside
+    any sharding context).  Used e.g. to pick the MoE dispatch group count."""
+    c = _ctx()
+    if c is None:
+        return 1
+    mesh, rules = c
+    phys = rules.get(logical_axis)
+    if phys is None:
+        return 1
+    if isinstance(phys, str):
+        phys = (phys,)
+    n = 1
+    for ax in phys:
+        n *= mesh.shape[ax]
+    return n
+
+
+def logical_to_pspec(logical_axes: Sequence[Optional[str]],
+                     rules: Optional[Mapping[str, Any]] = None) -> P:
+    if rules is None:
+        c = _ctx()
+        rules = DEFAULT_RULES if c is None else c[1]
+    parts = []
+    for ax in logical_axes:
+        if ax is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(ax))
+    return P(*parts)
+
+
+def shard_act(x, logical_axes: Sequence[Optional[str]]):
+    """Constrain activation sharding; no-op outside a sharding context."""
+    c = _ctx()
+    if c is None:
+        return x
+    mesh, rules = c
+    if x.ndim != len(logical_axes):
+        raise ValueError(
+            f"shard_act rank mismatch: x.ndim={x.ndim} vs {logical_axes}"
+        )
+    spec = logical_to_pspec(logical_axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ----------------------------------------------------------------------------
+# parameter placement by leaf-name convention
+# ----------------------------------------------------------------------------
+
+# leaf name -> logical axes, rank-matched right-to-left (leading stacked
+# layer/scan dims are replicated).  Every large matrix is sharded on BOTH
+# axes: TP on one dim ("model"/"expert") and FSDP/ZeRO-3 on the other
+# ("data") — optimizer state per chip scales as 1/(dp*tp), and XLA inserts
+# the per-layer weight all-gather (FSDP semantics) automatically.  Dims that
+# don't divide the axis fall back to replication via sanitize_pspecs.
+_LEAF_RULES: dict[str, tuple[Optional[str], ...]] = {
+    # column-parallel (output dim on model, input dim FSDP on data)
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "wq": ("data", "model"),
+    "wk": ("data", "model"),
+    "wv": ("data", "model"),
+    "w_receptance": ("data", "model"),
+    "w_key": ("data", "model"),
+    "w_value": ("data", "model"),
+    "w_gate_rwkv": ("data", "model"),
+    "wx": ("data", "model"),
+    # row-parallel (input dim on model, output dim FSDP on data)
+    "w_down": ("model", "data"),
+    "wo": ("model", "data"),
+    "w_out": ("model", "data"),
+    # embeddings / unembeddings: vocab on model, d_model FSDP on data
+    "embedding": ("model", "data"),
+    "unembed": ("model", "data"),
+    # MoE expert stacks: (experts, in, out) -> EP + FSDP on the input dim
+    "we_gate": ("expert", "data", None),
+    "we_up": ("expert", "data", None),
+    "we_down": ("expert", "data", None),
+    "w_router": (None, None),
+    # RWKV-6 channel-mix + LoRA trunks (d_ff / rank dims on model)
+    "cm_key": ("data", "model"),
+    "cm_value": ("model", "data"),
+    "cm_receptance": ("data", "model"),
+    "lora_w1": ("data", "model"),
+    "lora_w2": (None, "data", "model"),
+    "decay_w1": ("data", "model"),
+    "decay_w2": ("model", "data"),
+    # RG-LRU: the recurrence is elementwise over the rnn width W, so W
+    # shards over model end-to-end (wy/w_a/w_i outputs, conv, gates).
+    "wy": ("data", "model"),
+    "w_a": ("data", "model"),
+    "w_i": ("data", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "b_a": ("model",),
+    "b_i": ("model",),
+    "lambda": ("model",),
+}
+
+
+def _spec_for_leaf(name: str, ndim: int, rules: Mapping[str, Any]) -> P:
+    logical = _LEAF_RULES.get(name)
+    if logical is None:
+        return P()  # replicate (norms, biases, small vectors)
+    pad = (None,) * max(0, ndim - len(logical))
+    axes = (pad + logical)[-ndim:] if ndim >= 1 else ()
+    return logical_to_pspec(axes, rules)
+
+
+def param_pspecs(params: Any, rules: Optional[Mapping[str, Any]] = None) -> Any:
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs)."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+
+    def spec(path, leaf) -> P:
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        return _spec_for_leaf(name or "", ndim, rules)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(mesh: Mesh, params: Any,
+                    rules: Optional[Mapping[str, Any]] = None) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(params, rules),
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    dims = tuple(shape)
+    parts = list(spec) + [None] * (len(dims) - len(spec))
+    out = []
+    for d, part in enumerate(parts[: len(dims)]):
+        if part is None:
+            out.append(None)
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        div = 1
+        for ax in axes:
+            div *= mesh.shape[ax]
+        out.append(part if dims[d] % div == 0 else None)
+    return P(*out)
+
+
+def shard_param_slices(params: Any) -> Any:
+    """Constrain per-layer parameter slices (inside the layer scan) to their
+    stacked-leaf shardings.
+
+    Why: in the backward of ``scan``-over-layers, each iteration's param
+    cotangent is accumulated into the stacked gradient with a
+    dynamic-update-slice.  If the cotangent's sharding disagrees with the
+    accumulator's, GSPMD reshards the ENTIRE stacked accumulator through
+    full replication *every iteration* (observed: an 80 GiB all-gather per
+    layer on the MoE cells).  Constraining the forward slice here puts —
+    via the transpose rule of with_sharding_constraint — the matching
+    constraint on the cotangent, so the accumulation stays sharded.
+
+    No-op outside a sharding context.
+    """
+    c = _ctx()
+    if c is None:
+        return params
+    mesh, rules = c
+
+    def fix(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = str(entry.key)
+                break
+        ndim = getattr(leaf, "ndim", 0)
+        spec = _sanitize_spec(_spec_for_leaf(name or "", ndim, rules),
+                              leaf.shape, mesh)
+        return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(fix, params)
+
+
+def sanitize_pspecs(pspecs: Any, shapes: Any, mesh: Mesh) -> Any:
+    """Drop spec entries whose dim isn't divisible by the mapped axis size.
+
+    ``jit`` argument shardings must divide evenly (unlike
+    with_sharding_constraint, which pads).  Non-divisible dims — whisper's
+    51865 vocab, 8 KV heads on a 16-way model axis — fall back to
+    replication for that dim.
+    """
+    def fix(spec, shp):
+        if not isinstance(spec, P):
+            return spec
+        return _sanitize_spec(spec, shp.shape, mesh)
+
+    return jax.tree.map(fix, pspecs, shapes,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import flash_attention_fwd
+from .ops import flash_attention
+
+__all__ = ["flash_attention", "flash_attention_fwd", "ops", "ref"]

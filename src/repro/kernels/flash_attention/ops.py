@@ -1,0 +1,55 @@
+"""jit'd public wrapper: layout handling, padding, block-size selection."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+__all__ = ["flash_attention"]
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """Flash attention over (B, S, H, D) layout (the models' native layout).
+
+    k/v: (B, Sk, K, D) with GQA groups H // K.  Pads S to block multiples,
+    runs the Pallas kernel, unpads.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, max(Sq, 8))
+    bk = min(block_k, max(Sk, 8))
+
+    qt = _pad_to(jnp.swapaxes(q, 1, 2), 2, bq)   # (B, H, Sq', D)
+    kt = _pad_to(jnp.swapaxes(k, 1, 2), 2, bk)   # (B, K, Sk', D)
+    vt = _pad_to(jnp.swapaxes(v, 1, 2), 2, bk)
+
+    out = flash_attention_fwd(
+        qt, kt, vt, causal=causal, window=window, kv_len=Sk,
+        block_q=bq, block_k=bk, interpret=interpret,
+    )
+    return jnp.swapaxes(out[:, :, :Sq, :], 1, 2)

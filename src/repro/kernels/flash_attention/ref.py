@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash attention (f32 softmax, materialized scores)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(q, k, v, *, causal=True, window=None, kv_len=None):
+    """q: (B,H,Sq,D); k/v: (B,K,Sk,D).  Returns (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    _, K, Sk, _ = k.shape
+    group = H // K
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    qpos = jnp.arange(Sq)[:, None] + (0)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no live keys -> zero output (matches kernel's l==0 guard)
+    any_live = mask.any(axis=1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = jnp.where(any_live, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import rglru_fwd
+from .ops import rglru
+
+__all__ = ["rglru", "rglru_fwd", "ops", "ref"]

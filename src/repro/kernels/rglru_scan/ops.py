@@ -1,0 +1,32 @@
+"""jit'd wrapper for the RG-LRU kernel: padding on both seq and width."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rglru_fwd
+
+__all__ = ["rglru"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru(u, log_a, h0, *, chunk: int = 128, block_w: int = 512,
+          interpret: bool = False):
+    """u/log_a: (B, S, W); h0: (B, W).  Returns (h (B,S,W), hT (B,W)), f32."""
+    B, S, W = u.shape
+    cs = min(chunk, max(S, 1))
+    bw = min(block_w, W)
+    pad_s = (-S) % cs
+    pad_w = (-W) % bw
+    uf = u.astype(jnp.float32)
+    la = log_a.astype(jnp.float32)
+    h0f = h0.astype(jnp.float32)
+    if pad_s or pad_w:
+        uf = jnp.pad(uf, ((0, 0), (0, pad_s), (0, pad_w)))
+        la = jnp.pad(la, ((0, 0), (0, pad_s), (0, pad_w)))
+        h0f = jnp.pad(h0f, ((0, 0), (0, pad_w)))
+    h, hT = rglru_fwd(uf, la, h0f, chunk=cs, block_w=bw, interpret=interpret)
+    return h[:, :S, :W], hT[:, :W]

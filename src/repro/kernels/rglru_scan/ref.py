@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RG-LRU recurrence (lax.scan over time)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_reference(u, log_a, h0):
+    """u/log_a: (B,S,W) f32; h0: (B,W) f32.  Returns (h, hT)."""
+
+    def step(h, xs):
+        ut, la = xs
+        a = jnp.exp(la)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 1e-12))
+        h = a * h + mult * ut
+        return h, h
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(log_a, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT

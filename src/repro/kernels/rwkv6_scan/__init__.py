@@ -1,0 +1,5 @@
+from . import ops, ref
+from .kernel import wkv6_fwd
+from .ops import wkv6
+
+__all__ = ["wkv6", "wkv6_fwd", "ops", "ref"]

@@ -1,0 +1,109 @@
+"""Chunked WKV6 (RWKV-6 time-mix) Pallas TPU kernel.
+
+TPU adaptation of the CUDA wkv6 kernel: instead of one-thread-per-channel
+with shared-memory staging (no TPU analogue), the sequence is processed in
+VMEM-resident chunks with the (N, N) per-head state carried in f32 scratch
+across the sequential chunk axis of the grid — the state never round-trips
+HBM between tokens (the XLA ``lax.scan`` lowering does exactly that).
+
+Within a chunk the work is split by numerical structure:
+
+  inter-chunk (MXU):  Y_inter = (r ⊙ exp(Le)) @ S_chunk_start
+      with Le[t] = sum_{s<t} log w[s] <= 0, so the scaling is stable.
+  intra-chunk (VPU):  sequential fori_loop over the chunk, local state
+      starting from zero:  S_loc_t = diag(w_t) S_loc_{t-1} + k_t v_t^T,
+      y_t += r_t (S_loc_{t-1} + diag(u) k_t v_t^T).
+  chunk handoff:      S_next = exp(Lc[C-1]) ⊙ S_start + S_loc_C   (<=1, stable)
+
+A full sub-chunk MXU factorization of the intra term (flash-linear-attention
+style) is a further optimization; the hybrid already removes the HBM state
+traffic that dominates the scan lowering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["wkv6_fwd"]
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                 y_ref, sT_ref, s_scr, *, chunk, nchunks):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (C, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)    # log-decay, <= 0
+    u = u_ref[0].astype(jnp.float32)         # (N,)
+
+    Lc = jnp.cumsum(lw, axis=0)              # inclusive
+    Le = Lc - lw                             # exclusive
+    s0 = s_scr[...]
+
+    # ---- inter-chunk term on the MXU ----------------------------------------
+    rr = r * jnp.exp(Le)                     # stable: Le <= 0
+    y_inter = jax.lax.dot_general(
+        rr, s0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # ---- intra-chunk sequential recurrence (local state from zero) ----------
+    def step(t, carry):
+        s_loc, y = carry
+        rt = jax.lax.dynamic_slice_in_dim(r, t, 1, 0)     # (1, N)
+        kt = jax.lax.dynamic_slice_in_dim(k, t, 1, 0)
+        vt = jax.lax.dynamic_slice_in_dim(v, t, 1, 0)
+        wt = jnp.exp(jax.lax.dynamic_slice_in_dim(lw, t, 1, 0))
+        kv = kt[0][:, None] * vt[0][None, :]              # (N, N)
+        yt = (rt[0][:, None] * (s_loc + u[:, None] * kv)).sum(0, keepdims=True)
+        y = jax.lax.dynamic_update_slice_in_dim(y, yt, t, 0)
+        s_loc = wt[0][:, None] * s_loc + kv
+        return s_loc, y
+
+    s_loc0 = jnp.zeros_like(s0)
+    y0 = jnp.zeros_like(r)
+    s_loc, y_intra = jax.lax.fori_loop(0, chunk, step, (s_loc0, y0))
+
+    y_ref[0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+    s_scr[...] = jnp.exp(Lc[-1])[:, None] * s0 + s_loc
+
+    @pl.when(ci == nchunks - 1)
+    def _final():
+        sT_ref[0, 0] = s_scr[...]
+
+
+def wkv6_fwd(r, k, v, lw, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """r/k/v/lw: (B, H, S, N) with lw = log decay (<= 0); u: (H, N);
+    s0: (B, H, N, N) f32.  Returns (y (B,H,S,N) f32, sT (B,H,N,N) f32).
+    S must be a multiple of ``chunk`` (ops.py pads with lw=0, k=0)."""
+    B, H, S, N = r.shape
+    assert S % chunk == 0, (S, chunk)
+    nchunks = S // chunk
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, nchunks=nchunks)
+    seq_spec = pl.BlockSpec((1, 1, chunk, N), lambda b, h, ci: (b, h, ci, 0))
+    state_spec = pl.BlockSpec((1, 1, N, N), lambda b, h, ci: (b, h, 0, 0))
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H, nchunks),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, N), lambda b, h, ci: (h, 0)),
+            state_spec,
+        ],
+        out_specs=[seq_spec, state_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, s0)
+    return y, sT

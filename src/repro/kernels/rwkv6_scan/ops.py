@@ -1,0 +1,36 @@
+"""jit'd wrapper for the chunked WKV6 kernel: layout + padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_fwd
+
+__all__ = ["wkv6"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """Model-layout entry point.
+
+    r/k/v/w: (B, S, H, N) with w the *decay in (0,1]* (models pass w, the
+    kernel wants log w); u: (H, N); s0: (B, H, N, N).
+    Returns (y (B,S,H,N) f32, sT (B,H,N,N) f32).
+    """
+    B, S, H, N = r.shape
+    rt, kt, vt, wt = (jnp.swapaxes(t, 1, 2) for t in (r, k, v, w))
+    # NB: clamp well above f32 FLT_MIN — 1e-38 is subnormal and flushes to
+    # zero on TPU/CPU, which would reintroduce log(0) = -inf.
+    lw = jnp.log(jnp.maximum(wt.astype(jnp.float32), 1e-30))
+    pad = (-S) % chunk
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        rt = jnp.pad(rt, widths)
+        kt = jnp.pad(kt, widths)          # k=0 -> padded tokens add nothing
+        vt = jnp.pad(vt, widths)
+        lw = jnp.pad(lw, widths)          # lw=0 -> w=1 keeps state unchanged
+    y, sT = wkv6_fwd(rt, kt, vt, lw, u, s0, chunk=chunk, interpret=interpret)
+    return jnp.swapaxes(y[:, :, :S], 1, 2), sT

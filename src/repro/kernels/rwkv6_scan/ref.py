@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: token-by-token WKV6 recurrence (lax.scan)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r, k, v, lw, u, s0):
+    """r/k/v/lw: (B,H,S,N); u: (H,N); s0: (B,H,N,N).  Returns (y, sT), f32."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(lw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]
+        yt = jnp.einsum("bhi,bhij->bhj", rt, s + uf[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (rf, kf, vf, w))
+    sT, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), sT

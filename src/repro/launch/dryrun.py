@@ -1,0 +1,328 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers + compiles.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the production meshes need 512 host-platform placeholder devices.
+Everything else (smoke tests, benches) runs with the real single device.
+
+For each cell this script:
+  1. builds the arch's step function (train_step / prefill_step / serve_step),
+  2. declares in/out shardings from the logical-axis rules,
+  3. ``jax.jit(...).lower(**ShapeDtypeStructs).compile()`` on the production
+     mesh — single-pod (16,16)=("data","model") and multi-pod
+     (2,16,16)=("pod","data","model"),
+  4. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``,
+     and the three roofline terms parsed from the compiled HLO text
+     (single-pod only — the roofline table is per-pod by assignment).
+
+Results are written incrementally to results/dryrun/<arch>__<shape>__<mesh>.json
+so a long sweep survives interruption and EXPERIMENTS.md is generated from
+the JSONs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import roofline_from_hlo
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config, input_specs
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    MULTIPOD_RULES,
+    param_pspecs,
+    sanitize_pspecs,
+    use_sharding_rules,
+)
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.steps import (
+    batch_pspecs,
+    cache_pspecs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    state_pspecs,
+)
+from repro.models import LM
+from repro.train import optimizer as opt
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+
+def _rules_for(mesh_name: str, suite) -> dict:
+    rules = dict(MULTIPOD_RULES if mesh_name == "multi" else DEFAULT_RULES)
+    if suite.global_batch == 1:
+        # batch of one is indivisible: replicate the batch dim, shard the
+        # cache length / heads instead (see _CACHE_LEAF_AXES_SEQSHARD).
+        rules["data"] = None
+    if suite.kind in ("train", "prefill"):
+        # SP: residual stream sequence-sharded over the model axis — the
+        # scan-saved activations shrink 16x; GSPMD inserts the all-gather /
+        # reduce-scatter pair at each block boundary (Korthikanti-style).
+        rules["seq"] = "model"
+    return rules
+
+
+def _named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def _memory_analysis(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover - backend specific
+        return {"error": str(e)}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["peak_live_bytes_est"] = int(live)
+        out["fits_16GiB_hbm"] = bool(live <= HBM_PER_CHIP)
+    return out
+
+
+def _cost_analysis(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    keep = {}
+    for k, v in (ca or {}).items():
+        if k in ("flops", "bytes accessed", "transcendentals") or k.startswith(
+            "bytes accessed"
+        ):
+            keep[k] = float(v)
+    return keep
+
+
+def build_cell(arch: str, shape_name: str, mesh_name: str,
+               num_microbatches: int = 1):
+    """-> (step_fn, in_shardings tree, abstract args tuple, meta dict, mesh)."""
+    cfg = get_config(arch)
+    suite = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    rules = _rules_for(mesh_name, suite)
+    model = LM(cfg, remat=(suite.kind == "train"))
+
+    abstract_params = model.init_abstract()
+    pspec_params = sanitize_pspecs(
+        param_pspecs(abstract_params, rules), abstract_params, mesh)
+    specs = input_specs(cfg, suite)
+
+    if suite.kind == "train":
+        state = jax.eval_shape(opt.init_state, abstract_params)
+        state_ps = sanitize_pspecs(state_pspecs(state, rules), state, mesh)
+        batch = {k: v for k, v in specs.items()}
+        batch_ps = sanitize_pspecs(batch_pspecs(batch, rules), batch, mesh)
+        step = make_train_step(model, opt.AdamWConfig(),
+                               num_microbatches=num_microbatches)
+        in_sh = (_named(mesh, state_ps), _named(mesh, batch_ps))
+        out_sh = (_named(mesh, state_ps), None)
+        args = (state, batch)
+    elif suite.kind == "prefill":
+        batch = {k: v for k, v in specs.items()}
+        batch_ps = sanitize_pspecs(batch_pspecs(batch, rules), batch, mesh)
+        step = make_prefill_step(model)
+        in_sh = (_named(mesh, pspec_params), _named(mesh, batch_ps))
+        out_sh = None
+        args = (abstract_params, batch)
+    else:  # decode
+        seq_shard = suite.global_batch == 1
+        cache = specs["cache"]
+        cache_ps = sanitize_pspecs(
+            cache_pspecs(cache, rules, seq_shard=seq_shard), cache, mesh)
+        tok_ps = sanitize_pspecs(
+            batch_pspecs(specs["tokens"], rules), specs["tokens"], mesh)
+        step = make_serve_step(model)
+        in_sh = (
+            _named(mesh, pspec_params),
+            _named(mesh, cache_ps),
+            _named(mesh, tok_ps),
+            NamedSharding(mesh, P()),
+        )
+        out_sh = (_named(mesh, tok_ps), _named(mesh, cache_ps))
+        args = (abstract_params, cache, specs["tokens"], specs["pos"])
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "kind": suite.kind,
+        "chips": mesh_chip_count(mesh),
+        "seq_len": suite.seq_len,
+        "global_batch": suite.global_batch,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+    }
+    return step, in_sh, out_sh, args, meta, mesh
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: Path = RESULTS_DIR, num_microbatches: int = 1) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    cfg = get_config(arch)
+    suite = SHAPES[shape_name]
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "pending", "timestamp": time.time(),
+        "num_microbatches": num_microbatches,
+    }
+    ok, reason = cell_applicable(cfg, suite)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        _write(record, out_dir)
+        return record
+
+    t0 = time.time()
+    try:
+        step, in_sh, out_sh, args, meta, mesh = build_cell(
+            arch, shape_name, mesh_name, num_microbatches=num_microbatches)
+        record.update(meta)
+        rules = _rules_for(mesh_name, SHAPES[shape_name])
+        # buffer donation: the train state / decode cache is consumed and
+        # reproduced each step — donating it lets XLA alias input and output
+        # buffers (the KV cache would otherwise be live twice per step).
+        donate = ()
+        if suite.kind == "train":
+            donate = (0,)           # TrainState
+        elif suite.kind == "decode":
+            donate = (1,)           # cache
+        with mesh, use_sharding_rules(mesh, rules):
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        record["lower_s"] = round(t_lower, 2)
+        record["compile_s"] = round(t_compile, 2)
+        record["memory_analysis"] = _memory_analysis(compiled)
+        record["cost_analysis"] = _cost_analysis(compiled)
+
+        if mesh_name == "single":
+            hlo = compiled.as_text()
+            record["hlo_bytes"] = len(hlo)
+            terms = roofline_from_hlo(
+                hlo,
+                arch=arch, shape=shape_name, mesh_name=mesh_name,
+                chips=meta["chips"], kind=suite.kind,
+                n_active_params=meta["params_active"],
+                seq_len=suite.seq_len, global_batch=suite.global_batch,
+            )
+            record["roofline"] = terms.as_dict()
+        record["status"] = "ok"
+    except Exception as e:
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc(limit=20)
+    record["total_s"] = round(time.time() - t0, 2)
+    _write(record, out_dir)
+    return record
+
+
+def _write(record: dict, out_dir: Path):
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    (out_dir / name).write_text(json.dumps(record, indent=2, default=str))
+
+
+def iter_cells(mesh_names):
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            for mesh_name in mesh_names:
+                yield arch, shape_name, mesh_name
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells whose JSON already reports ok/skipped")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation microbatches (train cells)")
+    ap.add_argument("--out", type=Path, default=RESULTS_DIR)
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.list:
+        for cell in iter_cells(meshes):
+            print("%s x %s x %s" % cell)
+        return 0
+
+    cells = (list(iter_cells(meshes)) if args.all
+             else [(args.arch, args.shape, m) for m in meshes])
+    if not args.all and (args.arch is None or args.shape is None):
+        ap.error("--arch and --shape required unless --all/--list")
+
+    failures = 0
+    for arch, shape_name, mesh_name in cells:
+        path = args.out / f"{arch}__{shape_name}__{mesh_name}.json"
+        if args.skip_done and path.exists():
+            try:
+                prev = json.loads(path.read_text())
+                if prev.get("status") in ("ok", "skipped"):
+                    print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+                          f"already {prev['status']}, skipping")
+                    continue
+            except json.JSONDecodeError:
+                pass
+        rec = run_cell(arch, shape_name, mesh_name, args.out,
+                       num_microbatches=args.microbatches)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            ma = rec.get("memory_analysis", {})
+            extra = (f" compile={rec['compile_s']}s"
+                     f" live/device={ma.get('peak_live_bytes_est', 0)/2**30:.2f}GiB")
+            if "roofline" in rec:
+                r = rec["roofline"]
+                extra += (f" bottleneck={r['bottleneck']}"
+                          f" frac={r['roofline_fraction']:.3f}")
+        elif status == "error":
+            failures += 1
+            extra = " " + rec["error"][:200]
+        elif status == "skipped":
+            extra = " " + rec["reason"]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: {status}{extra}",
+              flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,39 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The single-pod mesh is 16x16 = 256 chips (v5e pod); the multi-pod
+mesh adds a leading "pod" axis (2 pods = 512 chips) used as an outer
+data-parallel axis (DCN-connected in production; gradients reduce over
+("pod", "data")).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_chip_count"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices but only {len(devices)} are "
+            f"visible — the dry-run entrypoint must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"importing jax (see launch/dryrun.py)"
+        )
+    import numpy as np
+    from jax.sharding import Mesh
+
+    grid = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(grid, axes)
+
+
+def mesh_chip_count(mesh) -> int:
+    return int(math.prod(mesh.devices.shape))

@@ -1,0 +1,177 @@
+"""Step builders: the jit roots for training, prefill, and decode.
+
+These are what ``dryrun.py`` lowers on the production mesh and what the real
+``train.py`` / ``serve.py`` drivers run.  Everything sharding-related is
+declared here (in/out shardings), keeping the model code mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeSuite
+from repro.distributed.sharding import logical_to_pspec, param_pspecs
+from repro.models import LM
+from repro.train import optimizer as opt
+
+__all__ = [
+    "make_train_step",
+    "make_prefill_step",
+    "make_serve_step",
+    "state_pspecs",
+    "batch_pspecs",
+    "cache_pspecs",
+]
+
+
+# ----------------------------------------------------------------------------
+# sharding spec trees
+# ----------------------------------------------------------------------------
+
+def state_pspecs(state_shapes, rules) -> Any:
+    """TrainState PartitionSpecs: moments inherit their parameter's spec."""
+    pspec = param_pspecs(state_shapes.params, rules)
+    return opt.TrainState(step=P(), params=pspec,
+                          mu=pspec, nu=pspec)
+
+
+def batch_pspecs(batch_shapes, rules) -> Any:
+    """Batch dims shard over data; everything else replicated."""
+    def spec(leaf):
+        axes = ("data",) + (None,) * (leaf.ndim - 1)
+        return logical_to_pspec(axes, rules)
+    return jax.tree.map(spec, batch_shapes)
+
+
+_CACHE_LEAF_AXES = {
+    # name -> logical axes, right-aligned to leaf rank.
+    # KV caches shard batch over data and LENGTH over model (context
+    # parallelism): KV-head counts (1..8) rarely divide a 16-way model axis,
+    # while the 32k cache length always does — and the partial-softmax
+    # reduction over the sharded length is a tiny (B, H) all-reduce.
+    "k": ("data", "model", None, None),
+    "v": ("data", "model", None, None),
+    "k_cross": ("data", "model", None, None),
+    "v_cross": ("data", "model", None, None),
+    "pos": ("model",),
+    "wkv": ("data", "model", None, None),
+    "shift_t": ("data", None),
+    "shift_c": ("data", None),
+    "conv": ("data", None, "model"),
+    "h": ("data", "model"),
+}
+
+_CACHE_LEAF_AXES_SEQSHARD = {
+    # long-context (batch=1): batch is indivisible; shard the cache length
+    # over model, recurrent states over model (heads / width).
+    "k": (None, "model", None, None),
+    "v": (None, "model", None, None),
+    "k_cross": (None, "model", None, None),
+    "v_cross": (None, "model", None, None),
+    "pos": ("model",),
+    "wkv": (None, "model", None, None),
+    "shift_t": (None, "model"),
+    "shift_c": (None, "model"),
+    "conv": (None, None, "model"),
+    "h": (None, "model"),
+}
+
+
+def cache_pspecs(cache_shapes, rules, seq_shard: bool = False) -> Any:
+    table = _CACHE_LEAF_AXES_SEQSHARD if seq_shard else _CACHE_LEAF_AXES
+    kv_headless = False  # toggled per-arch by callers if needed
+
+    def spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                if str(entry.key) in table:
+                    name = str(entry.key)
+                    break
+        if name is None:
+            return P()
+        axes = table[name]
+        pad = (None,) * max(0, leaf.ndim - len(axes))
+        return logical_to_pspec((pad + tuple(axes))[-leaf.ndim:], rules)
+
+    del kv_headless
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+# ----------------------------------------------------------------------------
+# steps
+# ----------------------------------------------------------------------------
+
+def make_train_step(model: LM, opt_cfg: opt.AdamWConfig,
+                    num_microbatches: int = 1):
+    """Training step; with ``num_microbatches > 1`` the global batch is
+    processed as a gradient-accumulation scan — activation memory scales
+    with B/num_microbatches while the optimizer sees the full-batch
+    gradient (token-weighted mean across microbatches)."""
+
+    def grad_fn(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(state: opt.TrainState, batch):
+        if num_microbatches == 1:
+            loss, metrics, grads = grad_fn(state.params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % num_microbatches == 0, (b, num_microbatches)
+                return jnp.moveaxis(
+                    x.reshape((num_microbatches, b // num_microbatches)
+                              + x.shape[1:]), 0, 0)
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g_acc, l_acc, t_acc = acc
+                loss, metrics, grads = grad_fn(state.params, mb)
+                toks = metrics["tokens"].astype(jnp.float32)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) * toks, g_acc, grads)
+                return (g_acc, l_acc + loss * toks, t_acc + toks), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (g_sum, l_sum, t_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros(()), jnp.zeros(())), micro)
+            denom = jnp.maximum(t_sum, 1.0)
+            grads = jax.tree.map(lambda g: g / denom, g_sum)
+            loss = l_sum / denom
+            metrics = {"ce": loss, "aux": jnp.zeros(()),
+                       "tokens": t_sum.astype(jnp.int32)}
+        new_state = opt.apply_gradients(opt_cfg, state, grads)
+        metrics = dict(metrics, loss=loss, grad_norm=opt.global_norm(grads))
+        return new_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: LM):
+    def prefill_step(params, batch):
+        from repro.models.layers import unembed
+
+        x, _ = model.trunk(
+            params, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            frame_embeds=batch.get("frame_embeds"),
+        )
+        # unembed ONLY the last position — the serving-relevant output; a
+        # full (B, 32k, V) f32 logits tensor would dwarf the activations.
+        return unembed(x[:, -1:, :], model._table(params))
+    return prefill_step
+
+
+def make_serve_step(model: LM):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], cache
+    return serve_step

@@ -1,0 +1,59 @@
+"""Training launcher.
+
+CPU-scale end-to-end driver (the dry-run proves the same step function at
+pod scale).  Examples:
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 100 --global-batch 16 --seq-len 128 --ckpt /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --reduced \
+      --steps 50 --fail-at 30   # inject worker failure + checkpoint restart
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCH_IDS, get_config
+from repro.train.loop import TrainConfig, train
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", type=str, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="simulate a worker failure at this step")
+    ap.add_argument("--straggler", type=str, default=None,
+                    help="WORKER:SLOWDOWN, e.g. 2:3.0")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    straggler = None
+    if args.straggler:
+        w, s = args.straggler.split(":")
+        straggler = (int(w), float(s))
+    tcfg = TrainConfig(
+        steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, learning_rate=args.lr,
+        ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+        num_workers=args.workers, fail_at_step=args.fail_at,
+        straggler=straggler,
+    )
+    out = train(cfg, tcfg)
+    print(f"[train] done: loss {out['initial_loss']:.4f} -> "
+          f"{out['final_loss']:.4f} over {args.steps} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

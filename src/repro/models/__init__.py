@@ -1,0 +1,5 @@
+"""Model zoo substrate: layers, attention, MoE, RWKV-6, RG-LRU, unified LM."""
+
+from .transformer import LM
+
+__all__ = ["LM"]

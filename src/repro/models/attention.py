@@ -1,0 +1,242 @@
+"""Attention: GQA/MQA/MHA, causal + sliding-window masks, cross-attention,
+single-token decode against a (possibly ring-buffered) KV cache.
+
+Reference path is pure jnp with f32 softmax — the lowering target for the
+dry-run.  The Pallas flash kernel (``repro.kernels.flash_attention``) is the
+TPU hot path; ``impl="pallas"`` routes full-sequence attention through it
+(validated in interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from .layers import apply_rope, dense, dense_rp, init_dense, init_norm, rmsnorm
+
+__all__ = [
+    "attention_params",
+    "attention",
+    "decode_attention",
+    "repeat_kv",
+    "NEG_INF",
+]
+
+NEG_INF = -2.0e38
+
+
+def attention_params(
+    key,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    dtype,
+    bias: bool = False,
+    qk_norm: bool = False,
+):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d_model, num_heads * head_dim, dtype),
+        "wk": init_dense(ks[1], d_model, num_kv_heads * head_dim, dtype),
+        "wv": init_dense(ks[2], d_model, num_kv_heads * head_dim, dtype),
+        "wo": init_dense(ks[3], num_heads * head_dim, d_model, dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    if qk_norm:  # qwen3-style per-head RMSNorm on q and k
+        p["q_norm"] = init_norm(head_dim, dtype)
+        p["k_norm"] = init_norm(head_dim, dtype)
+    return p
+
+
+def repeat_kv(x, repeats: int):
+    """(B, S, K, D) -> (B, S, K*repeats, D) by head repetition (GQA)."""
+    if repeats == 1:
+        return x
+    b, s, k, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, k, repeats, d)).reshape(
+        b, s, k * repeats, d
+    )
+
+
+def _project_qkv(x, p, num_heads, num_kv_heads, head_dim, positions, rope_theta,
+                 rope_fraction, qk_norm):
+    b, s, _ = x.shape
+    q = dense(x, p["wq"])
+    k = dense(x, p["wk"])
+    v = dense(x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, s, num_kv_heads, head_dim)
+    v = v.reshape(b, s, num_kv_heads, head_dim)
+    q = shard_act(q, ("data", None, "model", None))
+    if qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if rope_theta is not None and positions is not None:
+        rd = int(head_dim * rope_fraction)
+        if rd % 2:
+            rd -= 1
+        if rd == head_dim:
+            q = apply_rope(q, positions, rope_theta)
+            k = apply_rope(k, positions, rope_theta)
+        else:  # partial rotary (phi4)
+            q = jnp.concatenate(
+                [apply_rope(q[..., :rd], positions, rope_theta), q[..., rd:]], -1
+            )
+            k = jnp.concatenate(
+                [apply_rope(k[..., :rd], positions, rope_theta), k[..., rd:]], -1
+            )
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,S,H,D), k/v: (B,T,H,D); mask: (S,T) or (B,S,T) bool (True=keep)."""
+    scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum(
+        "bshd,bthd->bhst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if mask is not None:
+        if mask.ndim == 2:
+            mask = mask[None, None]
+        else:
+            mask = mask[:, None]
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v, preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _causal_mask(s: int, t: int, window: Optional[int]) -> jnp.ndarray:
+    # rows are queries at positions offset..offset+s-1 with offset = t - s
+    qpos = jnp.arange(s)[:, None] + (t - s)
+    kpos = jnp.arange(t)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    return mask
+
+
+def attention(
+    x,
+    p,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    positions=None,
+    rope_theta: Optional[float] = None,
+    rope_fraction: float = 1.0,
+    causal: bool = True,
+    window: Optional[int] = None,
+    qk_norm: bool = False,
+    kv_override=None,   # (k, v) from encoder for cross-attention
+    impl: str = "reference",
+):
+    """Full-sequence attention. x: (B, S, D_model) -> (B, S, D_model)."""
+    b, s, _ = x.shape
+    if kv_override is None:
+        q, k, v = _project_qkv(
+            x, p, num_heads, num_kv_heads, head_dim, positions, rope_theta,
+            rope_fraction, qk_norm,
+        )
+    else:
+        q = dense(x, p["wq"])
+        if "bq" in p:
+            q = q + p["bq"].astype(q.dtype)
+        q = q.reshape(b, s, num_heads, head_dim)
+        k, v = kv_override
+
+    reps = num_heads // num_kv_heads
+    if impl == "chunked" and kv_override is None:
+        from .chunked_attention import chunked_attention
+
+        # replicate K/V over the model axis ONCE, outside the flash scan:
+        # GQA head counts (<=8) don't divide the 16-way axis, and without
+        # this GSPMD re-gathers the shards on every q-chunk iteration
+        # (observed: 73 GB/device/step of all-gather at prefill_32k).
+        k = shard_act(k, ("data", None, None, None))
+        v = shard_act(v, ("data", None, None, None))
+        out = chunked_attention(
+            q, k, v, causal=causal, window=window,
+            q_offset=k.shape[1] - s,
+        )
+    elif impl == "pallas" and kv_override is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        out = flash_ops.flash_attention(
+            q, k, v, causal=causal, window=window, interpret=True
+        )
+    else:
+        kk, vv = repeat_kv(k, reps), repeat_kv(v, reps)
+        mask = _causal_mask(s, kk.shape[1], window) if causal else None
+        out = _sdpa(q, kk, vv, mask)
+
+    out = out.reshape(b, s, num_heads * head_dim)
+    out = shard_act(out, ("data", None, "model"))
+    y = dense_rp(out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return shard_act(y, ("data", "seq", None))
+
+
+def decode_attention(
+    x,
+    p,
+    cache_k,
+    cache_v,
+    cache_positions,
+    write_slot,
+    pos,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    rope_theta: Optional[float] = None,
+    rope_fraction: float = 1.0,
+    window: Optional[int] = None,
+    qk_norm: bool = False,
+):
+    """One-token decode. x: (B, 1, D). cache_k/v: (B, S_cache, K, D_head).
+
+    ``cache_positions``: (S_cache,) absolute position held in each slot
+    (-1 = empty).  ``write_slot``: scalar slot index for the new token
+    (``pos`` for full caches, ``pos % window`` for ring buffers).
+    Returns (y, new_k, new_v, new_positions).
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(
+        x, p, num_heads, num_kv_heads, head_dim, positions, rope_theta,
+        rope_fraction, qk_norm,
+    )
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), write_slot, axis=1
+    )
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), write_slot, axis=1
+    )
+    cache_positions = jax.lax.dynamic_update_slice_in_dim(
+        cache_positions, jnp.full((1,), pos, jnp.int32), write_slot, axis=0
+    )
+
+    reps = num_heads // num_kv_heads
+    kk = repeat_kv(cache_k, reps)
+    vv = repeat_kv(cache_v, reps)
+    valid = (cache_positions >= 0) & (cache_positions <= pos)
+    if window is not None:
+        valid &= cache_positions > pos - window
+    out = _sdpa(q, kk, vv, valid[None, :])  # (1, T) broadcasts over batch/heads
+    out = out.reshape(b, 1, num_heads * head_dim)
+    y = dense(out, p["wo"])
+    if "bo" in p:
+        y = y + p["bo"].astype(y.dtype)
+    return y, cache_k, cache_v, cache_positions

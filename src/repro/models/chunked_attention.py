@@ -1,0 +1,379 @@
+"""Flash-style chunked attention in pure JAX (the lowering-path hot path).
+
+The naive reference attention materializes the (S, S) score matrix — at
+prefill_32k that is a 4 GiB f32 tensor *per head group per device*, which
+would dominate both HBM traffic and live memory.  This module implements the
+FlashAttention recompute scheme with ``jax.lax`` control flow so the lowered
+HLO (what the dry-run rooflines) has the same asymptotic memory behaviour as
+the Pallas TPU kernel (``repro.kernels.flash_attention``):
+
+  forward:  scan over query chunks; inner scan over KV chunks with a running
+            (max, denominator, accumulator) — O(S·D) live memory.  Residuals
+            saved for backward: (q, k, v, out, lse) only.
+  backward: custom VJP recomputes each block's probabilities from the saved
+            logsumexp — never stores the (S, S) probability tensor.
+
+FLOP exactness (matters for the roofline compute term):
+  * sliding-window / local attention uses a *banded* KV slice of static
+    length (window + q_chunk) per query chunk — exact O(S·window) compute;
+  * full causal attention skips strictly-upper blocks with ``lax.cond`` —
+    the executed FLOPs are the exact causal count.  (The HLO analyzer weights
+    ``conditional`` branches by expected execution — see hlo_parse.py.)
+
+GQA is handled natively (no KV head repetition): q is grouped as
+(B, S, K, G, Dh) and all block einsums carry the (K, G) pair.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_attention"]
+
+NEG_INF = -2.0e38
+
+
+def _pad_axis(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _block_mask(qpos, kpos, *, causal: bool, window: Optional[int], t_real: int):
+    """(qc, L) bool keep-mask from absolute query/key positions."""
+    m = kpos[None, :] < t_real
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+# ----------------------------------------------------------------------------
+# forward
+# ----------------------------------------------------------------------------
+
+def _fwd_q_chunk(q_blk, k, v, qs, *, scale, causal, window, t_real,
+                 q_offset, k_chunk):
+    """One query chunk against the needed keys.
+
+    q_blk: (B, qc, K, G, Dh).  Returns (out (B,qc,K,G,Dh) f32, lse (B,qc,K,G) f32).
+    """
+    B, qc, K, G, Dh = q_blk.shape
+    T = k.shape[1]
+    qpos = qs + jnp.arange(qc, dtype=jnp.int32) + q_offset
+
+    def block(k_blk, v_blk, kpos, m, l, acc):
+        s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32)) * scale
+        keep = _block_mask(qpos, kpos, causal=causal, window=window,
+                           t_real=t_real)
+        s = jnp.where(keep[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # fully-masked rows keep m == NEG_INF; guard the exp shift
+        shift = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - shift[..., None])
+        p = jnp.where(keep[None, None, None], p, 0.0)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - shift))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqt,btkd->bqkgd", p, v_blk.astype(jnp.float32))
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((B, K, G, qc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, qc), jnp.float32)
+    acc0 = jnp.zeros((B, qc, K, G, Dh), jnp.float32)
+
+    if causal and window is not None and window + qc <= T:
+        # banded: the only keys a window-attention query chunk can see.
+        L = window + qc
+        start = jnp.clip(qs + q_offset - window + 1, 0, T - L)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+        kpos = start + jnp.arange(L, dtype=jnp.int32)
+        m, l, acc = block(k_blk, v_blk, kpos, m0, l0, acc0)
+    else:
+        nk = T // k_chunk
+        kr = jnp.moveaxis(k.reshape(B, nk, k_chunk, K, Dh), 1, 0)
+        vr = jnp.moveaxis(v.reshape(B, nk, k_chunk, K, Dh), 1, 0)
+
+        # NB: no lax.cond block-skipping here — under scan-over-layers AD,
+        # partial-eval stages every (q-chunk, kv-chunk) branch residual,
+        # materializing the full blocked score tensor (observed: 6 GiB/layer).
+        # Fully-masked blocks are computed and masked instead; the grouped
+        # block-causal variant (see EXPERIMENTS.md §Perf) recovers the FLOPs.
+        def kv_step(carry, xs):
+            k_blk, v_blk, js = xs
+            kpos = js + jnp.arange(k_chunk, dtype=jnp.int32)
+            return block(k_blk, v_blk, kpos, *carry), None
+
+        js_all = jnp.arange(nk, dtype=jnp.int32) * k_chunk
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, acc0),
+                                      (kr, vr, js_all))
+
+    l_t = l.transpose(0, 3, 1, 2)[..., None]          # (B, qc, K, G, 1)
+    out = jnp.where(l_t > 0, acc / jnp.maximum(l_t, 1e-37), 0.0)
+    lse = jnp.where(l > 0, jnp.log(jnp.maximum(l, 1e-37)) + m, NEG_INF)
+    return out, lse.transpose(0, 3, 1, 2)             # lse -> (B, qc, K, G)
+
+
+MAX_CAUSAL_GROUPS = 8  # unrolled band segments (compile-size cap)
+
+
+def _causal_groups(nq: int) -> int:
+    """Largest divisor of nq that is <= MAX_CAUSAL_GROUPS (1 = no banding)."""
+    for g in range(min(nq, MAX_CAUSAL_GROUPS), 0, -1):
+        if nq % g == 0:
+            return g
+    return 1
+
+
+def _flash_fwd(q, k, v, *, scale, causal, window, t_real, q_offset,
+               q_chunk, k_chunk):
+    """q: (B, Sp, K, G, Dh) (padded); k/v: (B, Tp, K, Dh) (padded).
+
+    Full-causal attention runs GROUPED BLOCK-BANDING: q chunks are unrolled
+    into up to MAX_CAUSAL_GROUPS Python-level segments, segment g scanning
+    only KV[0 : (g+1)·span] (a STATIC slice).  Strictly-upper score blocks
+    between segments are never computed — ~45% of the score FLOPs and HBM
+    traffic of the naive masked sweep — with no lax.cond (whose branch
+    residuals explode under scan-over-layers AD; see EXPERIMENTS.md §Perf).
+    """
+    B, Sp, K, G, Dh = q.shape
+    Tp = k.shape[1]
+    nq = Sp // q_chunk
+
+    def segment(q_seg, qs0, k_seg, v_seg):
+        """Scan the segment's q chunks against the sliced KV."""
+        nq_seg = q_seg.shape[1]
+        qr = jnp.moveaxis(
+            q_seg.reshape(B, nq_seg // q_chunk, q_chunk, K, G, Dh), 1, 0)
+
+        def q_step(_, xs):
+            q_blk, qs = xs
+            return None, _fwd_q_chunk(
+                q_blk, k_seg, v_seg, qs, scale=scale, causal=causal,
+                window=window, t_real=t_real, q_offset=q_offset,
+                k_chunk=k_chunk)
+
+        qs_all = qs0 + jnp.arange(nq_seg // q_chunk, dtype=jnp.int32) * q_chunk
+        _, (outs, lses) = jax.lax.scan(q_step, None, (qr, qs_all))
+        return (jnp.moveaxis(outs, 0, 1).reshape(B, nq_seg, K, G, Dh),
+                jnp.moveaxis(lses, 0, 1).reshape(B, nq_seg, K, G))
+
+    banded = (causal and window is None and q_offset == Tp - Sp)
+    ngroups = _causal_groups(nq) if banded else 1
+    if ngroups > 1:
+        span = (nq // ngroups) * q_chunk
+        outs, lses = [], []
+        for g in range(ngroups):
+            kv_hi = q_offset + (g + 1) * span
+            kv_hi = -(-kv_hi // k_chunk) * k_chunk  # round up to k blocks
+            kv_hi = min(kv_hi, Tp)
+            o, s_ = segment(q[:, g * span : (g + 1) * span], g * span,
+                            k[:, :kv_hi], v[:, :kv_hi])
+            outs.append(o)
+            lses.append(s_)
+        return jnp.concatenate(outs, 1), jnp.concatenate(lses, 1)
+
+    return segment(q, 0, k, v)
+
+
+# ----------------------------------------------------------------------------
+# backward (flash recompute)
+# ----------------------------------------------------------------------------
+
+def _bwd_q_chunk(q_blk, do_blk, lse_blk, delta_blk, k, v, qs, *,
+                 scale, causal, window, t_real, q_offset, k_chunk):
+    """Gradients for one query chunk.
+
+    Returns (dq_blk f32, dk f32 (B,T,K,Dh) contribution, dv likewise).
+    ds = p * (dot(do, v) - delta);  dq = ds @ k;  dk = ds^T @ q;  dv = p^T @ do
+    """
+    B, qc, K, G, Dh = q_blk.shape
+    T = k.shape[1]
+    qpos = qs + jnp.arange(qc, dtype=jnp.int32) + q_offset
+
+    def block(k_blk, v_blk, kpos):
+        s = jnp.einsum("bqkgd,btkd->bkgqt", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32)) * scale
+        keep = _block_mask(qpos, kpos, causal=causal, window=window,
+                           t_real=t_real)
+        lse_t = lse_blk.transpose(0, 2, 3, 1)          # (B, K, G, qc)
+        p = jnp.where(keep[None, None, None],
+                      jnp.exp(s - lse_t[..., None]), 0.0)
+        dov = jnp.einsum("bqkgd,btkd->bkgqt", do_blk, v_blk.astype(jnp.float32))
+        ds = p * (dov - delta_blk.transpose(0, 2, 3, 1)[..., None]) * scale
+        dq = jnp.einsum("bkgqt,btkd->bqkgd", ds, k_blk.astype(jnp.float32))
+        dk = jnp.einsum("bkgqt,bqkgd->btkd", ds, q_blk.astype(jnp.float32))
+        dv = jnp.einsum("bkgqt,bqkgd->btkd", p, do_blk)
+        return dq, dk, dv
+
+    if causal and window is not None and window + qc <= T:
+        L = window + qc
+        start = jnp.clip(qs + q_offset - window + 1, 0, T - L)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+        kpos = start + jnp.arange(L, dtype=jnp.int32)
+        dq, dk_b, dv_b = block(k_blk, v_blk, kpos)
+        dk = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros((B, T, K, Dh), jnp.float32), dk_b, start, axis=1)
+        dv = jax.lax.dynamic_update_slice_in_dim(
+            jnp.zeros((B, T, K, Dh), jnp.float32), dv_b, start, axis=1)
+        return dq, dk, dv
+
+    nk = T // k_chunk
+    kr = jnp.moveaxis(k.reshape(B, nk, k_chunk, K, Dh), 1, 0)
+    vr = jnp.moveaxis(v.reshape(B, nk, k_chunk, K, Dh), 1, 0)
+
+    def kv_step(carry, xs):
+        dq_acc, dk_acc, dv_acc = carry
+        k_blk, v_blk, js, idx = xs
+        kpos = js + jnp.arange(k_chunk, dtype=jnp.int32)
+        dq_b, dk_b, dv_b = block(k_blk, v_blk, kpos)
+        dk_acc = jax.lax.dynamic_update_index_in_dim(
+            dk_acc, dk_acc[idx] + dk_b, idx, axis=0)
+        dv_acc = jax.lax.dynamic_update_index_in_dim(
+            dv_acc, dv_acc[idx] + dv_b, idx, axis=0)
+        return (dq_acc + dq_b, dk_acc, dv_acc), None
+
+    dq0 = jnp.zeros((B, qc, K, G, Dh), jnp.float32)
+    dk0 = jnp.zeros((nk, B, k_chunk, K, Dh), jnp.float32)
+    dv0 = jnp.zeros((nk, B, k_chunk, K, Dh), jnp.float32)
+    js_all = jnp.arange(nk, dtype=jnp.int32) * k_chunk
+    idx_all = jnp.arange(nk, dtype=jnp.int32)
+    (dq, dkc, dvc), _ = jax.lax.scan(
+        kv_step, (dq0, dk0, dv0), (kr, vr, js_all, idx_all))
+    dk = jnp.moveaxis(dkc, 0, 1).reshape(B, T, K, Dh)
+    dv = jnp.moveaxis(dvc, 0, 1).reshape(B, T, K, Dh)
+    return dq, dk, dv
+
+
+# ----------------------------------------------------------------------------
+# public entry with custom VJP
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_offset, q_chunk, k_chunk):
+    out, _ = _flash_core(q, k, v, causal, window, q_offset, q_chunk, k_chunk)
+    return out
+
+
+def _flash_core(q, k, v, causal, window, q_offset, q_chunk, k_chunk):
+    scale = q.shape[-1] ** -0.5
+    t_real = k.shape[1]
+    qp = _pad_axis(q, 1, q_chunk)
+    kp = _pad_axis(k, 1, k_chunk)
+    vp = _pad_axis(v, 1, k_chunk)
+    out, lse = _flash_fwd(
+        qp, kp, vp, scale=scale, causal=causal, window=window, t_real=t_real,
+        q_offset=q_offset, q_chunk=q_chunk, k_chunk=k_chunk)
+    return out[:, : q.shape[1]].astype(q.dtype), lse[:, : q.shape[1]]
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, q_offset, q_chunk, k_chunk):
+    out, lse = _flash_core(q, k, v, causal, window, q_offset, q_chunk, k_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, q_offset, q_chunk, k_chunk, res, dout):
+    q, k, v, out, lse = res
+    scale = q.shape[-1] ** -0.5
+    B, S, K, G, Dh = q.shape
+    T = k.shape[1]
+    do = dout.astype(jnp.float32)
+    delta = jnp.sum(do * out.astype(jnp.float32), axis=-1)  # (B, S, K, G)
+
+    qp = _pad_axis(q, 1, q_chunk)
+    dop = _pad_axis(do, 1, q_chunk)
+    lsep = _pad_axis(lse, 1, q_chunk)
+    deltap = _pad_axis(delta, 1, q_chunk)
+    kp = _pad_axis(k, 1, k_chunk)
+    vp = _pad_axis(v, 1, k_chunk)
+    Sp, Tp = qp.shape[1], kp.shape[1]
+    nq = Sp // q_chunk
+
+    def bwd_segment(lo, hi, kv_hi, k_seg, v_seg):
+        """Gradients for q chunks [lo, hi) against KV[:kv_hi]."""
+        n = (hi - lo) // q_chunk
+        sl = lambda t: jnp.moveaxis(
+            t[:, lo:hi].reshape((B, n, q_chunk) + t.shape[2:]), 1, 0)
+        qr, dor = sl(qp), sl(dop)
+        lser, deltar = sl(lsep), sl(deltap)
+
+        def q_step(carry, xs):
+            dk_acc, dv_acc = carry
+            q_blk, do_blk, lse_blk, delta_blk, qs = xs
+            dq_blk, dk_c, dv_c = _bwd_q_chunk(
+                q_blk, do_blk, lse_blk, delta_blk, k_seg, v_seg, qs,
+                scale=scale, causal=causal, window=window, t_real=T,
+                q_offset=q_offset, k_chunk=k_chunk)
+            return (dk_acc + dk_c, dv_acc + dv_c), dq_blk
+
+        qs_all = lo + jnp.arange(n, dtype=jnp.int32) * q_chunk
+        dk0 = jnp.zeros((B, kv_hi, K, Dh), jnp.float32)
+        dv0 = jnp.zeros((B, kv_hi, K, Dh), jnp.float32)
+        (dk_g, dv_g), dqs = jax.lax.scan(
+            q_step, (dk0, dv0), (qr, dor, lser, deltar, qs_all))
+        dq_g = jnp.moveaxis(dqs, 0, 1).reshape(B, hi - lo, K, G, Dh)
+        return dq_g, dk_g, dv_g
+
+    banded = (causal and window is None and q_offset == Tp - Sp)
+    ngroups = _causal_groups(nq) if banded else 1
+    dk = jnp.zeros((B, Tp, K, Dh), jnp.float32)
+    dv = jnp.zeros((B, Tp, K, Dh), jnp.float32)
+    if ngroups > 1:
+        span = (nq // ngroups) * q_chunk
+        dq_parts = []
+        for g in range(ngroups):
+            kv_hi = min(-(-(q_offset + (g + 1) * span) // k_chunk) * k_chunk,
+                        Tp)
+            dq_g, dk_g, dv_g = bwd_segment(
+                g * span, (g + 1) * span, kv_hi, kp[:, :kv_hi],
+                vp[:, :kv_hi])
+            dq_parts.append(dq_g)
+            dk = dk.at[:, :kv_hi].add(dk_g)
+            dv = dv.at[:, :kv_hi].add(dv_g)
+        dq = jnp.concatenate(dq_parts, 1)[:, :S]
+    else:
+        dq, dk_g, dv_g = bwd_segment(0, Sp, Tp, kp, vp)
+        dq = dq[:, :S]
+        dk = dk + dk_g
+        dv = dv + dv_g
+    return (dq.astype(q.dtype), dk[:, :T].astype(k.dtype),
+            dv[:, :T].astype(v.dtype))
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+):
+    """Flash-style attention.  q: (B, S, H, Dh); k/v: (B, T, K, Dh) with
+    GQA groups G = H // K.  Returns (B, S, H, Dh) in q.dtype.
+
+    ``q_offset`` is the absolute position of q[0] relative to k[0]
+    (self-attention with full history: T - S).
+    """
+    B, S, H, Dh = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, Dh)
+    qc = min(q_chunk, max(8, S))
+    kc = min(k_chunk, max(8, T))
+    out = _flash(qg, k, v, causal, window, q_offset, qc, kc)
+    return out.reshape(B, S, H, Dh)

@@ -1,0 +1,182 @@
+"""Shared model layers: norms, MLPs, rotary embeddings, token embeddings.
+
+Pure-functional JAX: parameters are nested dicts, layers are functions.
+Activation sharding constraints go through :func:`repro.distributed.sharding.shard_act`
+(a no-op outside a mesh context), keeping every model mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import shard_act
+
+__all__ = [
+    "rmsnorm",
+    "layernorm",
+    "mlp",
+    "mlp_params",
+    "rope_freqs",
+    "apply_rope",
+    "embed",
+    "unembed",
+    "dense",
+    "init_dense",
+    "init_norm",
+]
+
+
+# ----------------------------------------------------------------------------
+# primitives
+# ----------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
+    scale = (1.0 / np.sqrt(in_dim)) if scale is None else scale
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def init_norm(dim: int, dtype, bias: bool = False):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if bias:
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def dense(x, w):
+    """x: (..., in) @ w: (in, out) with f32 accumulation."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def dense_rp(x, w):
+    """Row-parallel dense: the contraction dim is model-sharded, so the
+    result is a cross-shard partial sum.  Emitting the dot in the INPUT
+    dtype lets GSPMD run the reduction as a bf16 reduce-scatter instead of
+    an f32 all-reduce (the f32->bf16 convert otherwise sits between the
+    partial sum and the sequence-sharding constraint and blocks the
+    pattern-match — observed 1 GiB f32 all-reduces per layer).  The MXU
+    still accumulates in f32 internally; only the cross-shard sum is bf16,
+    the standard Megatron trade.
+
+    NOTE (measured, kept for the TPU target): XLA:CPU upcasts bf16 dots to
+    f32 regardless of preferred_element_type, so the dry-run still shows
+    f32 all-reduces here — on TPU the MXU emits bf16 and the collective
+    halves.  See EXPERIMENTS.md §Perf (refuted-on-CPU iteration)."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=x.dtype,
+    ).astype(x.dtype)
+
+
+def rmsnorm(x, p, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x, p, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# MLP family: swiglu (llama/phi/danube), gelu (whisper), relu2 (nemotron),
+# geglu (recurrentgemma)
+# ----------------------------------------------------------------------------
+
+def mlp_params(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": init_dense(ks[0], d_model, d_ff, dtype),
+            "w_up": init_dense(ks[1], d_model, d_ff, dtype),
+            "w_down": init_dense(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "w_up": init_dense(ks[0], d_model, d_ff, dtype),
+        "w_down": init_dense(ks[1], d_ff, d_model, dtype),
+    }
+
+
+def mlp(x, p, kind: str):
+    # every d_ff-wide intermediate is constrained to the TP sharding: the
+    # constraints' transposes pin the BACKWARD cotangents too — without
+    # them GSPMD all-reduces full-width f32 activation grads per layer.
+    ff = ("data", None, "model")
+    if kind in ("swiglu", "geglu"):
+        g = shard_act(dense(x, p["w_gate"]), ff)
+        u = shard_act(dense(x, p["w_up"]), ff)
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = shard_act(act * u, ff)
+    else:
+        h = shard_act(dense(x, p["w_up"]), ff)
+        if kind == "gelu":
+            h = jax.nn.gelu(h)
+        elif kind == "relu2":  # nemotron squared-ReLU
+            r = jax.nn.relu(h)
+            h = r * r
+        else:
+            raise ValueError(f"unknown mlp kind {kind!r}")
+        h = shard_act(h, ff)
+    out = dense_rp(h, p["w_down"])
+    # row-parallel output lands sequence-sharded (SP): the partial-sum
+    # reduction lowers to a reduce-scatter instead of a full all-reduce.
+    return shard_act(out, ("data", "seq", None))
+
+
+# ----------------------------------------------------------------------------
+# rotary position embeddings
+# ----------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,), f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, D); positions: (B, S) or (S,) int32."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    if angles.ndim == 2:  # (S, half) -> broadcast over batch
+        angles = angles[None]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# embeddings
+# ----------------------------------------------------------------------------
+
+def embed(tokens, table):
+    """tokens: (B, S) int32; table: (V, D)."""
+    out = jnp.take(table, tokens, axis=0)
+    return shard_act(out, ("data", "seq", None))
+
+
+def unembed(x, table):
+    """Project to vocab logits (tied or untied table of shape (V, D))."""
+    logits = jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # vocab stays model-sharded (the CE loss reduces it with an all-reduce of
+    # (B,S) stats); seq must NOT also map to "model" — one axis per dim.
+    return shard_act(logits, ("data", None, "model"))

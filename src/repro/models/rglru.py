@@ -1,0 +1,163 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU gated recurrence.
+
+Block (temporal-mix half; the MLP half lives in transformer.py):
+    y_gate = gelu(x @ W_y)                       (B, S, W)
+    u      = x @ W_x                             (B, S, W)
+    u      = causal depthwise conv1d(u, width 4)
+    h      = RG-LRU(u)                           gated linear recurrence
+    out    = (h * y_gate) @ W_out                (B, S, D)
+
+RG-LRU (Griffin Eq 3-6), computed in log space for stability:
+    r_t = sigmoid(x_t @ W_a + b_a)               recurrence gate
+    i_t = sigmoid(x_t @ W_i + b_i)               input gate
+    log a_t = -c * softplus(Lambda) * r_t        (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Reference is a ``lax.scan``; the TPU hot path is the chunked Pallas kernel in
+``repro.kernels.rglru_scan`` (identical math, blockwise over time).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from .layers import dense, dense_rp, init_dense
+
+__all__ = [
+    "rglru_block_params",
+    "rglru_block",
+    "rglru_block_step",
+    "rglru_scan_reference",
+]
+
+_C = 8.0
+
+
+def rglru_block_params(key, d_model: int, rnn_width: int, conv_width: int, dtype):
+    W = rnn_width
+    ks = iter(jax.random.split(key, 8))
+    # Lambda init so a^c ~ uniform in [0.9, 0.999] (Griffin appendix)
+    lam = jax.random.uniform(next(ks), (W,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / _C))  # inverse softplus
+    return {
+        "wx": init_dense(next(ks), d_model, W, dtype),
+        "wy": init_dense(next(ks), d_model, W, dtype),
+        "conv_w": (jax.random.normal(next(ks), (conv_width, W), jnp.float32)
+                   / jnp.sqrt(conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((W,), dtype),
+        "w_a": init_dense(next(ks), W, W, dtype),
+        "b_a": jnp.zeros((W,), jnp.float32),
+        "w_i": init_dense(next(ks), W, W, dtype),
+        "b_i": jnp.zeros((W,), jnp.float32),
+        "lambda": lam,
+        "w_out": init_dense(next(ks), W, d_model, dtype),
+    }
+
+
+def _causal_conv1d(u, w, b, carry):
+    """Depthwise causal conv. u: (B,S,W); w: (cw,W); carry: (B,cw-1,W)."""
+    cw = w.shape[0]
+    full = jnp.concatenate([carry.astype(u.dtype), u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(cw):
+        out = out + full[:, i : i + u.shape[1], :] * w[cw - 1 - i][None, None, :]
+    new_carry = full[:, full.shape[1] - (cw - 1):, :] if cw > 1 else carry
+    return out + b[None, None, :].astype(u.dtype), new_carry
+
+
+def rglru_scan_reference(u, log_a, h0):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) u_t.  u/log_a: (B,S,W) f32."""
+
+    def step(h, xs):
+        ut, la = xs
+        a = jnp.exp(la)
+        mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * la), 1e-12))
+        h = a * h + mult * ut
+        return h, h
+
+    xs = (jnp.moveaxis(u, 1, 0), jnp.moveaxis(log_a, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def rglru_chunked(u, log_a, h0, *, chunk: int = 64):
+    """Chunked-parallel RG-LRU (the jnp twin of the Pallas kernel).
+
+    The token scan is the oracle, but AD through it saves per-token
+    residuals — tens of GiB at train_4k/prefill_32k.  A diagonal linear
+    recurrence has the chunk closed form
+
+        h_t = exp(Lc[t]) * h0 + sum_{s<=t} exp(Lc[t] - Lc[s]) * b_s
+
+    with Lc the in-chunk cumulative log-decay and b = sqrt(1-a^2) * u.
+    The pairwise exponent (C, C, W) is computed masked-and-shifted (always
+    <= 0 -> stable) and stays inside one XLA fusion.  Each chunk body is
+    remat'd; AD carries only the (B, W) boundary state per chunk.
+
+    u/log_a: (B, S, W) f32 (log_a <= 0); h0: (B, W) f32.
+    Returns (h (B,S,W) f32, hT (B,W) f32).
+    """
+    B, S, W = u.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    uf = u.astype(jnp.float32)
+    la = log_a.astype(jnp.float32)
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0))
+        uf = jnp.pad(uf, widths)     # b=0: padded tokens add nothing
+        la = jnp.pad(la, widths)     # log_a=0: state unchanged
+    nc = (S + pad) // C
+    ur = jnp.moveaxis(uf.reshape(B, nc, C, W), 1, 0)   # (nc, B, C, W)
+    lr = jnp.moveaxis(la.reshape(B, nc, C, W), 1, 0)
+    mask = jnp.tril(jnp.ones((C, C), jnp.float32))     # inclusive s <= t
+
+    def chunk_fn(h, xs):
+        uc, lac = xs                                   # (B, C, W)
+        b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * lac), 1e-12)) * uc
+        Lc = jnp.cumsum(lac, axis=1)
+        diff = Lc[:, :, None, :] - Lc[:, None, :, :]   # (B, t, s, W)
+        diff = jnp.where(mask[None, :, :, None] > 0, diff, -1e30)
+        intra = jnp.einsum("btsw,bsw->btw", jnp.exp(diff), b)
+        hc = jnp.exp(Lc) * h[:, None, :] + intra
+        return hc[:, -1, :], hc
+
+    body = jax.checkpoint(chunk_fn,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    hT, hs = jax.lax.scan(body, h0.astype(jnp.float32), (ur, lr))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, nc * C, W)[:, :S]
+    return h, hT
+
+
+def rglru_block(x, p, *, conv_carry, h0, impl: str = "reference"):
+    """x: (B,S,D) -> (out, new_conv_carry, new_h)."""
+    wspec = ("data", None, "model")   # rnn width W shards over model
+    y_gate = shard_act(jax.nn.gelu(dense(x, p["wy"])), wspec)
+    u = dense(x, p["wx"])
+    u = shard_act(u, wspec)
+    u, conv_carry = _causal_conv1d(u, p["conv_w"], p["conv_b"], conv_carry)
+
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(dense(u, p["w_a"]).astype(jnp.float32) + p["b_a"])
+    gate_i = jax.nn.sigmoid(dense(u, p["w_i"]).astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lambda"])[None, None, :] * r
+    gated_u = gate_i * uf
+
+    if impl == "pallas":
+        from repro.kernels.rglru_scan import ops as rglru_ops
+
+        h, hT = rglru_ops.rglru(gated_u, log_a, h0, interpret=True)
+    elif impl == "chunked" and x.shape[1] > 1:
+        h, hT = rglru_chunked(gated_u, log_a, h0)
+    else:
+        h, hT = rglru_scan_reference(gated_u, log_a, h0)
+
+    h = shard_act(h, wspec)
+    out = dense_rp(shard_act(h.astype(x.dtype) * y_gate, wspec), p["w_out"])
+    return shard_act(out, ("data", "seq", None)), conv_carry, hT
+
+
+def rglru_block_step(x1, p, *, conv_carry, h0):
+    """Single-token decode. x1: (B,1,D)."""
+    return rglru_block(x1, p, conv_carry=conv_carry, h0=h0, impl="reference")

@@ -1,0 +1,242 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (attention-free).
+
+Time-mix (per head, head dim N):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+with w_t = exp(-exp(w0 + lora_w(x'_w))) data-dependent per channel, and
+DDLERP token-shift interpolation feeding five projections (r/k/v/w/g).
+
+Reference recurrence is a ``lax.scan`` over time; the TPU hot path is the
+chunked Pallas kernel in ``repro.kernels.rwkv6_scan`` (same math, O(S·N)
+state I/O instead of per-token HBM round-trips).
+
+Channel-mix: r = sigmoid(xr Wr); out = r * (relu(xk Wk)^2 Wv).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from .layers import dense, dense_rp, init_dense, init_norm
+
+__all__ = [
+    "rwkv_block_params",
+    "rwkv_time_mix",
+    "rwkv_channel_mix",
+    "rwkv_time_mix_step",
+    "rwkv_channel_mix_step",
+    "wkv6_scan_reference",
+]
+
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+
+
+def rwkv_block_params(key, d_model: int, d_ff: int, num_heads: int,
+                      head_dim: int, lora_rank: int, decay_lora_rank: int, dtype):
+    D = d_model
+    ks = iter(jax.random.split(key, 24))
+    p = {
+        # DDLERP token-shift: base mus + shared lora trunk + per-channel heads
+        "mu_base": jnp.zeros((D,), dtype),
+        "mu": jnp.zeros((5, D), dtype),
+        "lora_w1": init_dense(next(ks), D, 5 * lora_rank, dtype),
+        "lora_w2": (jax.random.normal(next(ks), (5, lora_rank, D), jnp.float32)
+                    * 0.01).astype(dtype),
+        # projections
+        "w_receptance": init_dense(next(ks), D, D, dtype),
+        "w_key": init_dense(next(ks), D, D, dtype),
+        "w_value": init_dense(next(ks), D, D, dtype),
+        "w_gate_rwkv": init_dense(next(ks), D, D, dtype),
+        "w_out": init_dense(next(ks), D, D, dtype),
+        # data-dependent decay
+        "w0": jnp.zeros((D,), jnp.float32),
+        "decay_w1": init_dense(next(ks), D, decay_lora_rank, dtype),
+        "decay_w2": (jax.random.normal(next(ks), (decay_lora_rank, D), jnp.float32)
+                     * 0.01).astype(dtype),
+        "u": jnp.zeros((num_heads, head_dim), jnp.float32),  # "bonus"
+        "ln_x": init_norm(d_model, dtype, bias=True),        # group-norm scale/bias
+        # channel mix
+        "mu_ck": jnp.zeros((D,), dtype),
+        "mu_cr": jnp.zeros((D,), dtype),
+        "cm_key": init_dense(next(ks), D, d_ff, dtype),
+        "cm_value": init_dense(next(ks), d_ff, D, dtype),
+        "cm_receptance": init_dense(next(ks), D, D, dtype),
+    }
+    return p
+
+
+def _ddlerp(x, x_prev, p):
+    """Data-dependent token-shift -> five mixed inputs (r,k,v,w,g)."""
+    diff = x_prev - x
+    xxx = x + diff * p["mu_base"].astype(x.dtype)
+    trunk = jnp.tanh(dense(xxx, p["lora_w1"]))          # (B,S,5*rank)
+    B, S = x.shape[:2]
+    rank = trunk.shape[-1] // 5
+    trunk = trunk.reshape(B, S, 5, rank)
+    offs = jnp.einsum("bsfr,frd->bsfd", trunk.astype(jnp.float32),
+                      p["lora_w2"].astype(jnp.float32)).astype(x.dtype)
+    mixed = []
+    for f in range(5):
+        mu = p["mu"][f].astype(x.dtype) + offs[:, :, f]
+        mixed.append(x + diff * mu)
+    return mixed  # [x_r, x_k, x_v, x_w, x_g]
+
+
+def wkv6_scan_reference(r, k, v, w, u, state):
+    """Sequential WKV6 recurrence (oracle; also the dry-run lowering).
+
+    r/k/v/w: (B, S, H, N); u: (H, N); state: (B, H, N, N).
+    Returns (y (B,S,H,N), final state).  f32 state.
+    """
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, rkvw):
+        rt, kt, vt, wt = rkvw  # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,N,N)
+        yt = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, yt
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv6_chunked(r, k, v, lw, u, s0, *, chunk: int = 64):
+    """Chunked-parallel WKV6 (the jnp twin of the Pallas kernel's math).
+
+    The token-level scan is a correct oracle but AD saves a per-token
+    (B, H, N, N) residual — 68 GiB/device at train_4k.  The chunked form
+    carries the state only at chunk boundaries and does the within-chunk
+    work as batched matmuls:
+
+      y_inter = (r ⊙ exp(Le)) @ s_chunk_start                 (stable: Le<=0)
+      A[t,s]  = Σ_n r[t,n] k[s,n] exp(Le[t,n] - Lc[s,n])      (s<t, exp<=1)
+      y_intra = A @ v + (Σ_n r u k)[t] · v[t]
+      s_next  = exp(Lc[-1]) ⊙ s + (k ⊙ exp(Lc[-1]-Lc))^T @ v  (exp<=1)
+
+    The (C, C, N) exponent tensor stays inside one XLA fusion (exp-mul-
+    reduce), so it never hits HBM.  Each chunk body is remat'd: AD keeps
+    only the (B, H, N, N) carry per chunk.
+
+    r/k/v/lw: (B, S, H, N) with lw = log-decay <= 0; u: (H, N);
+    s0: (B, H, N, N) f32.  Returns (y (B,S,H,N) f32, sT f32).
+    """
+    B, S, H, N = r.shape
+    C = min(chunk, S)
+    pad = (-S) % C
+    f32 = lambda t: t.astype(jnp.float32)
+    r_, k_, v_, lw_ = f32(r), f32(k), f32(v), f32(lw)
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r_ = jnp.pad(r_, widths)
+        k_ = jnp.pad(k_, widths)      # k=0: padded tokens add nothing
+        v_ = jnp.pad(v_, widths)
+        lw_ = jnp.pad(lw_, widths)    # lw=0: w=1 keeps the state unchanged
+    nc = (S + pad) // C
+    resh = lambda t: jnp.moveaxis(t.reshape(B, nc, C, H, N), 3, 2) \
+        .transpose(1, 0, 2, 3, 4)     # -> (nc, B, H, C, N)
+    rr, kk, vv, ww = resh(r_), resh(k_), resh(v_), resh(lw_)
+    uf = u.astype(jnp.float32)
+    smask = jnp.tril(jnp.ones((C, C), jnp.float32), -1)   # strict lower
+
+    def chunk_fn(s, xs):
+        rc, kc, vc, lwc = xs                       # (B, H, C, N)
+        Lc = jnp.cumsum(lwc, axis=2)
+        Le = Lc - lwc
+        y_inter = jnp.einsum("bhtn,bhnm->bhtm", rc * jnp.exp(Le), s)
+        diff = Le[:, :, :, None, :] - Lc[:, :, None, :, :]  # (B,H,t,s,N)
+        diff = jnp.where(smask[None, None, :, :, None] > 0, diff, -1e30)
+        A = jnp.einsum("bhtn,bhsn,bhtsn->bhts", rc, kc, jnp.exp(diff))
+        y_intra = jnp.einsum("bhts,bhsm->bhtm", A, vc)
+        c = jnp.einsum("bhtn,hn,bhtn->bht", rc, uf, kc)
+        y = y_inter + y_intra + c[..., None] * vc
+        decay_all = jnp.exp(Lc[:, :, -1, :])                # (B,H,N)
+        kscale = jnp.exp(Lc[:, :, -1:, :] - Lc)             # <= 1
+        s_new = decay_all[..., None] * s + jnp.einsum(
+            "bhsn,bhsm->bhnm", kc * kscale, vc)
+        return s_new, y
+
+    body = jax.checkpoint(chunk_fn,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    sT, ys = jax.lax.scan(body, s0.astype(jnp.float32), (rr, kk, vv, ww))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, nc * C, H, N)[:, :S]
+    return y, sT
+
+
+def rwkv_time_mix(x, x_prev_last, p, *, num_heads: int, head_dim: int,
+                  state, impl: str = "reference"):
+    """Full-sequence time-mix.
+
+    x: (B, S, D); x_prev_last: (B, D) last token of the previous segment
+    (zeros at sequence start); state: (B, H, N, N) carried WKV state.
+    Returns (out, new_x_prev_last, new_state).
+    """
+    B, S, D = x.shape
+    H, N = num_heads, head_dim
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(x, x_prev, p)
+
+    hspec = ("data", None, "model", None)  # heads shard over model
+    r = shard_act(dense(xr, p["w_receptance"]).reshape(B, S, H, N), hspec)
+    k = shard_act(dense(xk, p["w_key"]).reshape(B, S, H, N), hspec)
+    v = shard_act(dense(xv, p["w_value"]).reshape(B, S, H, N), hspec)
+    g = shard_act(jax.nn.silu(dense(xg, p["w_gate_rwkv"])),
+                  ("data", None, "model"))
+
+    dlora = jnp.tanh(dense(xw, p["decay_w1"]))
+    dd = (dlora.astype(jnp.float32) @ p["decay_w2"].astype(jnp.float32))
+    logw = -jnp.exp(p["w0"][None, None, :] + dd)          # (B,S,D) f32, <= 0
+
+    u = p["u"].astype(jnp.float32)
+    if impl == "pallas":
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+
+        w = jnp.exp(logw).reshape(B, S, H, N)
+        y, state = wkv_ops.wkv6(r, k, v, w, u, state, interpret=True)
+    elif impl == "chunked" and S > 1:
+        y, state = wkv6_chunked(r, k, v, logw.reshape(B, S, H, N), u, state)
+    else:
+        w = jnp.exp(logw).reshape(B, S, H, N)
+        y, state = wkv6_scan_reference(r, k, v, w, u, state)
+
+    # per-head group norm
+    yf = y.reshape(B, S, H, N)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf.reshape(B, S, D) * p["ln_x"]["scale"].astype(jnp.float32) \
+        + p["ln_x"]["bias"].astype(jnp.float32)
+    prod = shard_act(yf.astype(x.dtype) * g, ("data", None, "model"))
+    out = dense_rp(prod, p["w_out"])
+    return shard_act(out, ("data", "seq", None)), x[:, -1, :], state
+
+
+def rwkv_time_mix_step(x1, x_prev_last, p, *, num_heads: int, head_dim: int, state):
+    """Single-token decode step; x1: (B, 1, D)."""
+    out, new_last, state = rwkv_time_mix(
+        x1, x_prev_last, p, num_heads=num_heads, head_dim=head_dim,
+        state=state, impl="reference",
+    )
+    return out, new_last, state
+
+
+def rwkv_channel_mix(x, x_prev_last, p):
+    """x: (B, S, D) -> (out, new_x_prev_last)."""
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+    diff = x_prev - x
+    xk = x + diff * p["mu_ck"].astype(x.dtype)
+    xr = x + diff * p["mu_cr"].astype(x.dtype)
+    kk = dense(xk, p["cm_key"])
+    kk = shard_act(kk, ("data", None, "model"))
+    kk = jnp.square(jax.nn.relu(kk))
+    out = jax.nn.sigmoid(dense(xr, p["cm_receptance"])) * dense_rp(kk, p["cm_value"])
+    return shard_act(out, ("data", "seq", None)), x[:, -1, :]
+
+
+def rwkv_channel_mix_step(x1, x_prev_last, p):
+    return rwkv_channel_mix(x1, x_prev_last, p)

@@ -1,0 +1,616 @@
+"""Unified language-model assembly for all assigned architectures.
+
+A model is a cycle of *block kinds* (``cfg.block_pattern``) applied
+``num_layers`` times.  Layers are grouped into repeating **super-blocks**
+(one full pattern cycle) whose parameters are stacked on a leading axis and
+driven by ``jax.lax.scan`` — compile time is O(pattern), not O(depth); the
+remainder layers (depth % pattern) run unscanned after the scan, preserving
+exact layer order (e.g. recurrentgemma's 38 = 12x(rec,rec,attn) + (rec,rec)).
+
+Block kinds:
+    "attn"   global attention (optional sliding window) + FFN (dense or MoE)
+    "local"  local windowed attention (recurrentgemma) + FFN
+    "rec"    RG-LRU recurrent block + FFN
+    "rwkv"   RWKV-6 time-mix + channel-mix
+
+The same class serves decoder-only LMs, the VLM (patch embeddings prepended),
+and the whisper-style encoder-decoder (encoder stack + cross-attention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard_act, shard_param_slices
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import rwkv6 as rwkv_mod
+from .layers import (
+    dense,
+    embed,
+    init_dense,
+    init_norm,
+    layernorm,
+    mlp,
+    mlp_params,
+    rmsnorm,
+    unembed,
+)
+
+__all__ = ["LM", "sinusoidal_positions"]
+
+MOE_AUX_COEF = 0.01
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = np.arange(seq)[:, None]
+    div = np.exp(np.arange(0, dim, 2) / dim * -np.log(10000.0))
+    table = np.zeros((seq, dim), np.float32)
+    table[:, 0::2] = np.sin(pos * div)
+    table[:, 1::2] = np.cos(pos * div)
+    return jnp.asarray(table)
+
+
+@dataclasses.dataclass(frozen=True)
+class LM:
+    cfg: ModelConfig
+    remat: bool = False  # checkpoint each super-block (training memory policy)
+    attn_impl: str = "auto"  # auto | reference | chunked | pallas
+
+    def _impl_for(self, seq_len: int) -> str:
+        """auto: flash-style chunked attention once the (S, S) score matrix
+        would dominate memory; tiny sequences keep the trivially-fused
+        reference path."""
+        if self.attn_impl != "auto":
+            return self.attn_impl
+        return "chunked" if seq_len >= 1024 else "reference"
+
+    # ---- structure ----------------------------------------------------------
+    @property
+    def pattern(self) -> tuple:
+        return self.cfg.block_pattern
+
+    @property
+    def n_super(self) -> int:
+        return self.cfg.num_layers // len(self.pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.cfg.num_layers % len(self.pattern)
+
+    def _norm(self, x, p):
+        return rmsnorm(x, p) if self.cfg.norm == "rmsnorm" else layernorm(x, p)
+
+    # ---- init ----------------------------------------------------------------
+    def _init_block(self, key, kind: str, cross: bool):
+        cfg = self.cfg
+        D, dt = cfg.d_model, cfg.jnp_dtype
+        ks = iter(jax.random.split(key, 8))
+        bias = cfg.norm == "layernorm"
+        p: dict[str, Any] = {"norm1": init_norm(D, dt, bias)}
+        if kind == "rwkv":
+            p["norm2"] = init_norm(D, dt, bias)
+            p["rwkv"] = rwkv_mod.rwkv_block_params(
+                next(ks), D, cfg.d_ff, D // cfg.rwkv_head_dim, cfg.rwkv_head_dim,
+                cfg.rwkv_lora_rank, cfg.rwkv_decay_lora_rank, dt,
+            )
+            return p
+        p["norm2"] = init_norm(D, dt, bias)
+        if kind in ("attn", "local"):
+            p["attn"] = attn_mod.attention_params(
+                next(ks), D, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt, bias=cfg.attn_bias, qk_norm=cfg.qk_norm,
+            )
+        elif kind == "rec":
+            p["rec"] = rglru_mod.rglru_block_params(
+                next(ks), D, cfg.resolved_rnn_width, cfg.conv_width, dt,
+            )
+        else:
+            raise ValueError(f"unknown block kind {kind!r}")
+        if cross:
+            p["norm_cross"] = init_norm(D, dt, bias)
+            p["cross"] = attn_mod.attention_params(
+                next(ks), D, cfg.num_heads, cfg.num_kv_heads,
+                cfg.resolved_head_dim, dt, bias=cfg.attn_bias,
+            )
+        if cfg.is_moe:
+            p["ffn"] = moe_mod.moe_params(
+                next(ks), D, cfg.d_ff, cfg.num_experts, cfg.act, dt)
+        else:
+            p["ffn"] = mlp_params(next(ks), D, cfg.d_ff, cfg.act, dt)
+        return p
+
+    def _init_super(self, key, cross: bool):
+        ks = jax.random.split(key, len(self.pattern))
+        return {
+            f"b{j}": self._init_block(ks[j], kind, cross)
+            for j, kind in enumerate(self.pattern)
+        }
+
+    def init(self, key) -> Any:
+        cfg = self.cfg
+        dt = cfg.jnp_dtype
+        keys = jax.random.split(key, 8)
+        params: dict[str, Any] = {
+            "embedding": (jax.random.normal(
+                keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+            ).astype(dt),
+            "final_norm": init_norm(cfg.d_model, dt, cfg.norm == "layernorm"),
+        }
+        cross = cfg.is_encoder_decoder
+        if self.n_super:
+            sks = jax.random.split(keys[1], self.n_super)
+            params["blocks"] = jax.vmap(
+                functools.partial(self._init_super, cross=cross))(sks)
+        rks = jax.random.split(keys[2], max(self.n_rem, 1))
+        params["rem"] = {
+            f"b{j}": self._init_block(rks[j], self.pattern[j], cross)
+            for j in range(self.n_rem)
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = (jax.random.normal(
+                keys[3], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+            ).astype(dt)
+        if cfg.is_encoder_decoder:
+            eks = jax.random.split(keys[4], cfg.encoder_layers)
+            params["enc_blocks"] = jax.vmap(
+                lambda k: self._init_block(k, "attn", cross=False))(eks)
+            params["enc_final_norm"] = init_norm(cfg.d_model, dt, True)
+        return params
+
+    def init_abstract(self):
+        """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+        return jax.eval_shape(self.init, jax.random.key(0))
+
+    # ---- block application ----------------------------------------------------
+    def _apply_block(self, x, p, kind: str, *, positions, enc_out, states, impl):
+        """Returns (x, aux, new_states). ``states`` is the decode/carry cache
+        for this block or None in pure-training mode."""
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_states = states
+        if kind == "rwkv":
+            st = states or self._zero_states(kind, x.shape[0])
+            h, new_shift_t, new_wkv = rwkv_mod.rwkv_time_mix(
+                self._norm(x, p["norm1"]), st["shift_t"], p["rwkv"],
+                num_heads=cfg.d_model // cfg.rwkv_head_dim,
+                head_dim=cfg.rwkv_head_dim, state=st["wkv"], impl=impl,
+            )
+            x = x + h
+            h, new_shift_c = rwkv_mod.rwkv_channel_mix(
+                self._norm(x, p["norm2"]), st["shift_c"], p["rwkv"])
+            x = x + h
+            new_states = {"wkv": new_wkv, "shift_t": new_shift_t,
+                          "shift_c": new_shift_c}
+            return x, aux, new_states
+
+        if kind in ("attn", "local"):
+            window = cfg.local_window if kind == "local" else cfg.sliding_window
+            h = attn_mod.attention(
+                self._norm(x, p["norm1"]), p["attn"],
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                rope_theta=cfg.rope_theta if cfg.pos == "rope" else None,
+                rope_fraction=cfg.rope_fraction, causal=True,
+                window=window, qk_norm=cfg.qk_norm, impl=impl,
+            )
+            x = x + h
+        elif kind == "rec":
+            st = states or self._zero_states(kind, x.shape[0])
+            h, new_conv, new_h = rglru_mod.rglru_block(
+                self._norm(x, p["norm1"]), p["rec"],
+                conv_carry=st["conv"], h0=st["h"], impl=impl,
+            )
+            x = x + h
+            new_states = {"conv": new_conv, "h": new_h}
+
+        if "cross" in p and enc_out is not None:
+            kv = self._cross_kv(p["cross"], enc_out)
+            h = attn_mod.attention(
+                self._norm(x, p["norm_cross"]), p["cross"],
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, causal=False,
+                kv_override=kv,
+            )
+            x = x + h
+
+        if cfg.is_moe:
+            h, aux = moe_mod.moe_ffn(
+                self._norm(x, p["norm2"]), p["ffn"],
+                num_experts=cfg.num_experts,
+                experts_per_token=cfg.experts_per_token,
+                act=cfg.act, cap_factor=cfg.moe_cap_factor,
+            )
+        else:
+            h = mlp(self._norm(x, p["norm2"]), p["ffn"], cfg.act)
+        x = x + h
+        return x, aux, new_states
+
+    def _cross_kv(self, p, enc_out):
+        cfg = self.cfg
+        B, T, _ = enc_out.shape
+        k = dense(enc_out, p["wk"]).reshape(B, T, cfg.num_kv_heads,
+                                            cfg.resolved_head_dim)
+        v = dense(enc_out, p["wv"]).reshape(B, T, cfg.num_kv_heads,
+                                            cfg.resolved_head_dim)
+        if "bv" in p:
+            v = v + p["bv"].reshape(cfg.num_kv_heads, -1).astype(v.dtype)
+        return k, v
+
+    def _zero_states(self, kind: str, batch: int, lead: tuple = ()):
+        cfg = self.cfg
+        dt = jnp.float32
+        if kind == "rwkv":
+            H = cfg.d_model // cfg.rwkv_head_dim
+            N = cfg.rwkv_head_dim
+            return {
+                "wkv": jnp.zeros(lead + (batch, H, N, N), dt),
+                "shift_t": jnp.zeros(lead + (batch, cfg.d_model), cfg.jnp_dtype),
+                "shift_c": jnp.zeros(lead + (batch, cfg.d_model), cfg.jnp_dtype),
+            }
+        if kind == "rec":
+            W = cfg.resolved_rnn_width
+            return {
+                "conv": jnp.zeros(lead + (batch, cfg.conv_width - 1, W),
+                                  cfg.jnp_dtype),
+                "h": jnp.zeros(lead + (batch, W), dt),
+            }
+        return None
+
+    # ---- encoder (whisper) ----------------------------------------------------
+    def encode(self, params, frame_embeds):
+        """frame_embeds: (B, S_enc, D) from the stubbed conv/mel frontend."""
+        x = frame_embeds
+        cfg = self.cfg
+
+        impl = self._impl_for(x.shape[1])
+
+        def body(x, p):
+            h = attn_mod.attention(
+                self._norm(x, p["norm1"]), p["attn"],
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, causal=False, impl=impl,
+            )
+            x = x + h
+            x = x + mlp(self._norm(x, p["norm2"]), p["ffn"], cfg.act)
+            return x, ()
+
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return layernorm(x, params["enc_final_norm"])
+
+    # ---- full-sequence forward -------------------------------------------------
+    def trunk(self, params, tokens, *, patch_embeds=None, frame_embeds=None):
+        """All blocks + final norm, NO unembed.
+
+        tokens: (B, S) -> (hidden (B, S_total, D), aux scalar).
+        VLM: ``patch_embeds (B, P, D)`` are prepended to the token sequence.
+        Enc-dec: ``frame_embeds (B, S_enc, D)`` feed the encoder.
+        """
+        cfg = self.cfg
+        x = embed(tokens, params["embedding"])
+        if cfg.num_patch_tokens and patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+        B, S, _ = x.shape
+        if cfg.pos == "learned":  # sinusoidal table (shape-agnostic stand-in)
+            x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            enc_out = self.encode(params, frame_embeds)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        impl = self._impl_for(S)
+
+        def super_body(x, blk):
+            # keep per-layer param slices (and, via the transpose rule,
+            # their gradient cotangents) on the stacked-leaf sharding —
+            # prevents per-iteration resharding of the grad accumulator.
+            blk = shard_param_slices(blk)
+            aux_sb = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(self.pattern):
+                x, aux, _ = self._apply_block(
+                    x, blk[f"b{j}"], kind, positions=positions,
+                    enc_out=enc_out, states=None, impl=impl,
+                )
+                aux_sb = aux_sb + aux
+            # SP: the residual stream (and hence the scan-saved per-layer
+            # activations) is sequence-sharded over the model axis between
+            # blocks; a no-op unless the sharding context maps "seq".
+            x = shard_act(x, ("data", "seq", None))
+            return x, aux_sb
+
+        if self.n_super:
+            body = super_body
+            if self.remat:
+                # full remat per super-block: save ONLY the layer-boundary
+                # residuals (the scan carry); recompute everything else in
+                # the backward pass.  With SP the saved stack is
+                # (layers, B/dp, S/tp, D) — the memory floor for training.
+                body = jax.checkpoint(
+                    super_body,
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                )
+            x, auxs = jax.lax.scan(body, x, params["blocks"])
+            aux_total = aux_total + auxs.sum()
+        for j in range(self.n_rem):
+            x, aux, _ = self._apply_block(
+                x, params["rem"][f"b{j}"], self.pattern[j],
+                positions=positions, enc_out=enc_out, states=None,
+                impl=impl,
+            )
+            aux_total = aux_total + aux
+
+        x = self._norm(x, params["final_norm"])
+        return x, aux_total
+
+    def _table(self, params):
+        return (params["embedding"] if self.cfg.tie_embeddings
+                else params["unembed"])
+
+    def forward(self, params, tokens, *, patch_embeds=None, frame_embeds=None):
+        """tokens: (B, S) -> logits (B, S_total, V) f32, aux loss scalar."""
+        x, aux_total = self.trunk(params, tokens, patch_embeds=patch_embeds,
+                                  frame_embeds=frame_embeds)
+        return unembed(x, self._table(params)), aux_total
+
+    # ---- loss -------------------------------------------------------------------
+    CE_CHUNK = 1024  # sequence chunk for the big-vocab CE (memory bound)
+
+    def _ce_chunk(self, x_c, labels_c, table):
+        """CE stats for one sequence chunk.  x_c: (B, C, D); labels (B, C).
+
+        Vocab-sharding-friendly: logsumexp reduces the sharded V axis with an
+        all-reduce of (B, C) stats, and the label pick is a fused
+        compare-select-reduce — never an all-gathered logits tensor or a
+        per-token cross-shard gather.
+        """
+        logits = unembed(x_c, table).astype(jnp.float32)  # (B, C, V)
+        mask = (labels_c >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels_c, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        picked = jnp.sum(
+            jnp.where(vocab_iota == safe[..., None], logits, 0.0), axis=-1)
+        nll = (lse - picked) * mask
+        return nll.sum(), mask.sum()
+
+    def loss(self, params, batch):
+        """batch: tokens (B,S), labels (B,S) int32 (-1 = ignore), plus
+        optional patch_embeds / frame_embeds.  Returns (loss, metrics).
+
+        The CE is computed in sequence CHUNKS: a full (B, S, V) f32 logits
+        tensor at 256k vocab is ~4 GiB/device with several alive at once —
+        chunking bounds the live logits to (B, CE_CHUNK, V) and the backward
+        recomputes each chunk's logits (scan-over-chunks AD).
+        """
+        cfg = self.cfg
+        x, aux = self.trunk(
+            params, batch["tokens"],
+            patch_embeds=batch.get("patch_embeds"),
+            frame_embeds=batch.get("frame_embeds"),
+        )
+        labels = batch["labels"]
+        if cfg.num_patch_tokens and batch.get("patch_embeds") is not None:
+            x = x[:, -labels.shape[1]:]  # loss on text positions only
+        table = self._table(params)
+        B, S, D = x.shape
+
+        C = min(self.CE_CHUNK, S)
+        if S % C:
+            pad = (-S) % C
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                             constant_values=-1)  # -1 = masked out
+            S = S + pad
+        nc = S // C
+        if nc == 1:
+            nll_sum, tok_sum = self._ce_chunk(x, labels, table)
+        else:
+            xs = (jnp.moveaxis(x.reshape(B, nc, C, D), 1, 0),
+                  jnp.moveaxis(labels.reshape(B, nc, C), 1, 0))
+
+            # remat: without it the scan's AD saves every chunk's (B, C, V)
+            # logits — exactly the tensor chunking is meant to avoid.
+            ce_chunk = jax.checkpoint(
+                lambda a, b, c: self._ce_chunk(a, b, c),
+                policy=jax.checkpoint_policies.nothing_saveable)
+
+            def body(carry, xs_c):
+                nll_acc, tok_acc = carry
+                n, t = ce_chunk(xs_c[0], xs_c[1], table)
+                return (nll_acc + n, tok_acc + t), None
+
+            (nll_sum, tok_sum), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                xs)
+
+        denom = jnp.maximum(tok_sum, 1.0)
+        ce = nll_sum / denom
+        total = ce + MOE_AUX_COEF * aux
+        return total, {"ce": ce, "aux": aux,
+                       "tokens": tok_sum.astype(jnp.int32)}
+
+    # ---- decode ------------------------------------------------------------------
+    def _cache_len(self, kind: str, max_seq: int) -> int:
+        cfg = self.cfg
+        if kind == "local":
+            return min(cfg.local_window, max_seq)
+        if kind == "attn" and cfg.sliding_window is not None:
+            return min(cfg.sliding_window, max_seq)
+        return max_seq
+
+    def _init_block_cache(self, kind: str, batch: int, max_seq: int,
+                          lead: tuple = ()):
+        cfg = self.cfg
+        if kind in ("rwkv", "rec"):
+            return self._zero_states(kind, batch, lead)
+        S = self._cache_len(kind, max_seq)
+        K, Dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache = {
+            "k": jnp.zeros(lead + (batch, S, K, Dh), cfg.jnp_dtype),
+            "v": jnp.zeros(lead + (batch, S, K, Dh), cfg.jnp_dtype),
+            "pos": jnp.full(lead + (S,), -1, jnp.int32),
+        }
+        if cfg.is_encoder_decoder:
+            cache["k_cross"] = jnp.zeros(
+                lead + (batch, cfg.encoder_seq, K, Dh), cfg.jnp_dtype)
+            cache["v_cross"] = jnp.zeros(
+                lead + (batch, cfg.encoder_seq, K, Dh), cfg.jnp_dtype)
+        return cache
+
+    def init_cache(self, batch: int, max_seq: int):
+        """Decode cache pytree (zeros); layout mirrors the param stacking."""
+        cache: dict[str, Any] = {"blocks": {}, "rem": {}}
+        if self.n_super:
+            cache["blocks"] = {
+                f"b{j}": self._init_block_cache(kind, batch, max_seq,
+                                                lead=(self.n_super,))
+                for j, kind in enumerate(self.pattern)
+            }
+        cache["rem"] = {
+            f"b{j}": self._init_block_cache(self.pattern[j], batch, max_seq)
+            for j in range(self.n_rem)
+        }
+        return cache
+
+    def populate_cross_cache(self, params, cache, frame_embeds):
+        """Whisper: run the encoder once and fill per-block cross K/V."""
+        enc_out = self.encode(params, frame_embeds)
+        cache = jax.tree.map(lambda a: a, cache)  # shallow copy
+        if self.n_super:
+            for j in range(len(self.pattern)):
+                kv = jax.vmap(lambda p: self._cross_kv(p, enc_out))(
+                    params["blocks"][f"b{j}"]["cross"])
+                cache["blocks"][f"b{j}"]["k_cross"] = kv[0]
+                cache["blocks"][f"b{j}"]["v_cross"] = kv[1]
+        for j in range(self.n_rem):
+            k, v = self._cross_kv(params["rem"][f"b{j}"]["cross"], enc_out)
+            cache["rem"][f"b{j}"]["k_cross"] = k
+            cache["rem"][f"b{j}"]["v_cross"] = v
+        return cache
+
+    def prefill(self, params, cache, tokens, start_pos: int = 0):
+        """Sequentially ingest a prompt through ``decode_step``.
+
+        tokens: (B, S).  Returns (last-token logits (B,1,V), cache).
+        One scan over time — the body compiles once; throughput is the
+        decode path's, which is fine for the CPU-scale serving example.
+        """
+        S = tokens.shape[1]
+
+        def step(cache, xs):
+            tok, i = xs
+            logits, cache = self.decode_step(params, cache, tok[:, None], i)
+            return cache, logits
+
+        xs = (jnp.moveaxis(tokens, 1, 0),
+              jnp.arange(start_pos, start_pos + S, dtype=jnp.int32))
+        cache, logits = jax.lax.scan(step, cache, xs)
+        return logits[-1], cache
+
+    def _decode_block(self, x, p, kind: str, cache, pos):
+        cfg = self.cfg
+        if kind == "rwkv":
+            h, new_shift_t, new_wkv = rwkv_mod.rwkv_time_mix(
+                self._norm(x, p["norm1"]), cache["shift_t"], p["rwkv"],
+                num_heads=cfg.d_model // cfg.rwkv_head_dim,
+                head_dim=cfg.rwkv_head_dim, state=cache["wkv"],
+                impl="reference",
+            )
+            x = x + h
+            h, new_shift_c = rwkv_mod.rwkv_channel_mix(
+                self._norm(x, p["norm2"]), cache["shift_c"], p["rwkv"])
+            x = x + h
+            return x, {"wkv": new_wkv, "shift_t": new_shift_t,
+                       "shift_c": new_shift_c}
+
+        new_cache = dict(cache)
+        if kind in ("attn", "local"):
+            window = cfg.local_window if kind == "local" else cfg.sliding_window
+            S = cache["k"].shape[1]
+            slot = pos % S
+            h, nk, nv, npos = attn_mod.decode_attention(
+                self._norm(x, p["norm1"]), p["attn"],
+                cache["k"], cache["v"], cache["pos"], slot, pos,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim,
+                rope_theta=cfg.rope_theta if cfg.pos == "rope" else None,
+                rope_fraction=cfg.rope_fraction, window=window,
+                qk_norm=cfg.qk_norm,
+            )
+            x = x + h
+            new_cache.update(k=nk, v=nv, pos=npos)
+        elif kind == "rec":
+            h, new_conv, new_h = rglru_mod.rglru_block(
+                self._norm(x, p["norm1"]), p["rec"],
+                conv_carry=cache["conv"], h0=cache["h"], impl="reference",
+            )
+            x = x + h
+            new_cache = {"conv": new_conv, "h": new_h}
+
+        if "cross" in p and "k_cross" in cache:
+            h = attn_mod.attention(
+                self._norm(x, p["norm_cross"]), p["cross"],
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, causal=False,
+                kv_override=(cache["k_cross"], cache["v_cross"]),
+            )
+            x = x + h
+
+        if cfg.is_moe:
+            h, _ = moe_mod.moe_ffn(
+                self._norm(x, p["norm2"]), p["ffn"],
+                num_experts=cfg.num_experts,
+                experts_per_token=cfg.experts_per_token,
+                act=cfg.act, cap_factor=cfg.moe_cap_factor,
+            )
+        else:
+            h = mlp(self._norm(x, p["norm2"]), p["ffn"], cfg.act)
+        x = x + h
+        return x, new_cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: (B, 1) int32; pos: scalar int32 (absolute
+        position of the new token).  Returns (logits (B,1,V) f32, new cache)."""
+        cfg = self.cfg
+        pos = jnp.asarray(pos, jnp.int32)
+        x = embed(tokens, params["embedding"])
+        if cfg.pos == "learned":
+            # sinusoidal positional encoding at the current position
+            div = jnp.exp(jnp.arange(0, cfg.d_model, 2) / cfg.d_model
+                          * -jnp.log(10000.0))
+            ang = pos.astype(jnp.float32) * div
+            pe = jnp.zeros((cfg.d_model,), jnp.float32)
+            pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+            x = x + pe.astype(x.dtype)[None, None, :]
+
+        def super_body(x, scanned):
+            blk, cch = scanned
+            new_c = {}
+            for j, kind in enumerate(self.pattern):
+                x, nc = self._decode_block(x, blk[f"b{j}"], kind,
+                                           cch[f"b{j}"], pos)
+                new_c[f"b{j}"] = nc
+            return x, new_c
+
+        new_cache: dict[str, Any] = {"blocks": {}, "rem": {}}
+        if self.n_super:
+            x, new_cache["blocks"] = jax.lax.scan(
+                super_body, x, (params["blocks"], cache["blocks"]))
+        for j in range(self.n_rem):
+            x, nc = self._decode_block(
+                x, params["rem"][f"b{j}"], self.pattern[j],
+                cache["rem"][f"b{j}"], pos)
+            new_cache["rem"][f"b{j}"] = nc
+
+        x = self._norm(x, params["final_norm"])
+        table = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+        return unembed(x, table), new_cache

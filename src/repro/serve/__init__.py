@@ -1,0 +1,5 @@
+from .engine import ServeEngine, Request, RouterStats
+from .sampler import greedy, temperature_sample
+
+__all__ = ["ServeEngine", "Request", "RouterStats", "greedy",
+           "temperature_sample"]

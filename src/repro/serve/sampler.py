@@ -1,0 +1,23 @@
+"""Token samplers for the decode engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["greedy", "temperature_sample"]
+
+
+def greedy(logits, key=None):
+    """logits: (B, V) -> (B,) int32."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits, key, temperature: float = 1.0,
+                       top_k: int = 0):
+    """logits: (B, V) -> (B,) int32 categorical sample."""
+    l = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k:
+        kth = jnp.sort(l, axis=-1)[:, -top_k][:, None]
+        l = jnp.where(l < kth, -1e30, l)
+    return jax.random.categorical(key, l, axis=-1).astype(jnp.int32)

@@ -1,0 +1,101 @@
+"""Elastic fleet management: failures, stragglers, DLT re-balancing.
+
+The paper's scheduler re-solved on every fleet change is exactly the
+recovery policy a 1000-node system needs:
+
+  * a worker FAILS       -> drop its row, re-solve, shares re-spread; the
+                            step restarts from the last atomic checkpoint;
+  * a worker STRAGGLES   -> its measured seconds/sample (EWMA) grows, the
+                            next re-plan automatically shifts load away —
+                            the paper's heterogeneous-A_j case, live;
+  * a worker RECOVERS /  -> add a row back, re-solve.
+    JOINS (elastic up)
+
+``FleetState`` tracks per-worker throughput estimates; ``replan`` emits the
+integer batch shares via the DLT balancer.  Pure host-side logic — device
+placement reacts by resizing each worker's shard of the global batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.balancer import BatchPlan, balance_batch
+
+__all__ = ["FleetState", "WorkerStats"]
+
+
+@dataclasses.dataclass
+class WorkerStats:
+    name: str
+    seconds_per_sample: float       # EWMA estimate (A_j)
+    alive: bool = True
+    steps_observed: int = 0
+
+
+@dataclasses.dataclass
+class FleetState:
+    workers: list[WorkerStats]
+    ewma: float = 0.3
+    generation: int = 0             # bumps on every membership change
+
+    @classmethod
+    def homogeneous(cls, n: int, seconds_per_sample: float) -> "FleetState":
+        return cls([WorkerStats(f"w{i}", seconds_per_sample)
+                    for i in range(n)])
+
+    # ---- membership ---------------------------------------------------------
+    def fail(self, index: int):
+        if self.workers[index].alive:
+            self.workers[index].alive = False
+            self.generation += 1
+
+    def recover(self, index: int, seconds_per_sample: Optional[float] = None):
+        w = self.workers[index]
+        if not w.alive:
+            w.alive = True
+            if seconds_per_sample is not None:
+                w.seconds_per_sample = seconds_per_sample
+            self.generation += 1
+
+    def join(self, name: str, seconds_per_sample: float):
+        self.workers.append(WorkerStats(name, seconds_per_sample))
+        self.generation += 1
+
+    @property
+    def alive_indices(self) -> np.ndarray:
+        return np.asarray([i for i, w in enumerate(self.workers) if w.alive])
+
+    # ---- measurements -------------------------------------------------------
+    def observe(self, index: int, seconds_per_sample: float):
+        """EWMA update from a measured step (straggler detection input)."""
+        w = self.workers[index]
+        if w.steps_observed == 0:
+            w.seconds_per_sample = seconds_per_sample
+        else:
+            w.seconds_per_sample = ((1 - self.ewma) * w.seconds_per_sample
+                                    + self.ewma * seconds_per_sample)
+        w.steps_observed += 1
+
+    def stragglers(self, threshold: float = 1.5) -> list[int]:
+        alive = self.alive_indices
+        rates = np.asarray([self.workers[i].seconds_per_sample for i in alive])
+        med = float(np.median(rates))
+        return [int(i) for i, r in zip(alive, rates) if r > threshold * med]
+
+    # ---- planning -----------------------------------------------------------
+    def replan(self, global_batch: int, **dlt_kwargs) -> tuple[BatchPlan, np.ndarray]:
+        """DLT-optimal integer shares for the alive fleet.
+
+        Returns (plan, alive_indices); plan.shares[k] belongs to
+        workers[alive_indices[k]].
+        """
+        alive = self.alive_indices
+        if len(alive) == 0:
+            raise RuntimeError("no alive workers")
+        rates = [self.workers[i].seconds_per_sample for i in alive]
+        plan = balance_batch(rates, global_batch, **dlt_kwargs)
+        return plan, alive

@@ -1,0 +1,102 @@
+"""AdamW in plain JAX (f32 moments, bf16-safe params) + LR schedules.
+
+No optax dependency: the optimizer is ~60 lines and owning it keeps the
+checkpoint format and sharding rules self-contained (moments inherit each
+parameter's PartitionSpec).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "TrainState", "init_state", "apply_gradients",
+           "global_norm", "cosine_schedule", "constant_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: Callable[[jnp.ndarray], jnp.ndarray] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+    def lr_at(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jnp.ndarray      # () int32
+    params: Any
+    mu: Any                # f32 first moments
+    nu: Any                # f32 second moments
+
+
+def init_state(params) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return TrainState(
+        step=jnp.zeros((), jnp.int32),
+        params=params,
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_gradients(cfg: AdamWConfig, state: TrainState, grads) -> TrainState:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = cfg.lr_at(step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(state.params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state.mu)
+    flat_nu = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    return TrainState(step=step, params=new_p, mu=new_mu, nu=new_nu)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak * (floor_frac + (1 - floor_frac) * 0.5
+                      * (1.0 + jnp.cos(jnp.pi * t)))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)

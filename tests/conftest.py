@@ -1,0 +1,13 @@
+"""Test config.  NOTE: no XLA_FLAGS here on purpose — smoke tests run on
+the single real CPU device; only launch/dryrun.py (its own process) forces
+512 placeholder devices.  Multi-device tests spawn subprocesses."""
+
+import os
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,63 @@
+"""Roofline bookkeeping + DLT constraint-verifier negative cases."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.roofline import (
+    HBM_BW, PEAK_FLOPS_BF16, model_flops, roofline_from_hlo,
+)
+from repro.core.dlt import SystemSpec, solve, verify_schedule
+
+
+def test_model_flops_formulas():
+    n, s, b = 8e9, 4096, 256
+    assert model_flops("train", n, s, b) == 6 * n * s * b
+    assert model_flops("prefill", n, s, b) == 2 * n * s * b
+    assert model_flops("decode", n, s, b) == 2 * n * b  # one token/sequence
+
+
+def test_roofline_from_tiny_hlo():
+    # hand-written HLO: one 128x128x128 dot + one all-reduce of its output
+    hlo = """
+ENTRY %main (a: f32[128,128], b: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128] parameter(0)
+  %b = f32[128,128] parameter(1)
+  %dot = f32[128,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %ar = f32[128,128]{1,0} all-reduce(%dot), replica_groups=[16,16]<=[256], to_apply=%add
+}
+"""
+    t = roofline_from_hlo(
+        hlo, arch="x", shape="y", mesh_name="single", chips=256,
+        kind="train", n_active_params=1e6, seq_len=128, global_batch=1)
+    want_flops = 2 * 128 * 128 * 128
+    assert t.flops_per_device == want_flops
+    assert t.compute_s == pytest.approx(want_flops / PEAK_FLOPS_BF16)
+    ar_bytes = 128 * 128 * 4
+    assert t.collective_bytes["all-reduce"] == ar_bytes
+    assert t.collective_s == pytest.approx(2 * 15 / 16 * ar_bytes / 50e9)
+    assert t.bottleneck in ("compute", "memory", "collective")
+
+
+def test_verifier_catches_corruption():
+    spec = SystemSpec(G=[0.2, 0.4], R=[0, 2], A=[2, 3, 4], J=100)
+    sched = solve(spec, frontend=True)
+    assert verify_schedule(sched) == []
+    # corrupt: steal load from one cell (breaks normalization + finish time)
+    bad_beta = sched.beta.copy()
+    bad_beta[0, 0] -= 5.0
+    bad = dataclasses.replace(sched, beta=bad_beta)
+    assert verify_schedule(bad) != []
+    # corrupt finish time only
+    bad2 = dataclasses.replace(sched, finish_time=sched.finish_time * 0.5)
+    assert verify_schedule(bad2) != []
+
+
+def test_verifier_catches_negative_load():
+    spec = SystemSpec(G=[0.2], R=[0.0], A=[2, 3], J=10)
+    sched = solve(spec, frontend=True)
+    bad_beta = sched.beta.copy()
+    bad_beta[0, 0], bad_beta[0, 1] = -1.0, bad_beta[0, 1] + bad_beta[0, 0] + 1.0
+    bad = dataclasses.replace(sched, beta=bad_beta)
+    assert verify_schedule(bad) != []

@@ -1,0 +1,53 @@
+"""DLT batch balancer (straggler mitigation) + cluster advisor."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.advisor import ClusterAdvisor, SliceCandidate
+from repro.core.balancer import balance_batch, uniform_makespan
+
+
+def test_homogeneous_fleet_uniform_split():
+    plan = balance_batch([2.0, 2.0, 2.0, 2.0], global_batch=64)
+    np.testing.assert_array_equal(plan.shares, [16, 16, 16, 16])
+    # tiny deviation from the near-zero-G pseudo-source is expected
+    assert plan.speedup_vs_uniform == pytest.approx(1.0, rel=1e-4)
+
+
+def test_straggler_gets_less_load():
+    # worker 2 is 3x slower
+    plan = balance_batch([1.0, 1.0, 3.0, 1.0], global_batch=90)
+    assert plan.shares.sum() == 90
+    assert plan.shares[2] < min(plan.shares[i] for i in (0, 1, 3))
+    # DLT split strictly beats the uniform split's makespan
+    assert plan.makespan < plan.uniform_makespan
+    # and approaches the ideal: load ~ inversely proportional to A
+    assert plan.shares[2] == pytest.approx(90 / (3 + 1 / 3 * 3) / 3, rel=0.4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rates=st.lists(st.floats(0.5, 5.0), min_size=2, max_size=8),
+    batch=st.integers(8, 512),
+)
+def test_balancer_properties(rates, batch):
+    plan = balance_batch(rates, batch)
+    assert plan.shares.sum() == batch
+    assert (plan.shares >= 0).all()
+    # never worse than uniform (up to integerization of one sample)
+    worst_int_slack = max(rates)
+    assert plan.makespan <= uniform_makespan(rates, batch) + worst_int_slack
+
+
+def test_advisor_plans():
+    cands = [SliceCandidate(chips=c, step_time_s=100.0 / c + 0.05)
+             for c in (8, 16, 32, 64, 128, 256)]
+    adv = ClusterAdvisor(cands, num_steps=1000, dollars_per_chip_hour=1.2)
+    p_cost = adv.with_cost_budget(budget_dollars=50.0)
+    assert p_cost.feasible
+    p_time = adv.with_time_budget(budget_seconds=2000.0)
+    assert p_time.feasible
+    assert p_time.recommended_m >= 64  # needs >=~64 chips for the deadline
+    p_both = adv.with_both_budgets(budget_dollars=1.0, budget_seconds=500.0)
+    assert not p_both.feasible and "budget" in p_both.reason.lower()

@@ -1,0 +1,97 @@
+"""Fault tolerance: atomic checkpoints, restart, elastic fleet re-planning."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ck
+from repro.train import optimizer as opt
+from repro.train.elastic import FleetState
+
+
+def _state():
+    params = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "b": jnp.ones((3,), jnp.bfloat16)}
+    return opt.init_state(params)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    ck.save(tmp_path, s, step=7, extra={"loss": 1.5})
+    s2, step, extra = ck.restore(tmp_path, s)
+    assert step == 7 and extra["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    s = _state()
+    ck.save(tmp_path, s, step=5)
+    # simulate a crash mid-save of step 9: arrays written, manifest missing
+    d = tmp_path / "step_00000009"
+    d.mkdir()
+    (d / "arrays.npz").write_bytes(b"corrupt")
+    assert ck.latest_step(tmp_path) == 5
+    _, step, _ = ck.restore(tmp_path, s)
+    assert step == 5
+
+
+def test_manager_keeps_last_k(tmp_path):
+    s = _state()
+    m = ck.CheckpointManager(tmp_path, every=1, keep=2)
+    for step in range(1, 6):
+        m.maybe_save(s, step)
+    steps = sorted(int(d.name.split("_")[1]) for d in tmp_path.glob("step_*"))
+    assert steps == [4, 5]
+
+
+def test_fleet_failure_and_replan():
+    f = FleetState.homogeneous(4, 1.0)
+    plan, alive = f.replan(40)
+    np.testing.assert_array_equal(plan.shares, [10, 10, 10, 10])
+    f.fail(2)
+    plan2, alive2 = f.replan(40)
+    assert len(alive2) == 3 and 2 not in alive2
+    assert plan2.shares.sum() == 40
+    f.recover(2, seconds_per_sample=1.0)
+    plan3, alive3 = f.replan(40)
+    assert len(alive3) == 4
+    assert f.generation == 2
+
+
+def test_straggler_detection_and_downweight():
+    f = FleetState.homogeneous(4, 1.0)
+    for _ in range(10):
+        f.observe(1, 3.0)   # worker 1 is consistently 3x slower
+        for i in (0, 2, 3):
+            f.observe(i, 1.0)
+    assert f.stragglers(threshold=1.5) == [1]
+    plan, alive = f.replan(90)
+    k = list(alive).index(1)
+    others = [plan.shares[i] for i in range(4) if i != k]
+    assert plan.shares[k] < min(others)
+    assert plan.makespan < plan.uniform_makespan
+
+
+def test_train_restart_from_checkpoint(tmp_path):
+    """End-to-end: train, kill, resume — the loss curve continues."""
+    from repro.configs import get_config
+    from repro.train.loop import TrainConfig, train
+
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    t1 = train(cfg, TrainConfig(steps=6, global_batch=4, seq_len=16,
+                                ckpt_dir=str(tmp_path), ckpt_every=3,
+                                log_every=0))
+    assert ck.latest_step(tmp_path) == 6
+    # resume: starts from step 6, runs to 10
+    t2 = train(cfg, TrainConfig(steps=10, global_batch=4, seq_len=16,
+                                ckpt_dir=str(tmp_path), ckpt_every=5,
+                                log_every=0))
+    assert t2["history"][0]["step"] == 7
+    assert t2["history"][-1]["step"] == 10

@@ -1,0 +1,140 @@
+"""DLT core: closed form, both LPs, paper constraint sets, paper numbers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dlt import (
+    InfeasibleError,
+    SystemSpec,
+    solve,
+    solve_single_source,
+    verify_schedule,
+)
+
+# ---------------------------------------------------------------------------
+# Sec 2 closed form
+# ---------------------------------------------------------------------------
+
+def test_single_source_closed_form_matches_eq1():
+    spec = SystemSpec(G=[0.3], R=[0.0], A=[1.0, 2.0, 4.0], J=50)
+    s = solve_single_source(spec, frontend=False)
+    # Eq 1: T_f = sum_{k<=i} beta_k G + beta_i A_i for every i
+    for i in range(3):
+        tf_i = s.beta[0, : i + 1].sum() * 0.3 + s.beta[0, i] * spec.A[i]
+        assert tf_i == pytest.approx(s.finish_time, rel=1e-9)
+    assert s.beta.sum() == pytest.approx(50, rel=1e-12)
+
+
+def test_single_source_closed_form_equals_lp():
+    spec = SystemSpec(G=[0.25], R=[0.0], A=[1.5, 2.5, 3.5, 6.0], J=10)
+    closed = solve_single_source(spec, frontend=False)
+    lp = solve(spec, frontend=False, solver="simplex")
+    assert closed.finish_time == pytest.approx(lp.finish_time, rel=1e-7)
+    np.testing.assert_allclose(closed.beta, lp.beta, rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# paper's published numbers
+# ---------------------------------------------------------------------------
+
+def test_paper_fig15_speedups():
+    G, R, A = [0.5] * 10, [0.0] * 10, [2.0] * 12
+    t1 = solve(SystemSpec(G=G[:1], R=R[:1], A=A, J=100), frontend=False).finish_time
+    for p, want in [(2, 1.59), (3, 1.90), (5, 2.21), (10, 2.49)]:
+        tp = solve(SystemSpec(G=G[:p], R=R[:p], A=A, J=100),
+                   frontend=False).finish_time
+        assert t1 / tp == pytest.approx(want, abs=0.015)
+
+
+def test_paper_sec6_costs_and_gradient():
+    A = np.round(np.arange(1.1, 3.01, 0.1), 10)
+    C = np.arange(29, 9, -1.0)
+    spec = SystemSpec(G=[0.5, 0.6], R=[2, 3], A=A, C=C, J=100)
+    tf, cost = {}, {}
+    for m in (4, 5, 6, 7):
+        s = solve(spec.subset_processors(m), frontend=True)
+        tf[m], cost[m] = s.finish_time, s.monetary_cost()
+    assert cost[6] == pytest.approx(3433.77, abs=0.05)
+    assert cost[7] == pytest.approx(3451.67, abs=0.05)
+    assert (tf[5] - tf[4]) / tf[4] == pytest.approx(-0.084, abs=0.002)
+    assert (tf[6] - tf[5]) / tf[5] == pytest.approx(-0.053, abs=0.002)
+
+
+# ---------------------------------------------------------------------------
+# structural invariants (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _make_spec(gr_pairs, a, j):
+    g = np.asarray([p[0] for p in gr_pairs])
+    r = np.asarray([p[1] for p in gr_pairs])
+    r = np.cumsum(r) - r[0]  # non-decreasing release times from offsets
+    return SystemSpec(G=g, R=r, A=np.asarray(a), J=j)
+
+
+spec_strategy = st.builds(
+    _make_spec,
+    st.lists(st.tuples(st.floats(0.05, 2.0), st.floats(0.0, 1.0)),
+             min_size=1, max_size=4),
+    st.lists(st.floats(0.2, 8.0), min_size=1, max_size=6),
+    st.floats(1.0, 200.0),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(spec=spec_strategy, frontend=st.booleans())
+def test_random_instances_solve_and_verify(spec, frontend):
+    try:
+        sched = solve(spec, frontend=frontend)
+    except InfeasibleError:
+        return  # release-time chain can make front-end LP infeasible: valid
+    bad = verify_schedule(sched)
+    assert bad == []
+    assert sched.beta.min() >= -1e-7
+    assert sched.beta.sum() == pytest.approx(spec.J, rel=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=spec_strategy)
+def test_makespan_monotone_in_processors(spec):
+    try:
+        full = solve(spec, frontend=False).finish_time
+    except InfeasibleError:
+        return
+    cspec = spec.canonical()[0]
+    if cspec.num_processors < 2:
+        return
+    fewer = solve(cspec.subset_processors(cspec.num_processors - 1),
+                  frontend=False, presorted=True).finish_time
+    assert full <= fewer * (1 + 1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(spec=spec_strategy)
+def test_own_simplex_matches_scipy_highs(spec):
+    scipy = pytest.importorskip("scipy")
+    del scipy
+    try:
+        a = solve(spec, frontend=True, solver="simplex").finish_time
+    except InfeasibleError:
+        with pytest.raises(InfeasibleError):
+            solve(spec, frontend=True, solver="highs")
+        return
+    b = solve(spec, frontend=True, solver="highs").finish_time
+    assert a == pytest.approx(b, rel=1e-6, abs=1e-8)
+
+
+def test_frontend_never_slower_than_nofrontend():
+    spec = SystemSpec(G=[0.3, 0.5], R=[0, 1], A=[1, 2, 3], J=42)
+    fe = solve(spec, frontend=True).finish_time
+    nofe = solve(spec, frontend=False).finish_time
+    assert fe <= nofe * (1 + 1e-9)
+
+
+def test_sorting_invariance():
+    """Canonicalization: scrambled node order yields the same makespan."""
+    spec = SystemSpec(G=[0.5, 0.2], R=[3, 0], A=[4, 2, 6, 3], J=77)
+    spec_sorted = SystemSpec(G=[0.2, 0.5], R=[0, 3], A=[2, 3, 4, 6], J=77)
+    a = solve(spec, frontend=False).finish_time
+    b = solve(spec_sorted, frontend=False).finish_time
+    assert a == pytest.approx(b, rel=1e-9)

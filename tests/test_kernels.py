@@ -1,0 +1,106 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles: shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.rglru_scan.ops import rglru
+from repro.kernels.rglru_scan.ref import rglru_reference
+from repro.kernels.rwkv6_scan.ops import wkv6
+from repro.kernels.rwkv6_scan.ref import wkv6_reference
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,K,D,window,block",
+    [
+        (1, 128, 4, 4, 64, None, 64),
+        (2, 256, 8, 2, 64, None, 128),
+        (2, 256, 8, 8, 32, 64, 64),
+        (1, 192, 4, 1, 32, 32, 64),   # MQA, S not a block multiple
+        (1, 96, 2, 2, 128, None, 128),  # S < block
+    ],
+)
+def test_flash_attention_sweep(dtype, B, S, H, K, D, window, block):
+    ks = jax.random.split(jax.random.PRNGKey(hash((B, S, H)) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=block, block_k=block, interpret=True)
+    tr = lambda t: jnp.swapaxes(t, 1, 2)
+    ref = tr(attention_reference(tr(q), tr(k), tr(v), causal=True,
+                                 window=window))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,S,N,chunk", [
+    (1, 2, 64, 32, 32),
+    (2, 3, 100, 64, 64),   # padded sequence
+    (1, 1, 256, 64, 64),
+])
+def test_wkv6_sweep(dtype, B, H, S, N, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    r = (jax.random.normal(ks[0], (B, S, H, N)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, H, N)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, S, H, N)) * 0.5).astype(dtype)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.5)
+                ).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, N)) * 0.5).astype(dtype)
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    y, sT = wkv6(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    tr = lambda t: jnp.swapaxes(t, 1, 2).astype(jnp.float32)
+    yr, sTr = wkv6_reference(tr(r), tr(k), tr(v), jnp.log(tr(w)), u, s0)
+    np.testing.assert_allclose(np.asarray(jnp.swapaxes(y, 1, 2)),
+                               np.asarray(yr), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sTr), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,W,chunk,bw", [
+    (2, 128, 512, 64, 256),
+    (1, 200, 640, 128, 512),  # padded in both dims
+    (3, 64, 128, 64, 128),
+])
+def test_rglru_sweep(dtype, B, S, W, chunk, bw):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    u = jax.random.normal(ks[0], (B, S, W), dtype)
+    la = (-jnp.exp(jax.random.normal(ks[1], (B, S, W)) * 0.3)).astype(dtype)
+    h0 = jax.random.normal(ks[2], (B, W), jnp.float32)
+    h, hT = rglru(u, la, h0, chunk=chunk, block_w=bw, interpret=True)
+    hr, hTr = rglru_reference(u.astype(jnp.float32), la.astype(jnp.float32),
+                              h0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hTr), **_tol(dtype))
+
+
+def test_wkv6_state_chaining():
+    """Splitting a sequence across two kernel calls == one call (streaming)."""
+    B, H, S, N = 1, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r = jax.random.normal(ks[0], (B, S, H, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, N)) * 0.5
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, N)) * 0.5))
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    y_full, sT_full = wkv6(r, k, v, w, u, s0, chunk=32, interpret=True)
+    half = S // 2
+    y1, s_mid = wkv6(r[:, :half], k[:, :half], v[:, :half], w[:, :half],
+                     u, s0, chunk=32, interpret=True)
+    y2, sT2 = wkv6(r[:, half:], k[:, half:], v[:, half:], w[:, half:],
+                   u, s_mid, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sT2), np.asarray(sT_full),
+                               rtol=1e-4, atol=1e-4)

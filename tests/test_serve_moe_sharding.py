@@ -1,0 +1,127 @@
+"""Serving engine, DLT request routing, MoE dispatch, sharding helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    param_pspecs,
+    sanitize_pspecs,
+    shard_count,
+)
+from repro.models import LM
+from repro.models.moe import moe_ffn, moe_params
+from repro.serve import Request, RouterStats, ServeEngine
+from repro.serve.engine import route_requests
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_engine_generates_tokens():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=3, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                    max_new_tokens=5, request_id=i) for i in range(3)]
+    outs = engine.generate(reqs)
+    assert len(outs) == 3
+    for o in outs:
+        assert o.shape == (5,)
+        assert (o >= 0).all() and (o < cfg.vocab_size).all()
+
+
+def test_engine_greedy_deterministic():
+    cfg = get_config("rwkv6-7b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=1, max_seq=32)
+    req = [Request(np.arange(6, dtype=np.int32), max_new_tokens=4)]
+    a = engine.generate(req)[0]
+    b = engine.generate(req)[0]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_route_requests_prefers_fast_replicas():
+    stats = RouterStats([0.001], [0.0], [0.05, 0.10, 0.20])
+    out = route_requests(stats, 40)
+    assert out["shares"].sum() == 40
+    assert out["shares"][0] > out["shares"][1] > out["shares"][2]
+    assert out["makespan"] <= out["uniform_makespan"] + 0.20
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch
+# ---------------------------------------------------------------------------
+
+def test_moe_group_invariance_without_drops():
+    p = moe_params(jax.random.PRNGKey(0), 32, 64, 8, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
+    kw = dict(num_experts=8, experts_per_token=2, act="swiglu",
+              cap_factor=16.0)
+    o1, _ = moe_ffn(x, p, num_groups=1, **kw)
+    o4, _ = moe_ffn(x, p, num_groups=4, **kw)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o4),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    p = moe_params(jax.random.PRNGKey(0), 32, 64, 4, "swiglu", jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32))
+    # tiny capacity: most tokens dropped -> output far from no-drop output
+    o_small, _ = moe_ffn(x, p, num_experts=4, experts_per_token=2,
+                         act="swiglu", cap_factor=0.1, num_groups=1)
+    o_big, _ = moe_ffn(x, p, num_experts=4, experts_per_token=2,
+                       act="swiglu", cap_factor=16.0, num_groups=1)
+    assert float(jnp.max(jnp.abs(o_small - o_big))) > 1e-3
+
+
+def test_moe_aux_loss_balanced_router_is_low():
+    # uniform router probabilities -> aux ~ 1.0 (its minimum is 1)
+    p = moe_params(jax.random.PRNGKey(3), 16, 32, 4, "swiglu", jnp.float32)
+    p = dict(p, w_router=jnp.zeros((16, 4), jnp.float32))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16))
+    _, aux = moe_ffn(x, p, num_experts=4, experts_per_token=2, act="swiglu")
+    assert 0.9 <= float(aux) <= 1.3
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def test_param_pspecs_rules():
+    cfg = get_config("llama3-8b").reduced()
+    model = LM(cfg)
+    shapes = model.init_abstract()
+    specs = param_pspecs(shapes, DEFAULT_RULES)
+    blk = specs["blocks"]["b0"]
+    assert blk["attn"]["wq"] == P(None, "data", "model")
+    assert blk["attn"]["wo"] == P(None, "model", "data")
+    assert blk["ffn"]["w_gate"] == P(None, "data", "model")
+    assert specs["embedding"] == P("model", "data")
+    assert blk["norm1"]["scale"] == P()
+
+
+def test_sanitize_drops_nondivisible():
+    import jax.sharding as shd
+    mesh = jax.make_mesh((1,), ("model",))
+
+    class FakeMesh:
+        shape = {"model": 16, "data": 16}
+    shapes = {"a": jax.ShapeDtypeStruct((51865, 64), jnp.float32),
+              "b": jax.ShapeDtypeStruct((256, 64), jnp.float32)}
+    pspecs = {"a": P("model", None), "b": P("model", None)}
+    out = sanitize_pspecs(pspecs, shapes, FakeMesh)
+    assert out["a"] == P(None, None)      # 51865 % 16 != 0 -> replicated
+    assert out["b"] == P("model", None)   # 256 % 16 == 0 -> kept
+
+
+def test_shard_count_outside_context():
+    assert shard_count("tokens") == 1

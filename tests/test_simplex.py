@@ -1,0 +1,55 @@
+"""Self-contained simplex vs scipy HiGHS on random LPs + edge cases."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dlt.simplex import linprog_simplex
+
+
+def test_known_lp():
+    # min -x - y  s.t. x + y <= 1, x, y >= 0 -> optimum -1 on the segment
+    res = linprog_simplex(c=[-1, -1], A_ub=[[1, 1]], b_ub=[1])
+    assert res.success
+    assert res.fun == pytest.approx(-1.0, abs=1e-9)
+
+
+def test_infeasible_detected():
+    # x <= -1 with x >= 0
+    res = linprog_simplex(c=[1.0], A_ub=[[1.0]], b_ub=[-1.0])
+    assert res.status == 2
+
+
+def test_equality_constraints():
+    # min x + 2y s.t. x + y = 3 -> x=3, y=0
+    res = linprog_simplex(c=[1, 2], A_eq=[[1, 1]], b_eq=[3])
+    assert res.success
+    assert res.x[0] == pytest.approx(3, abs=1e-9)
+    assert res.fun == pytest.approx(3, abs=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(2, 6),
+    m=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_random_vs_scipy(n, m, seed):
+    scipy_opt = pytest.importorskip("scipy.optimize")
+    rng = np.random.default_rng(seed)
+    c = rng.normal(size=n)
+    A_ub = rng.normal(size=(m, n))
+    x0 = rng.uniform(0.1, 2.0, size=n)     # a strictly feasible point
+    b_ub = A_ub @ x0 + rng.uniform(0.1, 1.0, size=m)
+    # bound the polytope so the LP is never unbounded
+    A_ub = np.vstack([A_ub, np.eye(n)])
+    b_ub = np.concatenate([b_ub, np.full(n, 10.0)])
+
+    ours = linprog_simplex(c, A_ub=A_ub, b_ub=b_ub)
+    ref = scipy_opt.linprog(c, A_ub=A_ub, b_ub=b_ub, method="highs")
+    assert ours.success == ref.success
+    if ref.success:
+        assert ours.fun == pytest.approx(ref.fun, rel=1e-6, abs=1e-7)
+        # feasibility of our solution
+        assert np.all(A_ub @ ours.x <= b_ub + 1e-7)
+        assert np.all(ours.x >= -1e-9)

@@ -1,0 +1,108 @@
+"""Batched vs scalar DLT solving throughput (scenarios/second).
+
+Measures end-to-end ``batched_solve`` (stacking + jitted vmapped
+interior-point + vectorized verification + oracle fallback) against the
+scalar loop the repo's consumers used before the rewire
+(``solve()`` per scenario, simplex + per-scenario verification), across
+LP families of increasing size.  The jit compile is warmed before timing
+— a production sweep service pays it once per family shape.
+
+Run:  PYTHONPATH=src python -m benchmarks.batched_solve_bench
+      PYTHONPATH=src python -m benchmarks.batched_solve_bench --smoke
+The --smoke mode is a seconds-fast parity + speedup sanity pass used by
+scripts/check.sh.
+
+Acceptance target: >= 10x scenarios/sec over the scalar loop at batch
+>= 256 (met by the small "cost-query" family on 2 CPU cores; larger
+families shift work from Python overhead to BLAS where the batched path's
+margin depends on core count).
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.dlt import SystemSpec, batched_solve, solve
+from .common import check, table
+
+FAMILIES = [
+    # label, sources, processors, frontend
+    ("cost-query  N=2 M=5 fe", 2, 5, True),
+    ("planner     N=3 M=8 fe", 3, 8, True),
+    ("nofrontend  N=2 M=4", 2, 4, False),
+]
+
+
+def _specs(rng, count, n, m):
+    return [
+        SystemSpec(
+            G=rng.uniform(0.1, 1.0, n),
+            R=np.sort(rng.uniform(0.0, 2.0, n)),
+            A=rng.uniform(0.5, 4.0, m),
+            J=float(rng.uniform(50.0, 200.0)),
+        )
+        for _ in range(count)
+    ]
+
+
+def _time_batched(specs, frontend):
+    t0 = time.perf_counter()
+    sol = batched_solve(specs, frontend=frontend)
+    return time.perf_counter() - t0, sol
+
+
+def _time_scalar(specs, frontend, sample):
+    sample = min(sample, len(specs))
+    t0 = time.perf_counter()
+    for sp in specs[:sample]:
+        solve(sp, frontend=frontend)
+    return (time.perf_counter() - t0) / sample * len(specs)
+
+
+def run(batches=(256, 1024), scalar_sample=128, smoke=False):
+    r = check("batched_solve_bench")
+    rng = np.random.default_rng(0)
+    families = FAMILIES[:1] if smoke else FAMILIES
+    batches = batches if not smoke else (256,)
+
+    rows = []
+    best_at_256 = 0.0
+    for label, n, m, fe in families:
+        for B in batches:
+            specs = _specs(rng, B, n, m)
+            _time_batched(specs[: min(B, 32)], fe)  # warm the jit cache
+            _time_batched(specs, fe)                # warm this batch shape
+            tb, sol = _time_batched(specs, fe)
+            ts = _time_scalar(specs, fe, scalar_sample)
+            speedup = ts / tb
+            rows.append([label, B, round(B / ts, 1), round(B / tb, 1),
+                         f"{speedup:.1f}x"])
+            if B >= 256:
+                best_at_256 = max(best_at_256, speedup)
+            assert np.all(sol.status == 0), "bench family must be feasible"
+
+    table(["family", "batch", "scalar/s", "batched/s", "speedup"], rows,
+          fmt="{:>22}")
+    r.check("best speedup at batch >= 256 is >= 10x",
+            bool(best_at_256 >= 10.0), True, rtol=0)
+    r.note("best speedup at batch >= 256", f"{best_at_256:.1f}x")
+
+    if smoke:
+        # fast parity spot-check rides along with the smoke bench
+        probe = _specs(rng, 16, 2, 5)
+        sol = batched_solve(probe, frontend=True)
+        refs = [solve(sp, frontend=True).finish_time for sp in probe]
+        worst = max(
+            abs(sol.finish_time[k] - ref) / max(1.0, ref)
+            for k, ref in enumerate(refs))
+        r.check("smoke parity vs scalar (rel err < 1e-6)",
+                bool(worst < 1e-6), True, rtol=0)
+    return r
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    raise SystemExit(0 if run(smoke=smoke).passed else 1)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dlt import SystemSpec, solve
+from repro.core.dlt import SystemSpec, speedup_grid
 from .common import check, table
 
 PAPER = {2: 1.59, 3: 1.90, 5: 2.21, 10: 2.49}
@@ -18,25 +18,15 @@ PAPER = {2: 1.59, 3: 1.90, 5: 2.21, 10: 2.49}
 
 def run():
     r = check("fig15_speedup")
-    G = [0.5] * 10
-    R = [0.0] * 10
-    A = [2.0] * 18
+    spec = SystemSpec(G=[0.5] * 10, R=[0.0] * 10, A=[2.0] * 18, J=100)
+    ms = (4, 8, 12, 16, 18)
+    ps = (2, 3, 5, 10)
+    # Eq 16 over the whole grid; one batched vmapped solve per source count
+    grid = speedup_grid(spec, source_counts=(1,) + ps, processor_counts=ms,
+                        frontend=False)
 
-    def tf(p, m):
-        return solve(SystemSpec(G=G[:p], R=R[:p], A=A[:m], J=100),
-                     frontend=False).finish_time
-
-    rows = []
-    speeds_12 = {}
-    for m in (4, 8, 12, 16, 18):
-        t1 = tf(1, m)
-        row = [m]
-        for p in (2, 3, 5, 10):
-            s = t1 / tf(p, m)
-            row.append(round(s, 3))
-            if m == 12:
-                speeds_12[p] = s
-        rows.append(row)
+    rows = [[m] + [round(grid.at(p, m), 3) for p in ps] for m in ms]
+    speeds_12 = {p: grid.at(p, 12) for p in ps}
     table(["m", "S(2src)", "S(3src)", "S(5src)", "S(10src)"], rows)
 
     for p, want in PAPER.items():

@@ -15,7 +15,10 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
+import numpy as np
+
 from repro.core.advisor import ClusterAdvisor, SliceCandidate
+from repro.core.dlt import SystemSpec
 
 
 def load_step_time(arch="llama3-8b", shape="train_4k"):
@@ -70,6 +73,25 @@ def main():
     show("impossible pair",
          adv.with_both_budgets(budget_dollars=0.5 * min_cost,
                                budget_seconds=0.9 * min_time))
+
+    # the same three questions for an explicit DLT system (paper Table 5);
+    # the sweep over all processor prefixes is one batched vmapped solve
+    dlt_spec = SystemSpec(
+        G=[0.5, 0.6], R=[2, 3],
+        A=np.round(np.arange(1.1, 3.01, 0.1), 10),
+        C=np.arange(29, 9, -1.0), J=100)
+    adv2 = ClusterAdvisor.from_system_spec(dlt_spec, frontend=True)
+
+    def show_dlt(label, p):  # DLT sweeps: m = processors, T_f in seconds
+        if p.feasible:
+            print(f"  {label:22s} -> {p.recommended_m} processors "
+                  f"(T_f={p.finish_time:.2f}s, ${p.cost:,.2f}) [{p.reason}]")
+        else:
+            print(f"  {label:22s} -> INFEASIBLE: {p.reason}")
+
+    print("\n== paper Table 5 system via the batched sweep ==")
+    show_dlt("cost <= $3450", adv2.with_cost_budget(budget_dollars=3450.0))
+    show_dlt("time <= 32s", adv2.with_time_budget(budget_seconds=32.0))
 
 
 if __name__ == "__main__":

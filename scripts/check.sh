@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification + fast batched-engine smoke.
+#
+# Usage:  bash scripts/check.sh
+#
+# 1. the full offline test suite (works without hypothesis/scipy — the
+#    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
+# 2. a seconds-fast batched-vs-scalar parity + throughput smoke
+#    (benchmarks/batched_solve_bench.py --smoke).
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo
+echo "== batched engine smoke (parity + speedup) =="
+python -m benchmarks.batched_solve_bench --smoke
+
+echo
+echo "ALL CHECKS PASSED"

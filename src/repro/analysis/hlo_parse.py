@@ -89,8 +89,17 @@ class Instr:
     attrs: str
 
 
+_NAME_RE = re.compile(r"^[\w.\-]+$")
+
+
 def _split_operands(rest: str) -> tuple[list[str], str]:
-    """rest starts right after the opening '('; returns (operand names, attrs)."""
+    """rest starts right after the opening '('; returns (operand names, attrs).
+
+    Scheduled modules print operands WITH their type, e.g.
+    ``dot(f32[4,16]{1,0} %lhs, f32[16,128]{1,0} %rhs)``, and tuple-typed
+    operands contain commas inside the type.  Keep only the trailing
+    ``%name`` token of each comma piece and drop type fragments.
+    """
     depth = 1
     for i, ch in enumerate(rest):
         if ch == "(":
@@ -99,8 +108,14 @@ def _split_operands(rest: str) -> tuple[list[str], str]:
             depth -= 1
             if depth == 0:
                 inner, attrs = rest[:i], rest[i + 1:]
-                ops = [t.strip().lstrip("%") for t in inner.split(",")]
-                ops = [o for o in ops if o and not o[0].isdigit()]
+                ops = []
+                for piece in inner.split(","):
+                    toks = piece.split()
+                    if not toks:
+                        continue
+                    tok = toks[-1].lstrip("%")
+                    if _NAME_RE.match(tok) and not tok[0].isdigit():
+                        ops.append(tok)
                 return ops, attrs
     return [], rest
 

@@ -22,7 +22,9 @@ from .dlt.cost import (
     plan_with_both_budgets,
     plan_with_cost_budget,
     plan_with_time_budget,
+    sweep_processors,
 )
+from .dlt.types import SystemSpec
 
 __all__ = ["SliceCandidate", "ClusterAdvisor", "TPU_V5E_DOLLARS_PER_CHIP_HOUR"]
 
@@ -41,10 +43,22 @@ class ClusterAdvisor:
 
     def __init__(
         self,
-        candidates: Sequence[SliceCandidate],
-        num_steps: int,
+        candidates: "Sequence[SliceCandidate] | None" = None,
+        num_steps: "int | None" = None,
         dollars_per_chip_hour: float = TPU_V5E_DOLLARS_PER_CHIP_HOUR,
+        *,
+        sweep: "ProcessorSweep | None" = None,
     ):
+        if (candidates is None) == (sweep is None):
+            raise ValueError("provide either candidates (+ num_steps) or a "
+                             "prebuilt sweep, not both")
+        if sweep is not None:
+            self.sweep = sweep
+            self.num_steps = num_steps
+            self.rate = dollars_per_chip_hour
+            return
+        if num_steps is None:
+            raise ValueError("num_steps is required with candidates")
         cands = sorted(candidates, key=lambda c: c.chips)
         chips = np.asarray([c.chips for c in cands], dtype=np.int64)
         step_t = np.asarray([c.step_time_s for c in cands])
@@ -54,6 +68,24 @@ class ClusterAdvisor:
         self.sweep = ProcessorSweep(m=chips, finish_time=job_time, cost=cost)
         self.num_steps = num_steps
         self.rate = dollars_per_chip_hour
+
+    @classmethod
+    def from_system_spec(
+        cls,
+        spec: SystemSpec,
+        frontend: bool = True,
+        m_max: "int | None" = None,
+        engine: str = "batched",
+    ) -> "ClusterAdvisor":
+        """Advisor over an explicit DLT system instead of slice candidates.
+
+        Runs the Sec 6 processor sweep (all prefixes of the canonical
+        processor list, one jitted vmapped batch by default) and exposes
+        the same three budget planners over it.  ``spec`` needs ``C`` for
+        the cost-based plans.
+        """
+        return cls(sweep=sweep_processors(
+            spec, frontend=frontend, m_max=m_max, engine=engine))
 
     def gradient(self) -> np.ndarray:
         """Eq 18 over slice sizes."""

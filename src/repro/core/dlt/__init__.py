@@ -6,8 +6,18 @@ Public API:
     solve_single_source                            (Sec 2 closed form)
     monetary_cost, sweep_processors, plan_*        (Sec 6 trade-offs)
     speedup_grid                                   (Sec 5 Amdahl analysis)
+    batched_solve, BatchedSystemSpec, ...          (batched vmap engine)
 """
 
+from .batched import (
+    STATUS_INFEASIBLE,
+    STATUS_MAXITER,
+    STATUS_OPTIMAL,
+    BatchedSolution,
+    BatchedSystemSpec,
+    batched_solve,
+    solve_lp_batch,
+)
 from .cost import (
     ProcessorSweep,
     TradeoffPlan,
@@ -29,6 +39,13 @@ __all__ = [
     "Schedule",
     "InfeasibleError",
     "solve",
+    "batched_solve",
+    "solve_lp_batch",
+    "BatchedSystemSpec",
+    "BatchedSolution",
+    "STATUS_OPTIMAL",
+    "STATUS_MAXITER",
+    "STATUS_INFEASIBLE",
     "verify_schedule",
     "solve_single_source",
     "finish_time_single_source",

@@ -1,0 +1,746 @@
+"""Batched, vmap-able DLT schedule solving engine (pure JAX).
+
+The paper's Sec 5-6 analyses (speedup grids, cost sweeps, budget planning)
+are many-scenario computations: thousands of small LPs that differ only in
+their data ``(G, R, A, C, J)`` and sizes ``(N, M)``.  The scalar path solves
+them one at a time through a NumPy simplex; this module solves a whole
+family in ONE jitted call:
+
+1. :class:`BatchedSystemSpec` stacks canonically-sorted specs into padded
+   ``(B, N_max)`` / ``(B, M_max)`` arrays with per-scenario size masks.
+2. :func:`build_standard_form_batch` embeds every scenario's Sec 3.1 / 3.2
+   LP into one shared, static LP shape — fully vectorized over the batch.
+   Padded beta/TS/TF columns become zero-column variables with objective
+   ``+1`` (the optimum pins them to 0 without touching the real program);
+   padded inequality rows read ``slack = 1`` and padded equality rows
+   ``artificial = 1``, so every lane of the stacked ``(c, A, b)`` tensors
+   is a well-posed LP of identical shape.
+3. :func:`solve_lp_batch` runs a fixed-budget primal-dual interior-point
+   method on the homogeneous self-dual embedding (Mehrotra
+   predictor-corrector, one Cholesky factorization per iteration) under
+   ``jit(vmap(...))`` across the batch axis.  A batched ``while_loop``
+   exits as soon as every lane is decided; residual-based status flags
+   distinguish optimal / iteration-budget / infeasible per scenario — no
+   data-dependent Python control flow anywhere.
+4. :func:`batched_solve` wraps it end to end: vectorized re-checks of the
+   paper constraint sets (`verify_frontend_batch` mirrors the scalar NumPy
+   oracle), and scenarios the IPM could not certify fall back to the
+   scalar simplex path so the returned batch is always trustworthy.
+
+The interior-point solution is an analytic-center optimum: finish times
+(the LP objective) match the simplex vertex to solver tolerance, while
+``beta`` may differ on degenerate optimal faces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .solve import solve
+from .types import InfeasibleError, Schedule, SystemSpec
+
+__all__ = [
+    "BatchedSystemSpec",
+    "BatchedSolution",
+    "batched_solve",
+    "solve_lp_batch",
+    "build_standard_form_batch",
+    "verify_frontend_batch",
+    "verify_nofrontend_batch",
+    "STATUS_OPTIMAL",
+    "STATUS_MAXITER",
+    "STATUS_INFEASIBLE",
+]
+
+# Status codes align with simplex.LPResult.status.
+STATUS_OPTIMAL = 0
+STATUS_MAXITER = 1
+STATUS_INFEASIBLE = 2
+
+
+# ---------------------------------------------------------------------------
+# Stacking layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSystemSpec:
+    """A stack of canonically-sorted system specs, padded to (N_max, M_max).
+
+    Padding values are inert: the LP embedding masks padded rows and
+    columns exactly, so they never influence a scenario's program.
+    """
+
+    G: np.ndarray            # (B, N_max)
+    R: np.ndarray            # (B, N_max)
+    A: np.ndarray            # (B, M_max)
+    J: np.ndarray            # (B,)
+    C: Optional[np.ndarray]  # (B, M_max) or None
+    n_sources: np.ndarray    # (B,) actual N per scenario
+    n_procs: np.ndarray      # (B,) actual M per scenario
+    has_cost: Optional[np.ndarray] = None  # (B,) True where the spec had C
+
+    @property
+    def batch(self) -> int:
+        return int(self.J.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(self.G.shape[1])
+
+    @property
+    def m_max(self) -> int:
+        return int(self.A.shape[1])
+
+    @property
+    def source_mask(self) -> np.ndarray:
+        return np.arange(self.n_max)[None, :] < self.n_sources[:, None]
+
+    @property
+    def proc_mask(self) -> np.ndarray:
+        return np.arange(self.m_max)[None, :] < self.n_procs[:, None]
+
+    @property
+    def cell_mask(self) -> np.ndarray:
+        """(B, N_max, M_max) — True on real (source, processor) cells."""
+        return self.source_mask[:, :, None] & self.proc_mask[:, None, :]
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[SystemSpec],
+                   presorted: bool = False) -> "BatchedSystemSpec":
+        if not len(specs):
+            raise ValueError("empty spec batch")
+        cspecs = [s if presorted else s.canonical()[0] for s in specs]
+        B = len(cspecs)
+        Nmax = max(s.num_sources for s in cspecs)
+        Mmax = max(s.num_processors for s in cspecs)
+        G = np.ones((B, Nmax))
+        R = np.zeros((B, Nmax))
+        A = np.ones((B, Mmax))
+        J = np.empty(B)
+        any_c = any(s.C is not None for s in cspecs)
+        C = np.zeros((B, Mmax)) if any_c else None
+        has_c = np.zeros(B, dtype=bool)
+        ns = np.empty(B, dtype=np.int64)
+        ms = np.empty(B, dtype=np.int64)
+        for k, s in enumerate(cspecs):
+            n, m = s.num_sources, s.num_processors
+            G[k, :n], R[k, :n], A[k, :m], J[k] = s.G, s.R, s.A, s.J
+            if s.C is not None:
+                C[k, :m] = s.C
+                has_c[k] = True
+            ns[k], ms[k] = n, m
+        return cls(G=G, R=R, A=A, J=J, C=C, n_sources=ns, n_procs=ms,
+                   has_cost=has_c)
+
+    def _lane_has_cost(self, k: int) -> bool:
+        if self.C is None:
+            return False
+        return bool(self.has_cost[k]) if self.has_cost is not None else True
+
+    def scenario(self, k: int) -> SystemSpec:
+        """The k-th scenario as a scalar (already canonical) SystemSpec."""
+        n, m = int(self.n_sources[k]), int(self.n_procs[k])
+        return SystemSpec(
+            G=self.G[k, :n], R=self.R[k, :n], A=self.A[k, :m],
+            J=float(self.J[k]),
+            C=self.C[k, :m] if self._lane_has_cost(k) else None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Vectorized padded LP embedding
+# ---------------------------------------------------------------------------
+
+def _family_dims(Nmax: int, Mmax: int, frontend: bool):
+    """Static (nv, n_ub, n_eq) of the padded LP family."""
+    if frontend:
+        nv = Nmax * Mmax + 1
+        n_ub = (Nmax - 1) + (Nmax - 1) * (Mmax - 1) + Mmax
+        n_eq = 1
+    else:
+        nv = 3 * Nmax * Mmax + 1
+        n_ub = ((Nmax - 1) * Mmax + Nmax * (Mmax - 1)
+                + 2 * (Nmax - 1) + Mmax)
+        n_eq = Nmax * Mmax + 2
+    return nv, n_ub, n_eq
+
+
+def _frontend_rows(bs: BatchedSystemSpec):
+    """Sec 3.1 LP rows (Eqs 3-6), batched over B with row/column masking."""
+    B, N, M = bs.batch, bs.n_max, bs.m_max
+    G, R, A, J = bs.G, bs.R, bs.A, bs.J
+    ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
+    nv, n_ub, _ = _family_dims(N, M, True)
+    tf = N * M
+
+    A_ub = np.zeros((B, n_ub, nv))
+    b_ub = np.zeros((B, n_ub))
+
+    # (Eq 3)  -beta_{i,1} A_1 <= R_i - R_{i+1},  rows [0, N-1)
+    if N > 1:
+        i3 = np.arange(N - 1)
+        act3 = (i3[None, :] + 1) < ns
+        A_ub[:, i3, i3 * M] = np.where(act3, -A[:, :1], 0.0)
+        b_ub[:, i3] = np.where(act3, R[:, :-1] - R[:, 1:], 1.0)
+
+    # (Eq 4)  beta_{i,j}(A_j - G_i) + beta_{i+1,j} G_{i+1}
+    #         - beta_{i,j+1} A_{j+1} <= 0,  rows [N-1, N-1 + (N-1)(M-1))
+    o4 = N - 1
+    if N > 1 and M > 1:
+        ii = np.repeat(np.arange(N - 1), M - 1)
+        jj = np.tile(np.arange(M - 1), N - 1)
+        act4 = ((ii[None, :] + 1) < ns) & ((jj[None, :] + 1) < ms)
+        r4 = o4 + np.arange(ii.size)
+        A_ub[:, r4, ii * M + jj] = np.where(act4, A[:, jj] - G[:, ii], 0.0)
+        A_ub[:, r4, (ii + 1) * M + jj] = np.where(act4, G[:, ii + 1], 0.0)
+        A_ub[:, r4, ii * M + jj + 1] = np.where(act4, -A[:, jj + 1], 0.0)
+        b_ub[:, r4] = np.where(act4, 0.0, 1.0)
+
+    # (Eq 5)  sum_{k<j} beta_{1,k} G_1 + A_j sum_i beta_{i,j} - T_f <= -R_1
+    o5 = (N - 1) + (N - 1) * (M - 1)
+    jc = np.arange(M)
+    act5 = jc[None, :] < ms
+    tri = (jc[:, None] > jc[None, :]).astype(float)       # (row j, col k<j)
+    A_ub[:, o5: o5 + M, 0:M] = G[:, 0, None, None] * tri[None]
+    rows = np.repeat(jc, N)
+    cols = np.tile(np.arange(N), M) * M + np.repeat(jc, N)
+    A_ub[:, o5 + rows, cols] = A[:, np.repeat(jc, N)]
+    A_ub[:, o5 + jc, tf] = -1.0
+    A_ub[:, o5: o5 + M] *= act5[:, :, None]
+    b_ub[:, o5 + jc] = np.where(act5, -R[:, :1], 1.0)
+
+    # (Eq 6)  sum beta = J  (padded columns masked out later)
+    A_eq = np.zeros((B, 1, nv))
+    A_eq[:, 0, :tf] = 1.0
+    b_eq = J[:, None].copy()
+    eq_active = np.ones((B, 1), dtype=bool)
+    return A_ub, b_ub, A_eq, b_eq, eq_active
+
+
+def _nofrontend_rows(bs: BatchedSystemSpec):
+    """Sec 3.2 LP rows (Eqs 7-14), batched over B with row/column masking."""
+    B, N, M = bs.batch, bs.n_max, bs.m_max
+    G, R, A, J = bs.G, bs.R, bs.A, bs.J
+    ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
+    nm = N * M
+    nv, n_ub, n_eq = _family_dims(N, M, False)
+    tf = 3 * nm
+    cell = bs.cell_mask.reshape(B, nm)
+
+    def b_(i, j):
+        return i * M + j
+
+    def ts(i, j):
+        return nm + i * M + j
+
+    def tfn(i, j):
+        return 2 * nm + i * M + j
+
+    A_ub = np.zeros((B, n_ub, nv))
+    b_ub = np.zeros((B, n_ub))
+
+    # (Eq 8)  TF_{i,j} - TS_{i+1,j} <= 0,  (N-1)*M rows
+    o8 = 0
+    if N > 1:
+        ii = np.repeat(np.arange(N - 1), M)
+        jj = np.tile(np.arange(M), N - 1)
+        act = ((ii[None, :] + 1) < ns) & (jj[None, :] < ms)
+        r = o8 + np.arange(ii.size)
+        A_ub[:, r, tfn(ii, jj)] = np.where(act, 1.0, 0.0)
+        A_ub[:, r, ts(ii + 1, jj)] = np.where(act, -1.0, 0.0)
+        b_ub[:, r] = np.where(act, 0.0, 1.0)
+
+    # (Eq 9)  TF_{i,j} - TS_{i,j+1} <= 0,  N*(M-1) rows
+    o9 = (N - 1) * M
+    if M > 1:
+        ii = np.repeat(np.arange(N), M - 1)
+        jj = np.tile(np.arange(M - 1), N)
+        act = (ii[None, :] < ns) & ((jj[None, :] + 1) < ms)
+        r = o9 + np.arange(ii.size)
+        A_ub[:, r, tfn(ii, jj)] = np.where(act, 1.0, 0.0)
+        A_ub[:, r, ts(ii, jj + 1)] = np.where(act, -1.0, 0.0)
+        b_ub[:, r] = np.where(act, 0.0, 1.0)
+
+    # (Eq 11) -TS_{i,1} <= -R_i  and  (Eq 12) -TF_{i-1,1} <= -R_i, i=2..N
+    o11 = o9 + N * (M - 1)
+    o12 = o11 + (N - 1)
+    if N > 1:
+        i1 = np.arange(1, N)
+        act = i1[None, :] < ns
+        r11 = o11 + np.arange(N - 1)
+        A_ub[:, r11, ts(i1, 0)] = np.where(act, -1.0, 0.0)
+        b_ub[:, r11] = np.where(act, -R[:, 1:], 1.0)
+        r12 = o12 + np.arange(N - 1)
+        A_ub[:, r12, tfn(i1 - 1, 0)] = np.where(act, -1.0, 0.0)
+        b_ub[:, r12] = np.where(act, -R[:, 1:], 1.0)
+
+    # (Eq 13) TF_{N,j} + A_j sum_i beta_{i,j} - T_f <= 0  (N = per-scenario!)
+    o13 = o12 + (N - 1)
+    jc = np.arange(M)
+    act13 = jc[None, :] < ms
+    rows = np.repeat(jc, N)
+    cols = b_(np.tile(np.arange(N), M), np.repeat(jc, N))
+    A_ub[:, o13 + rows, cols] = A[:, np.repeat(jc, N)]
+    batch_ix = np.arange(B)[:, None]
+    last_tf_col = tfn(bs.n_sources[:, None] - 1, jc[None, :])  # (B, M)
+    A_ub[batch_ix, o13 + jc[None, :], last_tf_col] = 1.0
+    A_ub[:, o13 + jc, tf] = -1.0
+    A_ub[:, o13: o13 + M] *= act13[:, :, None]
+    b_ub[:, o13 + jc] = np.where(act13, 0.0, 1.0)
+
+    # equality rows: (Eq 7) per cell, then (Eq 10), (Eq 14)
+    A_eq = np.zeros((B, n_eq, nv))
+    b_eq = np.zeros((B, n_eq))
+    eq_active = np.ones((B, n_eq), dtype=bool)
+
+    ii = np.repeat(np.arange(N), M)
+    jj = np.tile(np.arange(M), N)
+    r7 = np.arange(nm)
+    act7 = cell
+    A_eq[:, r7, tfn(ii, jj)] = np.where(act7, 1.0, 0.0)
+    A_eq[:, r7, ts(ii, jj)] = np.where(act7, -1.0, 0.0)
+    A_eq[:, r7, b_(ii, jj)] = np.where(act7, -G[:, ii], 0.0)
+    eq_active[:, r7] = act7
+
+    A_eq[:, nm, ts(0, 0)] = 1.0          # (Eq 10) TS_{1,1} = R_1
+    b_eq[:, nm] = R[:, 0]
+    A_eq[:, nm + 1, :nm] = 1.0           # (Eq 14) sum beta = J
+    b_eq[:, nm + 1] = J
+    return A_ub, b_ub, A_eq, b_eq, eq_active
+
+
+def build_standard_form_batch(bs: BatchedSystemSpec, frontend: bool):
+    """Stacked standard-form LPs:  min c'z  s.t.  A z = b, z >= 0.
+
+    z = [lp_vars (nv) | ub slacks (n_ub) | eq artificials (n_eq)] per lane.
+    Padded LP variables get a zero column and objective ``+1`` (optimum 0);
+    padded ub rows read ``slack = 1``; padded eq rows ``artificial = 1``;
+    artificials of REAL eq rows are themselves masked variables.  Returns
+    (c (B, n), A (B, m, n), b (B, m)).
+    """
+    B, N, M = bs.batch, bs.n_max, bs.m_max
+    nv, n_ub, n_eq = _family_dims(N, M, frontend)
+    rows = _frontend_rows(bs) if frontend else _nofrontend_rows(bs)
+    A_ub, b_ub, A_eq, b_eq, eq_active = rows
+
+    # column mask: real beta/TS/TF cells + T_f
+    cell = bs.cell_mask.reshape(B, N * M)
+    blocks = 1 if frontend else 3
+    colmask = np.concatenate(
+        [np.tile(cell, (1, blocks)), np.ones((B, 1), dtype=bool)], axis=1)
+    A_ub = A_ub * colmask[:, None, :]
+    A_eq = A_eq * colmask[:, None, :]
+
+    n_std = nv + n_ub + n_eq
+    mrows = n_ub + n_eq
+    A = np.zeros((B, mrows, n_std))
+    A[:, :n_ub, :nv] = A_ub
+    A[:, :n_ub, nv: nv + n_ub] = np.eye(n_ub)[None]
+    A[:, n_ub:, :nv] = A_eq
+    # artificial columns live only on padded eq rows (rhs 1)
+    r_eq = np.arange(n_eq)
+    art = np.where(eq_active, 0.0, 1.0)
+    A[:, n_ub + r_eq, nv + n_ub + r_eq] = art
+    b = np.concatenate([b_ub, np.where(eq_active, b_eq, 1.0)], axis=1)
+
+    c = np.zeros((B, n_std))
+    c[:, nv - 1] = 1.0                      # T_f (last LP variable)
+    masked_vars = ~colmask
+    masked_vars[:, nv - 1] = False
+    c[:, :nv][masked_vars] = 1.0
+    c[:, nv + n_ub:][eq_active] = 1.0       # artificials of real eq rows
+    return c, A, b
+
+
+# ---------------------------------------------------------------------------
+# Fixed-budget interior-point LP solver (homogeneous self-dual embedding)
+# ---------------------------------------------------------------------------
+
+def _hsde_ipm(c, A, b, max_iter: int, tol: float):
+    """min c'x s.t. Ax=b, x>=0 via Mehrotra predictor-corrector on the HSDE.
+
+    Shape-static: a while_loop capped at ``max_iter`` iterations that (under
+    vmap) exits once every lane is decided.  Returns (x, obj, status, iters)
+    where x is the primal solution (x/tau).  HSDE certificates make
+    infeasibility detection residual-based: the embedding is always
+    feasible and converges either to tau>0 (optimum) or tau->0 with
+    kappa>0 (primal or dual infeasible).
+    """
+    n = c.shape[0]
+    m = b.shape[0]
+    nb = 1.0 + jnp.linalg.norm(b)
+    nc = 1.0 + jnp.linalg.norm(c)
+    mu0 = 1.0  # x = e, s = e, tau = kappa = 1
+
+    def classify(x, y, s, tau, kappa):
+        mu = (x @ s + tau * kappa) / (n + 1)
+        rho_p = jnp.linalg.norm(b * tau - A @ x) / nb
+        rho_d = jnp.linalg.norm(c * tau - A.T @ y - s) / nc
+        rho_g = jnp.abs(c @ x - b @ y + kappa) / (nb + nc)
+        bty = b @ y
+        rho_A = jnp.abs(c @ x - bty) / (tau + jnp.abs(bty))
+        optimal = (rho_p < tol) & (rho_d < tol) & (rho_A < tol)
+        ray = (((rho_p < tol) & (rho_d < tol) & (rho_g < tol)
+                & (tau < tol * jnp.maximum(1.0, kappa)))
+               | ((mu / mu0 < tol) & (tau < tol * jnp.minimum(1.0, kappa))))
+        status = jnp.where(optimal, STATUS_OPTIMAL,
+                           jnp.where(ray, STATUS_INFEASIBLE, STATUS_MAXITER))
+        return status, optimal | ray
+
+    def max_step(z, dz):
+        return jnp.min(jnp.where(dz < 0, -z / jnp.where(dz < 0, dz, -1.0),
+                                 jnp.inf))
+
+    def cond(carry):
+        _, _, _, _, _, _, done, nit = carry
+        return (~done) & (nit < max_iter)
+
+    def body(carry):
+        x, y, s, tau, kappa, status, done, nit = carry
+        mu = (x @ s + tau * kappa) / (n + 1)
+        rP = b * tau - A @ x
+        rD = c * tau - A.T @ y - s
+        rG = c @ x - b @ y + kappa
+
+        # normal-equations matrix M = A diag(x/s) A' (+ tiny relative ridge)
+        dinv = x / s
+        Adi = A * dinv[None, :]
+        Mmat = Adi @ A.T
+        Mmat = Mmat + (1e-13 * (jnp.trace(Mmat) / m + 1.0)) * jnp.eye(m)
+        L = jnp.linalg.cholesky(Mmat)
+
+        def solve_M(rhs):  # rhs (m,) or (m, k)
+            z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
+            return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+
+        # tau-column system, shared by predictor and corrector
+        v = solve_M(b + Adi @ c)
+        xv = dinv * (A.T @ v - c)
+        denom_v = b @ v - c @ xv + kappa / tau
+
+        def direction(eta, cc, ck):
+            w = -eta * rD + cc / x
+            u = solve_M(eta * rP - Adi @ w)
+            xu = dinv * (A.T @ u + w)
+            dtau = (eta * rG + ck / tau - b @ u + c @ xu) / denom_v
+            dy = u + dtau * v
+            dx = xu + dtau * xv
+            ds = (cc - s * dx) / x
+            dkappa = (ck - kappa * dtau) / tau
+            return dx, dy, ds, dtau, dkappa
+
+        def step_len(dx, ds, dtau, dkappa):
+            a = jnp.minimum(max_step(x, dx), max_step(s, ds))
+            a = jnp.minimum(a, jnp.where(dtau < 0, -tau / dtau, jnp.inf))
+            a = jnp.minimum(a, jnp.where(dkappa < 0, -kappa / dkappa, jnp.inf))
+            return a
+
+        # predictor (affine scaling)
+        dxa, dya, dsa, dta, dka = direction(1.0, -x * s, -tau * kappa)
+        alpha_a = jnp.minimum(1.0, step_len(dxa, dsa, dta, dka))
+        mu_aff = (((x + alpha_a * dxa) @ (s + alpha_a * dsa)
+                   + (tau + alpha_a * dta) * (kappa + alpha_a * dka))
+                  / (n + 1))
+        sigma = jnp.clip((mu_aff / mu) ** 3, 0.0, 1.0)
+
+        # corrector (combined direction, same factorization)
+        cc = sigma * mu - x * s - dxa * dsa
+        ck = sigma * mu - tau * kappa - dta * dka
+        dx, dy, ds, dtau, dkappa = direction(1.0 - sigma, cc, ck)
+        alpha = jnp.minimum(1.0, 0.99995 * step_len(dx, ds, dtau, dkappa))
+        finite = (jnp.all(jnp.isfinite(dx)) & jnp.all(jnp.isfinite(dy))
+                  & jnp.all(jnp.isfinite(ds)) & jnp.isfinite(dtau)
+                  & jnp.isfinite(dkappa) & jnp.isfinite(alpha))
+        alpha = jnp.where(finite & ~done, alpha, 0.0)
+
+        x = x + alpha * dx
+        y = y + alpha * dy
+        s = s + alpha * ds
+        tau = tau + alpha * dtau
+        kappa = kappa + alpha * dkappa
+        status, done_now = classify(x, y, s, tau, kappa)
+        return (x, y, s, tau, kappa, status, done | done_now,
+                nit + 1)
+
+    carry0 = (jnp.ones(n), jnp.zeros(m), jnp.ones(n),
+              jnp.asarray(1.0), jnp.asarray(1.0),
+              jnp.asarray(STATUS_MAXITER), jnp.asarray(False),
+              jnp.asarray(0))
+    x, y, s, tau, kappa, status, done, nit = jax.lax.while_loop(
+        cond, body, carry0)
+    xsol = x / jnp.maximum(tau, 1e-300)
+    return xsol, c @ xsol, status, nit
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_batch_solver(max_iter: int, tol: float):
+    fn = functools.partial(_hsde_ipm, max_iter=max_iter, tol=tol)
+    return jax.jit(jax.vmap(fn))
+
+
+def solve_lp_batch(c, A, b, max_iter: int = 25, tol: float = 1e-8):
+    """jit(vmap) fixed-budget LP solve over stacked standard-form LPs.
+
+    Args:
+      c: (B, n) objective;  A: (B, m, n) equality matrix;  b: (B, m) rhs
+         (problem reads min c'z s.t. Az=b, z>=0 per batch lane).
+    Returns:
+      (x (B, n), obj (B,), status (B,), iters (B,)) — status per lane:
+      0 optimal, 1 iteration budget exhausted, 2 infeasible/unbounded.
+
+    Runs in float64 under a locally scoped ``enable_x64`` so the rest of
+    the (float32) model stack is unaffected.
+    """
+    with jax.experimental.enable_x64():
+        c = jnp.asarray(c, jnp.float64)
+        A = jnp.asarray(A, jnp.float64)
+        b = jnp.asarray(b, jnp.float64)
+        out = _jitted_batch_solver(int(max_iter), float(tol))(c, A, b)
+        return tuple(np.asarray(t) for t in out)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized paper-constraint verifiers (the NumPy oracle, batched)
+# ---------------------------------------------------------------------------
+
+def verify_frontend_batch(bs: BatchedSystemSpec, beta: np.ndarray,
+                          finish: np.ndarray, tol: float = 1e-6) -> np.ndarray:
+    """Check every Sec 3.1 constraint per scenario; True where all hold.
+
+    Mirrors :func:`repro.core.dlt.frontend_lp.verify_frontend` exactly,
+    vectorized over the padded batch (padded cells must be zero).
+    """
+    G, R, A, J = bs.G, bs.R, bs.A, bs.J
+    src, prc, cell = bs.source_mask, bs.proc_mask, bs.cell_mask
+    scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), J))
+    slack = tol * scale
+    ok = ~np.isnan(finish)
+
+    ok &= ~np.any((beta < -slack[:, None, None]) & cell, axis=(1, 2))
+    # Eq 3 (pairs of consecutive real sources; empty slices when N_max == 1)
+    pair = src[:, 1:]
+    lhs3 = R[:, 1:] - R[:, :-1]
+    ok &= ~np.any(pair & (lhs3 > beta[:, :-1, 0] * A[:, :1] + slack[:, None]),
+                  axis=1)
+    # Eq 4
+    if bs.n_max > 1 and bs.m_max > 1:
+        act = cell[:, 1:, :-1] & cell[:, :-1, 1:]
+        lhs = beta[:, :-1, :-1] * A[:, None, :-1] + beta[:, 1:, :-1] * G[:, 1:, None]
+        rhs = beta[:, :-1, :-1] * G[:, :-1, None] + beta[:, :-1, 1:] * A[:, None, 1:]
+        ok &= ~np.any(act & (lhs > rhs + slack[:, None, None]), axis=(1, 2))
+    # Eq 5
+    csum = np.concatenate(
+        [np.zeros((bs.batch, 1)), np.cumsum(beta[:, 0, :-1], axis=1)], axis=1)
+    need = R[:, :1] + G[:, :1] * csum + A * beta.sum(axis=1)
+    ok &= ~np.any(prc & (finish[:, None] < need - slack[:, None]), axis=1)
+    # Eq 6
+    ok &= np.abs(beta.sum(axis=(1, 2)) - J) <= slack
+    return ok
+
+
+def verify_nofrontend_batch(bs: BatchedSystemSpec, beta, TS, TF, finish,
+                            tol: float = 1e-6) -> np.ndarray:
+    """Check every Sec 3.2 constraint per scenario; True where all hold."""
+    G, R, A, J = bs.G, bs.R, bs.A, bs.J
+    src, prc, cell = bs.source_mask, bs.proc_mask, bs.cell_mask
+    B = bs.batch
+    scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), J))
+    slack = tol * scale
+    s3 = slack[:, None, None]
+    ok = ~np.isnan(finish)
+
+    ok &= ~np.any((beta < -s3) & cell, axis=(1, 2))
+    # Eq 7
+    ok &= ~np.any(cell & (np.abs(TF - TS - beta * G[:, :, None]) > s3),
+                  axis=(1, 2))
+    # Eq 8 / Eq 9
+    if bs.n_max > 1:
+        act = cell[:, 1:, :]
+        ok &= ~np.any(act & (TF[:, :-1, :] > TS[:, 1:, :] + s3), axis=(1, 2))
+    if bs.m_max > 1:
+        act = cell[:, :, 1:]
+        ok &= ~np.any(act & (TF[:, :, :-1] > TS[:, :, 1:] + s3), axis=(1, 2))
+    # Eq 10-12
+    ok &= np.abs(TS[:, 0, 0] - R[:, 0]) <= slack
+    if bs.n_max > 1:
+        act = src[:, 1:]
+        ok &= ~np.any(act & (TS[:, 1:, 0] < R[:, 1:] - slack[:, None]), axis=1)
+        ok &= ~np.any(act & (TF[:, :-1, 0] < R[:, 1:] - slack[:, None]), axis=1)
+    # Eq 13 (TF of each scenario's LAST real source)
+    last = np.maximum(bs.n_sources - 1, 0)
+    tf_last = TF[np.arange(B), last, :]                    # (B, M_max)
+    need = tf_last + A * beta.sum(axis=1)
+    ok &= ~np.any(prc & (finish[:, None] < need - slack[:, None]), axis=1)
+    # Eq 14
+    ok &= np.abs(beta.sum(axis=(1, 2)) - J) <= slack
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# End-to-end batched solve
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSolution:
+    """Solved batch in the padded canonical layout.
+
+    ``beta[k]`` rows/cols beyond ``(n_sources[k], n_procs[k])`` are zero.
+    ``status[k]`` follows the module STATUS_* codes; infeasible scenarios
+    carry NaN finish times.
+    """
+
+    spec: BatchedSystemSpec
+    frontend: bool
+    finish_time: np.ndarray       # (B,)
+    beta: np.ndarray              # (B, N_max, M_max)
+    status: np.ndarray            # (B,)
+    iterations: np.ndarray        # (B,)
+    TS: Optional[np.ndarray] = None  # (B, N_max, M_max) no-frontend only
+    TF: Optional[np.ndarray] = None
+
+    @property
+    def batch(self) -> int:
+        return self.spec.batch
+
+    def monetary_cost(self) -> np.ndarray:
+        """Eq 17 per scenario (NaN where unsolved or the spec had no C)."""
+        if self.spec.C is None:
+            return np.full(self.batch, np.nan)
+        cost = np.einsum("bnm,bm->b", self.beta, self.spec.A * self.spec.C)
+        cost[self.status != STATUS_OPTIMAL] = np.nan
+        if self.spec.has_cost is not None:
+            cost[~self.spec.has_cost] = np.nan
+        return cost
+
+    def schedule(self, k: int) -> Optional[Schedule]:
+        """Scenario k as a scalar Schedule (None if not solved)."""
+        if self.status[k] != STATUS_OPTIMAL:
+            return None
+        n, m = int(self.spec.n_sources[k]), int(self.spec.n_procs[k])
+        kw = {}
+        if not self.frontend and self.TS is not None:
+            kw = {"TS": self.TS[k, :n, :m], "TF": self.TF[k, :n, :m]}
+        return Schedule(
+            spec=self.spec.scenario(k),
+            beta=self.beta[k, :n, :m],
+            finish_time=float(self.finish_time[k]),
+            frontend=self.frontend,
+            **kw,
+        )
+
+    def schedules(self) -> list:
+        return [self.schedule(k) for k in range(self.batch)]
+
+
+def batched_solve(
+    specs,
+    frontend: bool = True,
+    max_iter: int = 25,
+    tol: float = 1e-8,
+    verify: bool = True,
+    oracle_fallback: bool = True,
+    presorted: bool = False,
+    chunk_size: int = 256,
+) -> BatchedSolution:
+    """Solve a whole family of DLT programs in one jitted vmapped call.
+
+    Args:
+      specs: a sequence of :class:`SystemSpec` or a ready
+        :class:`BatchedSystemSpec` (ragged (N, M) welcome — scenarios are
+        embedded in a shared padded LP shape).
+      frontend: Sec 3.1 (True) vs Sec 3.2 (False) formulation, whole batch.
+      max_iter / tol: iteration budget and residual tolerance of the
+        interior-point solver.
+      verify: re-check each solved scenario against the paper constraint
+        sets (vectorized NumPy oracle).
+      oracle_fallback: every scenario the IPM could not certify optimal —
+        iteration-budget misses, verification misses, AND infeasibility
+        verdicts — is re-solved with the scalar simplex path, so the
+        returned batch is always simplex-confirmed: status 2 means the
+        oracle agreed the program is infeasible.
+      presorted: specs are already canonical (G-/A-ascending).
+      chunk_size: scenarios per device batch (bounds peak memory for the
+        stacked (B, m, n) constraint tensors).
+    """
+    bspec = (specs if isinstance(specs, BatchedSystemSpec)
+             else BatchedSystemSpec.from_specs(specs, presorted=presorted))
+    B, Nmax, Mmax = bspec.batch, bspec.n_max, bspec.m_max
+
+    c, A, b = build_standard_form_batch(bspec, frontend)
+    xs, statuses, iterss = [], [], []
+    for lo in range(0, B, chunk_size):
+        hi = min(lo + chunk_size, B)
+        x, _, st, ni = solve_lp_batch(c[lo:hi], A[lo:hi], b[lo:hi],
+                                      max_iter=max_iter, tol=tol)
+        xs.append(x)
+        statuses.append(st)
+        iterss.append(ni)
+    x = np.concatenate(xs)
+    status = np.concatenate(statuses)
+    iters = np.concatenate(iterss)
+
+    nmp = Nmax * Mmax
+    beta = x[:, :nmp].reshape(B, Nmax, Mmax).copy()
+    if frontend:
+        TS = TF = None
+        finish = x[:, nmp].copy()
+    else:
+        TS = x[:, nmp: 2 * nmp].reshape(B, Nmax, Mmax).copy()
+        TF = x[:, 2 * nmp: 3 * nmp].reshape(B, Nmax, Mmax).copy()
+        finish = x[:, 3 * nmp].copy()
+
+    # exact zeros on padding (IPM leaves ~tol-level dust on masked vars)
+    cell = bspec.cell_mask
+    beta[~cell] = 0.0
+    if TS is not None:
+        TS[~cell] = 0.0
+        TF[~cell] = 0.0
+
+    ok = status == STATUS_OPTIMAL
+    if verify:
+        if frontend:
+            good = verify_frontend_batch(bspec, beta, finish)
+        else:
+            good = verify_nofrontend_batch(bspec, beta, TS, TF, finish)
+        demoted = ok & ~good
+        status[demoted] = STATUS_MAXITER
+        ok &= good
+
+    if oracle_fallback:
+        # every uncertified lane — including IPM infeasibility verdicts,
+        # which the simplex either confirms or overturns with a solution
+        for k in np.flatnonzero(~ok):
+            try:
+                sched = solve(bspec.scenario(k), frontend=frontend,
+                              solver="simplex", presorted=True)
+            except InfeasibleError:
+                status[k] = STATUS_INFEASIBLE
+                continue
+            sp = sched.spec
+            n, m = sp.num_sources, sp.num_processors
+            beta[k] = 0.0
+            beta[k, :n, :m] = sched.beta
+            finish[k] = sched.finish_time
+            if TS is not None and sched.TS is not None:
+                TS[k] = 0.0
+                TF[k] = 0.0
+                TS[k, :n, :m] = sched.TS
+                TF[k, :n, :m] = sched.TF
+            status[k] = STATUS_OPTIMAL
+
+    infeasible = status == STATUS_INFEASIBLE
+    finish[infeasible] = np.nan
+    beta[infeasible] = 0.0          # interior-point ray junk, not a schedule
+    if TS is not None:
+        TS[infeasible] = 0.0
+        TF[infeasible] = 0.0
+    return BatchedSolution(
+        spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
+        status=status, iterations=iters, TS=TS, TF=TF,
+    )

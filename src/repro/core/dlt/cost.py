@@ -59,10 +59,33 @@ def sweep_processors(
     frontend: bool = True,
     solver: str = "auto",
     m_max: Optional[int] = None,
+    engine: str = "batched",
 ) -> ProcessorSweep:
-    """Solve the DLT program for every prefix of the (sorted) processor list."""
+    """Solve the DLT program for every prefix of the (sorted) processor list.
+
+    ``engine="batched"`` (default) solves all prefixes in one jitted vmapped
+    interior-point call (see :mod:`repro.core.dlt.batched`), with the scalar
+    simplex as per-scenario verification oracle and fallback.
+    ``engine="scalar"`` keeps the original one-LP-at-a-time loop.  A pinned
+    ``solver`` (anything but "auto") implies the scalar engine, which is
+    the only path that honors it.
+    """
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
+    if solver != "auto":
+        engine = "scalar"
     cspec = spec.canonical()[0]
     M = cspec.num_processors if m_max is None else min(m_max, cspec.num_processors)
+    if engine == "batched":
+        from .batched import STATUS_OPTIMAL, batched_solve
+
+        subs = [cspec.subset_processors(m) for m in range(1, M + 1)]
+        sol = batched_solve(subs, frontend=frontend, presorted=True)
+        keep = sol.status == STATUS_OPTIMAL
+        ms = np.flatnonzero(keep) + 1
+        costs = (sol.monetary_cost()[keep] if cspec.C is not None
+                 else np.full(keep.sum(), np.nan))
+        return ProcessorSweep(ms, sol.finish_time[keep], costs)
     ms, tfs, costs = [], [], []
     for m in range(1, M + 1):
         sub = cspec.subset_processors(m)

@@ -16,7 +16,7 @@ from typing import Sequence
 import numpy as np
 
 from .solve import solve
-from .types import SystemSpec
+from .types import InfeasibleError, SystemSpec
 
 __all__ = ["SpeedupGrid", "speedup_grid"]
 
@@ -40,26 +40,52 @@ def speedup_grid(
     processor_counts: Sequence[int],
     frontend: bool = False,
     solver: str = "auto",
+    engine: str = "batched",
 ) -> SpeedupGrid:
     """Finish time + Eq 16 speedup over a (sources x processors) grid.
 
     ``spec`` must contain at least ``max(source_counts)`` sources and
     ``max(processor_counts)`` processors; prefixes are taken in canonical
     order, matching the paper's sorted-node convention.
+
+    ``engine="batched"`` solves each source-count row of the grid as one
+    jitted vmapped batch (rows share the source dimension, so the padded
+    LP family stays tight); ``engine="scalar"`` is the original loop.
+    Both engines raise :class:`InfeasibleError` if any grid cell admits no
+    schedule.  A pinned ``solver`` (anything but "auto") implies the
+    scalar engine, which is the only path that honors it.
     """
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
+    if solver != "auto":
+        engine = "scalar"
     cspec = spec.canonical()[0]
     P, Q = len(source_counts), len(processor_counts)
     tf = np.full((P, Q), np.nan)
-    for a, p in enumerate(source_counts):
-        sub_s = cspec.subset_sources(p)
-        for b, n in enumerate(processor_counts):
-            sched = solve(
-                sub_s.subset_processors(n),
-                frontend=frontend,
-                solver=solver,
-                presorted=True,
-            )
-            tf[a, b] = sched.finish_time
+    if engine == "batched":
+        from .batched import STATUS_INFEASIBLE, batched_solve
+
+        for a, p in enumerate(source_counts):
+            sub_s = cspec.subset_sources(p)
+            subs = [sub_s.subset_processors(n) for n in processor_counts]
+            sol = batched_solve(subs, frontend=frontend, presorted=True)
+            bad = np.flatnonzero(sol.status == STATUS_INFEASIBLE)
+            if bad.size:  # match the scalar engine's behavior
+                raise InfeasibleError(
+                    f"grid cell (sources={p}, "
+                    f"processors={processor_counts[int(bad[0])]}) infeasible")
+            tf[a, :] = sol.finish_time
+    else:
+        for a, p in enumerate(source_counts):
+            sub_s = cspec.subset_sources(p)
+            for b, n in enumerate(processor_counts):
+                sched = solve(
+                    sub_s.subset_processors(n),
+                    frontend=frontend,
+                    solver=solver,
+                    presorted=True,
+                )
+                tf[a, b] = sched.finish_time
     base = tf[0:1, :]  # row for the smallest source count (paper: 1 source)
     return SpeedupGrid(
         sources=np.asarray(source_counts),

@@ -13,6 +13,7 @@ apply function f(stage_params, x) -> x.
 
 from __future__ import annotations
 
+import inspect
 from typing import Callable
 
 import jax
@@ -23,6 +24,14 @@ try:
     shard_map = jax.shard_map
 except AttributeError:  # pragma: no cover
     from jax.experimental.shard_map import shard_map
+
+# The "don't check replication" kwarg was renamed check_rep -> check_vma
+# across JAX releases; pick whichever this JAX spells.
+_CHECK_KWARG = (
+    "check_vma"
+    if "check_vma" in inspect.signature(shard_map).parameters
+    else "check_rep"
+)
 
 __all__ = ["pipeline_apply", "gpipe_utilization"]
 
@@ -94,5 +103,5 @@ def pipeline_apply(
         mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        **{_CHECK_KWARG: False},
     )(stage_params, x)

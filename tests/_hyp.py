@@ -1,0 +1,125 @@
+"""Seeded-random fallback for the slice of the ``hypothesis`` API we use.
+
+Offline environments in this project may not ship ``hypothesis``.  Test
+modules import it as::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp import given, settings, strategies as st
+
+The shim replays each ``@given`` test ``max_examples`` times with values
+drawn from a deterministically seeded ``random.Random`` (seeded per test
+name and example index), so runs are reproducible and failures printable.
+It is NOT a property-testing engine — no shrinking, no example database —
+just enough to keep the property suites collecting and exercising random
+inputs when the real package is absent.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A draw rule: ``example(rng)`` produces one value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class _Strategies:
+    """Mini ``hypothesis.strategies`` namespace (positional args like the
+    real API: ``st.integers(0, 10)``, ``st.floats(0.5, 5.0)``...)."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda r: r.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda r: seq[r.randrange(len(seq))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements.example(r) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Strategy(lambda r: tuple(e.example(r) for e in elements))
+
+    @staticmethod
+    def builds(target, *args, **kwargs):
+        def draw(r):
+            a = [s.example(r) for s in args]
+            k = {name: s.example(r) for name, s in kwargs.items()}
+            return target(*a, **k)
+
+        return _Strategy(draw)
+
+
+strategies = _Strategies()
+
+
+class settings:
+    """Decorator recording ``max_examples``; other kwargs are ignored."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._hyp_settings = self
+        return fn
+
+
+def given(**kw_strategies):
+    """Replay the test over seeded random draws of the keyword strategies."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_hyp_settings", None)
+            n = cfg.max_examples if cfg else _DEFAULT_MAX_EXAMPLES
+            base = zlib.crc32(fn.__qualname__.encode())
+            for ex in range(n):
+                rng = random.Random(base + ex)
+                drawn = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception:
+                    print(f"_hyp falsifying example ({fn.__qualname__}, "
+                          f"example {ex}): {drawn!r}")
+                    raise
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (functools.wraps exposes the original signature).
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return decorate

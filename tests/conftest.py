@@ -10,4 +10,10 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 if str(SRC) not in sys.path:
     sys.path.insert(0, str(SRC))
 
+# tests/ itself on the path so `from _hyp import ...` (the offline
+# hypothesis fallback shim) resolves regardless of pytest's rootdir.
+TESTS = Path(__file__).resolve().parent
+if str(TESTS) not in sys.path:
+    sys.path.insert(0, str(TESTS))
+
 os.environ.setdefault("JAX_PLATFORMS", "cpu")

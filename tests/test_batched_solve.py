@@ -1,0 +1,175 @@
+"""Batched vmap-able DLT engine vs the scalar NumPy oracle.
+
+Parity is asserted on finish times (the LP objective): the interior-point
+solution is an analytic-center optimum, so ``beta`` may legitimately differ
+from the simplex vertex on degenerate optimal faces while the makespan
+matches to solver tolerance.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dlt import (
+    STATUS_INFEASIBLE,
+    STATUS_OPTIMAL,
+    InfeasibleError,
+    SystemSpec,
+    batched_solve,
+    solve,
+    sweep_processors,
+    verify_schedule,
+)
+from repro.core.dlt.batched import BatchedSystemSpec, build_standard_form_batch
+from repro.core.dlt.speedup import speedup_grid
+
+REL_TOL = 1e-6
+
+
+def _random_specs(seed, count, n_max=3, m_max=6, cost=False):
+    rng = np.random.default_rng(seed)
+    specs = []
+    for _ in range(count):
+        n = int(rng.integers(1, n_max + 1))
+        m = int(rng.integers(1, m_max + 1))
+        specs.append(SystemSpec(
+            G=rng.uniform(0.05, 2.0, n),
+            R=np.sort(rng.uniform(0.0, 1.0, n)),
+            A=rng.uniform(0.2, 8.0, m),
+            J=float(rng.uniform(1.0, 200.0)),
+            C=rng.uniform(1.0, 30.0, m) if cost else None,
+        ))
+    return specs
+
+
+@pytest.mark.parametrize("frontend", [True, False])
+def test_parity_vs_scalar_on_random_specs(frontend):
+    """>=100 random ragged specs: finish times match solve() to 1e-6 rel."""
+    specs = _random_specs(seed=0 if frontend else 1, count=100)
+    sol = batched_solve(specs, frontend=frontend)
+    assert np.all(sol.status == STATUS_OPTIMAL)
+    for k, sp in enumerate(specs):
+        ref = solve(sp, frontend=frontend, solver="simplex")
+        assert sol.finish_time[k] == pytest.approx(
+            ref.finish_time, rel=REL_TOL), f"scenario {k}: {sp}"
+
+
+@pytest.mark.parametrize("frontend", [True, False])
+def test_solutions_satisfy_paper_constraints(frontend):
+    """Unpacked schedules pass the scalar per-scenario verifier."""
+    specs = _random_specs(seed=2, count=25)
+    sol = batched_solve(specs, frontend=frontend)
+    for sched in sol.schedules():
+        assert sched is not None
+        assert verify_schedule(sched) == []
+
+
+def test_infeasible_batch_status_flags():
+    """Infeasible lanes are flagged per scenario without poisoning the rest.
+
+    Release gap R2 - R1 = 100 needs beta_{1,1} >= 200 > J = 1 (front-end
+    Eq 3 / no-front-end Eq 12), so the scenario admits no schedule.
+    """
+    bad = SystemSpec(G=[0.5, 0.5], R=[0.0, 100.0], A=[1.0], J=1.0)
+    good = SystemSpec(G=[0.2, 0.4], R=[0.0, 2.0], A=[2.0, 3.0], J=100.0)
+    for frontend in (True, False):
+        sol = batched_solve([bad, good, bad], frontend=frontend)
+        assert list(sol.status) == [STATUS_INFEASIBLE, STATUS_OPTIMAL,
+                                    STATUS_INFEASIBLE]
+        assert np.isnan(sol.finish_time[0]) and np.isnan(sol.finish_time[2])
+        ref = solve(good, frontend=frontend, solver="simplex")
+        assert sol.finish_time[1] == pytest.approx(ref.finish_time,
+                                                   rel=REL_TOL)
+        assert sol.schedule(0) is None and sol.schedule(2) is None
+
+
+def test_sweep_processors_unchanged_after_rewire():
+    """Regression: batched sweep == scalar-engine sweep (paper Table 5)."""
+    A = np.round(np.arange(1.1, 3.01, 0.1), 10)
+    spec = SystemSpec(G=[0.5, 0.6], R=[2, 3], A=A,
+                      C=np.arange(29, 9, -1.0), J=100)
+    for frontend in (True, False):
+        batched = sweep_processors(spec, frontend=frontend, engine="batched")
+        scalar = sweep_processors(spec, frontend=frontend, engine="scalar")
+        np.testing.assert_array_equal(batched.m, scalar.m)
+        np.testing.assert_allclose(batched.finish_time, scalar.finish_time,
+                                   rtol=REL_TOL)
+        np.testing.assert_allclose(batched.cost, scalar.cost, rtol=1e-4)
+        np.testing.assert_allclose(batched.gradient()[1:],
+                                   scalar.gradient()[1:], atol=1e-5)
+
+
+def test_speedup_grid_engine_parity():
+    spec = SystemSpec(G=[0.5] * 3, R=[0.0] * 3, A=[2.0] * 6, J=100)
+    kw = dict(source_counts=(1, 2, 3), processor_counts=(2, 4, 6),
+              frontend=False)
+    batched = speedup_grid(spec, engine="batched", **kw)
+    scalar = speedup_grid(spec, engine="scalar", **kw)
+    np.testing.assert_allclose(batched.finish_time, scalar.finish_time,
+                               rtol=REL_TOL)
+    np.testing.assert_allclose(batched.speedup, scalar.speedup, rtol=1e-5)
+
+
+def test_speedup_grid_raises_on_infeasible_cell_both_engines():
+    """Engine parity extends to failure behavior: infeasible grid cells
+    raise InfeasibleError on the batched path exactly like the scalar one."""
+    spec = SystemSpec(G=[0.5, 0.5], R=[0.0, 100.0], A=[1.0, 1.5], J=1.0)
+    for engine in ("batched", "scalar"):
+        with pytest.raises(InfeasibleError):
+            speedup_grid(spec, source_counts=(1, 2), processor_counts=(1, 2),
+                         frontend=True, engine=engine)
+
+
+def test_monetary_cost_matches_schedule_cost():
+    specs = _random_specs(seed=3, count=10, cost=True)
+    sol = batched_solve(specs, frontend=True)
+    costs = sol.monetary_cost()
+    for k, sched in enumerate(sol.schedules()):
+        assert costs[k] == pytest.approx(sched.monetary_cost(), rel=1e-9)
+
+
+def test_monetary_cost_nan_on_unsolved_and_costless_lanes():
+    """Infeasible lanes and C-less specs in a mixed batch price as NaN."""
+    bad = SystemSpec(G=[0.5, 0.5], R=[0.0, 100.0], A=[1.0], J=1.0,
+                     C=[3.0])
+    priced = SystemSpec(G=[0.2], R=[0.0], A=[2.0, 3.0], J=10.0,
+                        C=[5.0, 4.0])
+    free = SystemSpec(G=[0.2], R=[0.0], A=[2.0, 3.0], J=10.0)
+    sol = batched_solve([bad, priced, free], frontend=True)
+    costs = sol.monetary_cost()
+    assert np.isnan(costs[0])                      # infeasible
+    assert costs[1] == pytest.approx(sol.schedule(1).monetary_cost())
+    assert np.isnan(costs[2])                      # no C on this spec
+    assert np.all(sol.beta[0] == 0.0)              # no ray junk exposed
+    assert sol.schedule(2).spec.C is None
+
+
+def test_padded_embedding_masks_are_exact():
+    """Padded rows/columns of the stacked LP never touch the real program:
+    a ragged batch and a tight singleton batch give identical solutions."""
+    specs = _random_specs(seed=4, count=8, n_max=3, m_max=5)
+    big = SystemSpec(G=[0.3] * 4, R=[0.0] * 4, A=[1.5] * 8, J=10.0)
+    ragged = batched_solve(specs + [big], frontend=True)
+    for k, sp in enumerate(specs):
+        alone = batched_solve([sp], frontend=True)
+        assert ragged.finish_time[k] == pytest.approx(
+            alone.finish_time[0], rel=REL_TOL)
+    # beta padding is exactly zero
+    cell = ragged.spec.cell_mask
+    assert np.all(ragged.beta[~cell] == 0.0)
+
+
+def test_batched_spec_layout_roundtrip():
+    specs = _random_specs(seed=5, count=6, cost=True)
+    bs = BatchedSystemSpec.from_specs(specs)
+    assert bs.batch == 6
+    for k, sp in enumerate(specs):
+        back = bs.scenario(k)
+        canon = sp.canonical()[0]
+        np.testing.assert_allclose(back.G, canon.G)
+        np.testing.assert_allclose(back.A, canon.A)
+        np.testing.assert_allclose(back.C, canon.C)
+        assert back.J == canon.J
+    # standard-form tensors are static-shaped across the ragged batch
+    c, A, b = build_standard_form_batch(bs, frontend=True)
+    assert c.shape[0] == A.shape[0] == b.shape[0] == 6
+    assert A.shape[2] == c.shape[1] and A.shape[1] == b.shape[1]

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: seeded-random shim
+    from _hyp import given, settings, strategies as st
 
 from repro.models.attention import _causal_mask, _sdpa, repeat_kv
 from repro.models.chunked_attention import chunked_attention

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: seeded-random shim
+    from _hyp import given, settings, strategies as st
 
 from repro.data import MultiSourcePipeline, SourceSpec, SyntheticCorpus
 

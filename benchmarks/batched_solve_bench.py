@@ -1,21 +1,26 @@
 """Batched vs scalar DLT solving throughput (scenarios/second).
 
-Measures end-to-end ``batched_solve`` (stacking + jitted vmapped
-interior-point + vectorized verification + oracle fallback) against the
-scalar loop the repo's consumers used before the rewire
-(``solve()`` per scenario, simplex + per-scenario verification), across
-LP families of increasing size.  The jit compile is warmed before timing
-— a production sweep service pays it once per family shape.
+Measures end-to-end ``batched_solve`` (stacking + size-bucketed jitted
+vmapped interior-point + vectorized verification + oracle fallback)
+against (a) the scalar loop the repo's consumers used before the rewire
+(``solve()`` per scenario, simplex + per-scenario verification) on the
+uniform families, and (b) the PR-1 engine configuration (full Sec 3.2
+formulation, one global-max padded shape) on a mixed-size ragged
+no-front-end family — the workload the column-reduced formulation and
+size bucketing exist for.  The jit compile is warmed before timing — a
+production sweep service pays it once per family shape (and the engine
+LRU-caches compiled shapes).
 
 Run:  PYTHONPATH=src python -m benchmarks.batched_solve_bench
       PYTHONPATH=src python -m benchmarks.batched_solve_bench --smoke
-The --smoke mode is a seconds-fast parity + speedup sanity pass used by
-scripts/check.sh.
+The --smoke mode is a fast parity + speedup sanity pass used by
+scripts/check.sh; it runs a scaled-down mixed ragged family so the
+bucketing path is exercised in tier-1 smoke.
 
-Acceptance target: >= 10x scenarios/sec over the scalar loop at batch
->= 256 (met by the small "cost-query" family on 2 CPU cores; larger
-families shift work from Python overhead to BLAS where the batched path's
-margin depends on core count).
+Acceptance targets: >= 10x scenarios/sec over the scalar loop at batch
+>= 256 on the small "cost-query" family, and >= 3x scenarios/sec over
+the PR-1 engine path on the mixed-size no-front-end family (2-core CPU
+reference; margins grow with cores).
 """
 
 from __future__ import annotations
@@ -48,9 +53,23 @@ def _specs(rng, count, n, m):
     ]
 
 
-def _time_batched(specs, frontend):
+def _mixed_specs(rng, count, n_max, m_lo, m_hi):
+    """Ragged no-front-end family: N in 1..n_max, M in m_lo..m_hi."""
+    return [
+        SystemSpec(
+            G=rng.uniform(0.1, 1.0, n),
+            R=np.sort(rng.uniform(0.0, 2.0, n)),
+            A=rng.uniform(0.5, 4.0, m),
+            J=float(rng.uniform(50.0, 200.0)),
+        )
+        for n, m in zip(rng.integers(1, n_max + 1, count),
+                        rng.integers(m_lo, m_hi + 1, count))
+    ]
+
+
+def _time_batched(specs, frontend, **kw):
     t0 = time.perf_counter()
-    sol = batched_solve(specs, frontend=frontend)
+    sol = batched_solve(specs, frontend=frontend, **kw)
     return time.perf_counter() - t0, sol
 
 
@@ -62,11 +81,10 @@ def _time_scalar(specs, frontend, sample):
     return (time.perf_counter() - t0) / sample * len(specs)
 
 
-def run(batches=(256, 1024), scalar_sample=128, smoke=False):
-    r = check("batched_solve_bench")
-    rng = np.random.default_rng(0)
+def run_uniform(r, rng, smoke):
     families = FAMILIES[:1] if smoke else FAMILIES
-    batches = batches if not smoke else (256,)
+    batches = (256,) if smoke else (256, 1024)
+    scalar_sample = 128
 
     rows = []
     best_at_256 = 0.0
@@ -79,16 +97,62 @@ def run(batches=(256, 1024), scalar_sample=128, smoke=False):
             ts = _time_scalar(specs, fe, scalar_sample)
             speedup = ts / tb
             rows.append([label, B, round(B / ts, 1), round(B / tb, 1),
-                         f"{speedup:.1f}x"])
+                         f"{speedup:.1f}x", sol.fallback_count])
             if B >= 256:
                 best_at_256 = max(best_at_256, speedup)
             assert np.all(sol.status == 0), "bench family must be feasible"
 
-    table(["family", "batch", "scalar/s", "batched/s", "speedup"], rows,
-          fmt="{:>22}")
+    table(["family", "batch", "scalar/s", "batched/s", "speedup", "fallbacks"],
+          rows, fmt="{:>22}")
     r.check("best speedup at batch >= 256 is >= 10x",
             bool(best_at_256 >= 10.0), True, rtol=0)
     r.note("best speedup at batch >= 256", f"{best_at_256:.1f}x")
+
+
+def run_mixed(r, rng, smoke):
+    """Mixed-size ragged no-front-end family: the bucketing + column-
+    reduction win vs the PR-1 engine path (full Sec 3.2 formulation, one
+    global-max padded shape)."""
+    if smoke:
+        B, n_max, m_lo, m_hi, legacy_sample, parity_sample = 64, 3, 4, 16, 8, 4
+    else:
+        B, n_max, m_lo, m_hi, legacy_sample, parity_sample = 256, 5, 4, 32, 32, 6
+    label = f"mixed nofe N=1..{n_max} M={m_lo}..{m_hi}"
+    specs = _mixed_specs(rng, B, n_max, m_lo, m_hi)
+    legacy_kw = dict(formulation="nofrontend", bucket="none",
+                     chunk_size=legacy_sample)
+
+    _time_batched(specs, False)                      # warm (compile buckets)
+    t_new, sol = _time_batched(specs, False)
+    _time_batched(specs[:legacy_sample], False, **legacy_kw)   # warm legacy
+    t_leg, leg = _time_batched(specs[:legacy_sample], False, **legacy_kw)
+    t_leg *= len(specs) / legacy_sample              # extrapolate to B
+    speedup = t_leg / t_new
+
+    table(["family", "batch", "pr1/s", "batched/s", "speedup", "fallbacks"],
+          [[label, B, round(B / t_leg, 2), round(B / t_new, 1),
+            f"{speedup:.1f}x", sol.fallback_count]], fmt="{:>22}")
+    r.note("mixed-family fallback count",
+           f"{sol.fallback_count}/{B} lanes re-certified by the simplex oracle")
+    r.check("mixed family >= 3x PR-1 engine path at batch >= "
+            f"{B}", bool(speedup >= 3.0), True, rtol=0)
+    assert np.all(sol.status == 0), "mixed bench family must be feasible"
+
+    # parity spot-check: batched (column-reduced) vs the scalar Sec 3.2 oracle
+    worst = max(
+        abs(sol.finish_time[k]
+            - solve(specs[k], frontend=False, solver="simplex").finish_time)
+        / max(1.0, sol.finish_time[k])
+        for k in range(0, B, max(1, B // parity_sample)))
+    r.check("mixed parity vs scalar Sec 3.2 oracle (rel err < 1e-6)",
+            bool(worst < 1e-6), True, rtol=0)
+
+
+def run(smoke=False):
+    r = check("batched_solve_bench")
+    rng = np.random.default_rng(0)
+    run_uniform(r, rng, smoke)
+    run_mixed(r, rng, smoke)
 
     if smoke:
         # fast parity spot-check rides along with the smoke bench

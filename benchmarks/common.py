@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import re
+
 import numpy as np
 
 __all__ = ["table", "check", "Result"]
@@ -30,12 +32,14 @@ class Result:
 
 
 def table(headers, rows, fmt="{:>12}"):
-    line = " ".join(fmt.format(str(h)[:12]) for h in headers)
+    m = re.search(r"(\d+)", fmt)
+    w = int(m.group(1)) if m else 12  # truncate cells at the column width
+    line = " ".join(fmt.format(str(h)[:w]) for h in headers)
     print(line)
     print("-" * len(line))
     for r in rows:
         print(" ".join(
-            fmt.format(f"{v:.4g}" if isinstance(v, float) else str(v)[:12])
+            fmt.format(f"{v:.4g}" if isinstance(v, float) else str(v)[:w])
             for v in r))
 
 

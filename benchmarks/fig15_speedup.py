@@ -22,6 +22,7 @@ def run():
     ms = (4, 8, 12, 16, 18)
     ps = (2, 3, 5, 10)
     # Eq 16 over the whole grid; one batched vmapped solve per source count
+    # (registry default: the column-reduced Sec 3.2 formulation)
     grid = speedup_grid(spec, source_counts=(1,) + ps, processor_counts=ms,
                         frontend=False)
 

@@ -5,8 +5,12 @@
 #
 # 1. the full offline test suite (works without hypothesis/scipy — the
 #    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
-# 2. a seconds-fast batched-vs-scalar parity + throughput smoke
-#    (benchmarks/batched_solve_bench.py --smoke).
+# 2. a fast batched-vs-scalar parity + throughput smoke, including a
+#    mixed-size ragged no-front-end family exercising size-bucketed
+#    batching (benchmarks/batched_solve_bench.py --smoke).
+#
+# CI (.github/workflows/check.yml) runs this script on a bare profile
+# (numpy+jax+pytest only) and a full-extras profile (+hypothesis +scipy).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -76,16 +76,19 @@ class ClusterAdvisor:
         frontend: bool = True,
         m_max: "int | None" = None,
         engine: str = "batched",
+        formulation: "str | None" = None,
     ) -> "ClusterAdvisor":
         """Advisor over an explicit DLT system instead of slice candidates.
 
         Runs the Sec 6 processor sweep (all prefixes of the canonical
         processor list, one jitted vmapped batch by default) and exposes
         the same three budget planners over it.  ``spec`` needs ``C`` for
-        the cost-based plans.
+        the cost-based plans.  ``formulation`` pins a registry formulation
+        (defaults follow :func:`repro.core.dlt.cost.sweep_processors`).
         """
         return cls(sweep=sweep_processors(
-            spec, frontend=frontend, m_max=m_max, engine=engine))
+            spec, frontend=frontend, m_max=m_max, engine=engine,
+            formulation=formulation))
 
     def gradient(self) -> np.ndarray:
         """Eq 18 over slice sizes."""

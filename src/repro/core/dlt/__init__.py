@@ -3,6 +3,7 @@
 Public API:
     SystemSpec, Schedule, InfeasibleError          (types)
     solve, verify_schedule                         (Sec 3.1 / 3.2 LPs)
+    get_formulation, Formulation, ...              (formulation registry)
     solve_single_source                            (Sec 2 closed form)
     monetary_cost, sweep_processors, plan_*        (Sec 6 trade-offs)
     speedup_grid                                   (Sec 5 Amdahl analysis)
@@ -17,6 +18,12 @@ from .batched import (
     BatchedSystemSpec,
     batched_solve,
     solve_lp_batch,
+)
+from .formulations import (
+    Formulation,
+    available_formulations,
+    get_formulation,
+    register_formulation,
 )
 from .cost import (
     ProcessorSweep,
@@ -47,6 +54,10 @@ __all__ = [
     "STATUS_MAXITER",
     "STATUS_INFEASIBLE",
     "verify_schedule",
+    "Formulation",
+    "get_formulation",
+    "register_formulation",
+    "available_formulations",
     "solve_single_source",
     "finish_time_single_source",
     "monetary_cost",

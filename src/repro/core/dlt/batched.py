@@ -8,24 +8,31 @@ family in ONE jitted call:
 
 1. :class:`BatchedSystemSpec` stacks canonically-sorted specs into padded
    ``(B, N_max)`` / ``(B, M_max)`` arrays with per-scenario size masks.
-2. :func:`build_standard_form_batch` embeds every scenario's Sec 3.1 / 3.2
-   LP into one shared, static LP shape — fully vectorized over the batch.
-   Padded beta/TS/TF columns become zero-column variables with objective
-   ``+1`` (the optimum pins them to 0 without touching the real program);
-   padded inequality rows read ``slack = 1`` and padded equality rows
-   ``artificial = 1``, so every lane of the stacked ``(c, A, b)`` tensors
-   is a well-posed LP of identical shape.
-3. :func:`solve_lp_batch` runs a fixed-budget primal-dual interior-point
-   method on the homogeneous self-dual embedding (Mehrotra
-   predictor-corrector, one Cholesky factorization per iteration) under
-   ``jit(vmap(...))`` across the batch axis.  A batched ``while_loop``
-   exits as soon as every lane is decided; residual-based status flags
-   distinguish optimal / iteration-budget / infeasible per scenario — no
-   data-dependent Python control flow anywhere.
-4. :func:`batched_solve` wraps it end to end: vectorized re-checks of the
-   paper constraint sets (`verify_frontend_batch` mirrors the scalar NumPy
-   oracle), and scenarios the IPM could not certify fall back to the
-   scalar simplex path so the returned batch is always trustworthy.
+2. The LP rows come from the **formulation registry**
+   (:mod:`repro.core.dlt.formulations`): Sec 3.1 front-end, Sec 3.2
+   no-front-end, or the column-reduced no-front-end chain variant — the
+   same row builders the scalar simplex path uses, so there is exactly one
+   implementation of every constraint.  :func:`build_family_lp` embeds
+   every scenario into one shared static standard form ``min c'z, Az=b,
+   z>=0``; padded variables become zero columns with objective ``+1`` (the
+   optimum pins them to 0), padded inequality rows read ``slack = 1`` and
+   padded equality rows ``artificial = 1``.
+3. **Size-bucketed batching**: ragged scenarios are grouped into a few
+   ``(N, M_bucket)`` padded shapes instead of one global max, cutting the
+   padding blowup for mixed source/processor counts.  Each bucket runs
+   through an LRU cache of ahead-of-time compiled family shapes.
+4. The fixed-budget interior-point kernel (Mehrotra predictor-corrector on
+   the homogeneous self-dual embedding, under ``jit(vmap(...))``) exploits
+   the ``[F | I]`` structure of the standard form: slack/artificial columns
+   contribute only a diagonal to the normal equations, so each iteration
+   builds and factors the reduced ``F D F' + diag`` system instead of the
+   full ``A D A'``.
+5. :func:`batched_solve` wraps it end to end: vectorized re-checks of the
+   paper constraint sets (via the formulation's verifier — the reduced
+   formulation is always verified against the ORIGINAL Sec 3.2
+   constraints on its reconstructed intervals), and scenarios the IPM
+   could not certify fall back to the scalar simplex path, recorded in
+   ``BatchedSolution.fallback_mask`` so the fallback is never silent.
 
 The interior-point solution is an analytic-center optimum: finish times
 (the LP objective) match the simplex vertex to solver tolerance, while
@@ -36,26 +43,40 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Optional, Sequence
+from collections import OrderedDict
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .formulations import (
+    BatchFields,
+    FamilyDims,
+    Formulation,
+    get_formulation,
+)
+from .single_source import single_source_intervals
 from .solve import solve
-from .types import InfeasibleError, Schedule, SystemSpec
+from .stacking import BatchedSystemSpec
+from .types import InfeasibleError, Schedule
 
 __all__ = [
     "BatchedSystemSpec",
     "BatchedSolution",
+    "FamilyLP",
     "batched_solve",
     "solve_lp_batch",
+    "build_family_lp",
     "build_standard_form_batch",
     "verify_frontend_batch",
     "verify_nofrontend_batch",
     "STATUS_OPTIMAL",
     "STATUS_MAXITER",
     "STATUS_INFEASIBLE",
+    "DEFAULT_NOFRONTEND_FORMULATION",
+    "DEFAULT_M_BUCKET_EDGES",
+    "compile_cache_info",
 ]
 
 # Status codes align with simplex.LPResult.status.
@@ -63,314 +84,108 @@ STATUS_OPTIMAL = 0
 STATUS_MAXITER = 1
 STATUS_INFEASIBLE = 2
 
+#: Formulation used for ``frontend=False`` solves when none is pinned.
+#: The column-reduced program is exactly equivalent to Sec 3.2 (and ~4x
+#: cheaper per IPM iteration); pass ``formulation="nofrontend"`` to force
+#: the full interval program.
+DEFAULT_NOFRONTEND_FORMULATION = "nofrontend_reduced"
+
+#: Processor-count bucket edges for size-bucketed batching (~1.33-1.5x
+#: steps: worst-case padding stays small while compiled-shape count stays
+#: bounded).  Source counts are bucketed exactly — they are small and set
+#: the variable layout.
+DEFAULT_M_BUCKET_EDGES = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128)
+
 
 # ---------------------------------------------------------------------------
-# Stacking layout
+# Standard-form family embedding (rows come from the formulation registry)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
-class BatchedSystemSpec:
-    """A stack of canonically-sorted system specs, padded to (N_max, M_max).
+class FamilyLP:
+    """One padded LP family in structured standard form.
 
-    Padding values are inert: the LP embedding masks padded rows and
-    columns exactly, so they never influence a scenario's program.
+    The full constraint matrix is ``A = [F | I-ish]``: ``F`` carries the
+    formulation variables, inequality slacks form an identity block, and
+    equality artificials a diagonal ``art`` block (nonzero only on padded
+    equality rows).  The interior-point kernel consumes this split form
+    directly; :func:`build_standard_form_batch` densifies it for callers
+    that want the plain ``(c, A, b)`` tensors.
     """
 
-    G: np.ndarray            # (B, N_max)
-    R: np.ndarray            # (B, N_max)
-    A: np.ndarray            # (B, M_max)
-    J: np.ndarray            # (B,)
-    C: Optional[np.ndarray]  # (B, M_max) or None
-    n_sources: np.ndarray    # (B,) actual N per scenario
-    n_procs: np.ndarray      # (B,) actual M per scenario
-    has_cost: Optional[np.ndarray] = None  # (B,) True where the spec had C
-
-    @property
-    def batch(self) -> int:
-        return int(self.J.shape[0])
-
-    @property
-    def n_max(self) -> int:
-        return int(self.G.shape[1])
-
-    @property
-    def m_max(self) -> int:
-        return int(self.A.shape[1])
-
-    @property
-    def source_mask(self) -> np.ndarray:
-        return np.arange(self.n_max)[None, :] < self.n_sources[:, None]
-
-    @property
-    def proc_mask(self) -> np.ndarray:
-        return np.arange(self.m_max)[None, :] < self.n_procs[:, None]
-
-    @property
-    def cell_mask(self) -> np.ndarray:
-        """(B, N_max, M_max) — True on real (source, processor) cells."""
-        return self.source_mask[:, :, None] & self.proc_mask[:, None, :]
-
-    @classmethod
-    def from_specs(cls, specs: Sequence[SystemSpec],
-                   presorted: bool = False) -> "BatchedSystemSpec":
-        if not len(specs):
-            raise ValueError("empty spec batch")
-        cspecs = [s if presorted else s.canonical()[0] for s in specs]
-        B = len(cspecs)
-        Nmax = max(s.num_sources for s in cspecs)
-        Mmax = max(s.num_processors for s in cspecs)
-        G = np.ones((B, Nmax))
-        R = np.zeros((B, Nmax))
-        A = np.ones((B, Mmax))
-        J = np.empty(B)
-        any_c = any(s.C is not None for s in cspecs)
-        C = np.zeros((B, Mmax)) if any_c else None
-        has_c = np.zeros(B, dtype=bool)
-        ns = np.empty(B, dtype=np.int64)
-        ms = np.empty(B, dtype=np.int64)
-        for k, s in enumerate(cspecs):
-            n, m = s.num_sources, s.num_processors
-            G[k, :n], R[k, :n], A[k, :m], J[k] = s.G, s.R, s.A, s.J
-            if s.C is not None:
-                C[k, :m] = s.C
-                has_c[k] = True
-            ns[k], ms[k] = n, m
-        return cls(G=G, R=R, A=A, J=J, C=C, n_sources=ns, n_procs=ms,
-                   has_cost=has_c)
-
-    def _lane_has_cost(self, k: int) -> bool:
-        if self.C is None:
-            return False
-        return bool(self.has_cost[k]) if self.has_cost is not None else True
-
-    def scenario(self, k: int) -> SystemSpec:
-        """The k-th scenario as a scalar (already canonical) SystemSpec."""
-        n, m = int(self.n_sources[k]), int(self.n_procs[k])
-        return SystemSpec(
-            G=self.G[k, :n], R=self.R[k, :n], A=self.A[k, :m],
-            J=float(self.J[k]),
-            C=self.C[k, :m] if self._lane_has_cost(k) else None,
-        )
+    c: np.ndarray      # (B, n_std) objective over z = [vars, slacks, arts]
+    F: np.ndarray      # (B, n_rows, nv) variable block of A
+    b: np.ndarray      # (B, n_rows) rhs
+    art: np.ndarray    # (B, n_eq) artificial-diagonal (1.0 on padded eq rows)
+    dims: FamilyDims
 
 
-# ---------------------------------------------------------------------------
-# Vectorized padded LP embedding
-# ---------------------------------------------------------------------------
-
-def _family_dims(Nmax: int, Mmax: int, frontend: bool):
-    """Static (nv, n_ub, n_eq) of the padded LP family."""
-    if frontend:
-        nv = Nmax * Mmax + 1
-        n_ub = (Nmax - 1) + (Nmax - 1) * (Mmax - 1) + Mmax
-        n_eq = 1
-    else:
-        nv = 3 * Nmax * Mmax + 1
-        n_ub = ((Nmax - 1) * Mmax + Nmax * (Mmax - 1)
-                + 2 * (Nmax - 1) + Mmax)
-        n_eq = Nmax * Mmax + 2
-    return nv, n_ub, n_eq
-
-
-def _frontend_rows(bs: BatchedSystemSpec):
-    """Sec 3.1 LP rows (Eqs 3-6), batched over B with row/column masking."""
-    B, N, M = bs.batch, bs.n_max, bs.m_max
-    G, R, A, J = bs.G, bs.R, bs.A, bs.J
-    ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
-    nv, n_ub, _ = _family_dims(N, M, True)
-    tf = N * M
-
-    A_ub = np.zeros((B, n_ub, nv))
-    b_ub = np.zeros((B, n_ub))
-
-    # (Eq 3)  -beta_{i,1} A_1 <= R_i - R_{i+1},  rows [0, N-1)
-    if N > 1:
-        i3 = np.arange(N - 1)
-        act3 = (i3[None, :] + 1) < ns
-        A_ub[:, i3, i3 * M] = np.where(act3, -A[:, :1], 0.0)
-        b_ub[:, i3] = np.where(act3, R[:, :-1] - R[:, 1:], 1.0)
-
-    # (Eq 4)  beta_{i,j}(A_j - G_i) + beta_{i+1,j} G_{i+1}
-    #         - beta_{i,j+1} A_{j+1} <= 0,  rows [N-1, N-1 + (N-1)(M-1))
-    o4 = N - 1
-    if N > 1 and M > 1:
-        ii = np.repeat(np.arange(N - 1), M - 1)
-        jj = np.tile(np.arange(M - 1), N - 1)
-        act4 = ((ii[None, :] + 1) < ns) & ((jj[None, :] + 1) < ms)
-        r4 = o4 + np.arange(ii.size)
-        A_ub[:, r4, ii * M + jj] = np.where(act4, A[:, jj] - G[:, ii], 0.0)
-        A_ub[:, r4, (ii + 1) * M + jj] = np.where(act4, G[:, ii + 1], 0.0)
-        A_ub[:, r4, ii * M + jj + 1] = np.where(act4, -A[:, jj + 1], 0.0)
-        b_ub[:, r4] = np.where(act4, 0.0, 1.0)
-
-    # (Eq 5)  sum_{k<j} beta_{1,k} G_1 + A_j sum_i beta_{i,j} - T_f <= -R_1
-    o5 = (N - 1) + (N - 1) * (M - 1)
-    jc = np.arange(M)
-    act5 = jc[None, :] < ms
-    tri = (jc[:, None] > jc[None, :]).astype(float)       # (row j, col k<j)
-    A_ub[:, o5: o5 + M, 0:M] = G[:, 0, None, None] * tri[None]
-    rows = np.repeat(jc, N)
-    cols = np.tile(np.arange(N), M) * M + np.repeat(jc, N)
-    A_ub[:, o5 + rows, cols] = A[:, np.repeat(jc, N)]
-    A_ub[:, o5 + jc, tf] = -1.0
-    A_ub[:, o5: o5 + M] *= act5[:, :, None]
-    b_ub[:, o5 + jc] = np.where(act5, -R[:, :1], 1.0)
-
-    # (Eq 6)  sum beta = J  (padded columns masked out later)
-    A_eq = np.zeros((B, 1, nv))
-    A_eq[:, 0, :tf] = 1.0
-    b_eq = J[:, None].copy()
-    eq_active = np.ones((B, 1), dtype=bool)
-    return A_ub, b_ub, A_eq, b_eq, eq_active
-
-
-def _nofrontend_rows(bs: BatchedSystemSpec):
-    """Sec 3.2 LP rows (Eqs 7-14), batched over B with row/column masking."""
-    B, N, M = bs.batch, bs.n_max, bs.m_max
-    G, R, A, J = bs.G, bs.R, bs.A, bs.J
-    ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
-    nm = N * M
-    nv, n_ub, n_eq = _family_dims(N, M, False)
-    tf = 3 * nm
-    cell = bs.cell_mask.reshape(B, nm)
-
-    def b_(i, j):
-        return i * M + j
-
-    def ts(i, j):
-        return nm + i * M + j
-
-    def tfn(i, j):
-        return 2 * nm + i * M + j
-
-    A_ub = np.zeros((B, n_ub, nv))
-    b_ub = np.zeros((B, n_ub))
-
-    # (Eq 8)  TF_{i,j} - TS_{i+1,j} <= 0,  (N-1)*M rows
-    o8 = 0
-    if N > 1:
-        ii = np.repeat(np.arange(N - 1), M)
-        jj = np.tile(np.arange(M), N - 1)
-        act = ((ii[None, :] + 1) < ns) & (jj[None, :] < ms)
-        r = o8 + np.arange(ii.size)
-        A_ub[:, r, tfn(ii, jj)] = np.where(act, 1.0, 0.0)
-        A_ub[:, r, ts(ii + 1, jj)] = np.where(act, -1.0, 0.0)
-        b_ub[:, r] = np.where(act, 0.0, 1.0)
-
-    # (Eq 9)  TF_{i,j} - TS_{i,j+1} <= 0,  N*(M-1) rows
-    o9 = (N - 1) * M
-    if M > 1:
-        ii = np.repeat(np.arange(N), M - 1)
-        jj = np.tile(np.arange(M - 1), N)
-        act = (ii[None, :] < ns) & ((jj[None, :] + 1) < ms)
-        r = o9 + np.arange(ii.size)
-        A_ub[:, r, tfn(ii, jj)] = np.where(act, 1.0, 0.0)
-        A_ub[:, r, ts(ii, jj + 1)] = np.where(act, -1.0, 0.0)
-        b_ub[:, r] = np.where(act, 0.0, 1.0)
-
-    # (Eq 11) -TS_{i,1} <= -R_i  and  (Eq 12) -TF_{i-1,1} <= -R_i, i=2..N
-    o11 = o9 + N * (M - 1)
-    o12 = o11 + (N - 1)
-    if N > 1:
-        i1 = np.arange(1, N)
-        act = i1[None, :] < ns
-        r11 = o11 + np.arange(N - 1)
-        A_ub[:, r11, ts(i1, 0)] = np.where(act, -1.0, 0.0)
-        b_ub[:, r11] = np.where(act, -R[:, 1:], 1.0)
-        r12 = o12 + np.arange(N - 1)
-        A_ub[:, r12, tfn(i1 - 1, 0)] = np.where(act, -1.0, 0.0)
-        b_ub[:, r12] = np.where(act, -R[:, 1:], 1.0)
-
-    # (Eq 13) TF_{N,j} + A_j sum_i beta_{i,j} - T_f <= 0  (N = per-scenario!)
-    o13 = o12 + (N - 1)
-    jc = np.arange(M)
-    act13 = jc[None, :] < ms
-    rows = np.repeat(jc, N)
-    cols = b_(np.tile(np.arange(N), M), np.repeat(jc, N))
-    A_ub[:, o13 + rows, cols] = A[:, np.repeat(jc, N)]
-    batch_ix = np.arange(B)[:, None]
-    last_tf_col = tfn(bs.n_sources[:, None] - 1, jc[None, :])  # (B, M)
-    A_ub[batch_ix, o13 + jc[None, :], last_tf_col] = 1.0
-    A_ub[:, o13 + jc, tf] = -1.0
-    A_ub[:, o13: o13 + M] *= act13[:, :, None]
-    b_ub[:, o13 + jc] = np.where(act13, 0.0, 1.0)
-
-    # equality rows: (Eq 7) per cell, then (Eq 10), (Eq 14)
-    A_eq = np.zeros((B, n_eq, nv))
-    b_eq = np.zeros((B, n_eq))
-    eq_active = np.ones((B, n_eq), dtype=bool)
-
-    ii = np.repeat(np.arange(N), M)
-    jj = np.tile(np.arange(M), N)
-    r7 = np.arange(nm)
-    act7 = cell
-    A_eq[:, r7, tfn(ii, jj)] = np.where(act7, 1.0, 0.0)
-    A_eq[:, r7, ts(ii, jj)] = np.where(act7, -1.0, 0.0)
-    A_eq[:, r7, b_(ii, jj)] = np.where(act7, -G[:, ii], 0.0)
-    eq_active[:, r7] = act7
-
-    A_eq[:, nm, ts(0, 0)] = 1.0          # (Eq 10) TS_{1,1} = R_1
-    b_eq[:, nm] = R[:, 0]
-    A_eq[:, nm + 1, :nm] = 1.0           # (Eq 14) sum beta = J
-    b_eq[:, nm + 1] = J
-    return A_ub, b_ub, A_eq, b_eq, eq_active
-
-
-def build_standard_form_batch(bs: BatchedSystemSpec, frontend: bool):
-    """Stacked standard-form LPs:  min c'z  s.t.  A z = b, z >= 0.
+def build_family_lp(bs: BatchedSystemSpec,
+                    formulation: "Formulation | str | bool") -> FamilyLP:
+    """Stacked standard-form LPs ``min c'z s.t. Az=b, z>=0`` for a family.
 
     z = [lp_vars (nv) | ub slacks (n_ub) | eq artificials (n_eq)] per lane.
     Padded LP variables get a zero column and objective ``+1`` (optimum 0);
     padded ub rows read ``slack = 1``; padded eq rows ``artificial = 1``;
-    artificials of REAL eq rows are themselves masked variables.  Returns
-    (c (B, n), A (B, m, n), b (B, m)).
+    artificials of REAL eq rows are themselves masked variables.
     """
-    B, N, M = bs.batch, bs.n_max, bs.m_max
-    nv, n_ub, n_eq = _family_dims(N, M, frontend)
-    rows = _frontend_rows(bs) if frontend else _nofrontend_rows(bs)
-    A_ub, b_ub, A_eq, b_eq, eq_active = rows
+    fm = get_formulation(formulation)
+    dims = fm.family_dims(bs.n_max, bs.m_max)
+    nv, n_ub, n_eq = dims.nv, dims.n_ub, dims.n_eq
+    B = bs.batch
+    rows = fm.build_batch_rows(bs)
+    colmask = fm.batch_column_mask(bs)
 
-    # column mask: real beta/TS/TF cells + T_f
-    cell = bs.cell_mask.reshape(B, N * M)
-    blocks = 1 if frontend else 3
-    colmask = np.concatenate(
-        [np.tile(cell, (1, blocks)), np.ones((B, 1), dtype=bool)], axis=1)
-    A_ub = A_ub * colmask[:, None, :]
-    A_eq = A_eq * colmask[:, None, :]
+    A_ub = rows.A_ub * colmask[:, None, :]
+    A_eq = rows.A_eq * colmask[:, None, :]
+    F = np.concatenate([A_ub, A_eq], axis=1)
+    art = np.where(rows.eq_active, 0.0, 1.0)
+    b = np.concatenate(
+        [rows.b_ub, np.where(rows.eq_active, rows.b_eq, 1.0)], axis=1)
 
-    n_std = nv + n_ub + n_eq
-    mrows = n_ub + n_eq
-    A = np.zeros((B, mrows, n_std))
-    A[:, :n_ub, :nv] = A_ub
-    A[:, :n_ub, nv: nv + n_ub] = np.eye(n_ub)[None]
-    A[:, n_ub:, :nv] = A_eq
-    # artificial columns live only on padded eq rows (rhs 1)
-    r_eq = np.arange(n_eq)
-    art = np.where(eq_active, 0.0, 1.0)
-    A[:, n_ub + r_eq, nv + n_ub + r_eq] = art
-    b = np.concatenate([b_ub, np.where(eq_active, b_eq, 1.0)], axis=1)
-
-    c = np.zeros((B, n_std))
+    c = np.zeros((B, dims.n_std))
     c[:, nv - 1] = 1.0                      # T_f (last LP variable)
     masked_vars = ~colmask
     masked_vars[:, nv - 1] = False
     c[:, :nv][masked_vars] = 1.0
-    c[:, nv + n_ub:][eq_active] = 1.0       # artificials of real eq rows
-    return c, A, b
+    c[:, nv + n_ub:][rows.eq_active] = 1.0  # artificials of real eq rows
+    return FamilyLP(c=c, F=F, b=b, art=art, dims=dims)
+
+
+def build_standard_form_batch(bs: BatchedSystemSpec,
+                              formulation: "Formulation | str | bool"):
+    """Dense ``(c (B, n), A (B, m, n), b (B, m))`` stacked standard form.
+
+    ``formulation`` accepts a registry name, a :class:`Formulation`, or the
+    legacy bool (``True`` = Sec 3.1 front-end, ``False`` = Sec 3.2).
+    """
+    fam = build_family_lp(bs, formulation)
+    nv, n_ub, n_eq = fam.dims.nv, fam.dims.n_ub, fam.dims.n_eq
+    B, mrows = fam.b.shape
+    A = np.zeros((B, mrows, fam.dims.n_std))
+    A[:, :, :nv] = fam.F
+    A[:, :n_ub, nv: nv + n_ub] = np.eye(n_ub)[None]
+    r_eq = np.arange(n_eq)
+    A[:, n_ub + r_eq, nv + n_ub + r_eq] = fam.art
+    return fam.c, A, fam.b
 
 
 # ---------------------------------------------------------------------------
 # Fixed-budget interior-point LP solver (homogeneous self-dual embedding)
 # ---------------------------------------------------------------------------
 
-def _hsde_ipm(c, A, b, max_iter: int, tol: float):
+def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float):
     """min c'x s.t. Ax=b, x>=0 via Mehrotra predictor-corrector on the HSDE.
 
-    Shape-static: a while_loop capped at ``max_iter`` iterations that (under
-    vmap) exits once every lane is decided.  Returns (x, obj, status, iters)
-    where x is the primal solution (x/tau).  HSDE certificates make
-    infeasibility detection residual-based: the embedding is always
-    feasible and converges either to tau>0 (optimum) or tau->0 with
-    kappa>0 (primal or dual infeasible).
+    The constraint matrix enters only through three linear maps —
+    ``A_mul(x)``, ``AT_mul(y)`` and ``normal_mat(dinv) = A diag(dinv) A'``
+    — so dense and structured ``[F | I]`` instantiations share this body.
+    Shape-static: a while_loop capped at ``max_iter`` iterations that
+    (under vmap) exits once every lane is decided.  Returns
+    (x, obj, status, iters) where x is the primal solution (x/tau).  HSDE
+    certificates make infeasibility detection residual-based: the
+    embedding is always feasible and converges either to tau>0 (optimum)
+    or tau->0 with kappa>0 (primal or dual infeasible).
     """
     n = c.shape[0]
     m = b.shape[0]
@@ -380,8 +195,8 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float):
 
     def classify(x, y, s, tau, kappa):
         mu = (x @ s + tau * kappa) / (n + 1)
-        rho_p = jnp.linalg.norm(b * tau - A @ x) / nb
-        rho_d = jnp.linalg.norm(c * tau - A.T @ y - s) / nc
+        rho_p = jnp.linalg.norm(b * tau - A_mul(x)) / nb
+        rho_d = jnp.linalg.norm(c * tau - AT_mul(y) - s) / nc
         rho_g = jnp.abs(c @ x - b @ y + kappa) / (nb + nc)
         bty = b @ y
         rho_A = jnp.abs(c @ x - bty) / (tau + jnp.abs(bty))
@@ -404,14 +219,13 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float):
     def body(carry):
         x, y, s, tau, kappa, status, done, nit = carry
         mu = (x @ s + tau * kappa) / (n + 1)
-        rP = b * tau - A @ x
-        rD = c * tau - A.T @ y - s
+        rP = b * tau - A_mul(x)
+        rD = c * tau - AT_mul(y) - s
         rG = c @ x - b @ y + kappa
 
         # normal-equations matrix M = A diag(x/s) A' (+ tiny relative ridge)
         dinv = x / s
-        Adi = A * dinv[None, :]
-        Mmat = Adi @ A.T
+        Mmat = normal_mat(dinv)
         Mmat = Mmat + (1e-13 * (jnp.trace(Mmat) / m + 1.0)) * jnp.eye(m)
         L = jnp.linalg.cholesky(Mmat)
 
@@ -419,15 +233,18 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float):
             z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
             return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
 
+        def A_d_mul(r):  # A diag(dinv) r
+            return A_mul(dinv * r)
+
         # tau-column system, shared by predictor and corrector
-        v = solve_M(b + Adi @ c)
-        xv = dinv * (A.T @ v - c)
+        v = solve_M(b + A_d_mul(c))
+        xv = dinv * (AT_mul(v) - c)
         denom_v = b @ v - c @ xv + kappa / tau
 
         def direction(eta, cc, ck):
             w = -eta * rD + cc / x
-            u = solve_M(eta * rP - Adi @ w)
-            xu = dinv * (A.T @ u + w)
+            u = solve_M(eta * rP - A_d_mul(w))
+            xu = dinv * (AT_mul(u) + w)
             dtau = (eta * rG + ck / tau - b @ u + c @ xu) / denom_v
             dy = u + dtau * v
             dx = xu + dtau * xv
@@ -478,6 +295,51 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float):
     return xsol, c @ xsol, status, nit
 
 
+def _hsde_ipm(c, A, b, max_iter: int, tol: float):
+    """Dense instantiation (generic ``A``) of the HSDE kernel."""
+
+    def A_mul(z):
+        return A @ z
+
+    def AT_mul(y):
+        return A.T @ y
+
+    def normal_mat(dinv):
+        return (A * dinv[None, :]) @ A.T
+
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol)
+
+
+def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float):
+    """Structured instantiation exploiting the ``[F | I]`` slack block.
+
+    ``A = [[F_ub, I, 0], [F_eq, 0, diag(art)]]``: slack and artificial
+    columns touch exactly one row each, so they add only a diagonal to the
+    normal equations — each iteration builds ``F D_v F' + diag(extra)``
+    (cost ``m^2 nv``) instead of the dense ``A D A'`` (cost ``m^2 (nv+m)``).
+    """
+    m, nv = F.shape
+    n_eq = art.shape[0]
+    n_ub = m - n_eq
+
+    def split(z):
+        return z[:nv], z[nv: nv + n_ub], z[nv + n_ub:]
+
+    def A_mul(z):
+        v, sl, ar = split(z)
+        return F @ v + jnp.concatenate([sl, art * ar])
+
+    def AT_mul(y):
+        return jnp.concatenate([F.T @ y, y[:n_ub], art * y[n_ub:]])
+
+    def normal_mat(dinv):
+        dv, dsl, dar = split(dinv)
+        extra = jnp.concatenate([dsl, art * art * dar])
+        return (F * dv[None, :]) @ F.T + jnp.diag(extra)
+
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol)
+
+
 @functools.lru_cache(maxsize=None)
 def _jitted_batch_solver(max_iter: int, tol: float):
     fn = functools.partial(_hsde_ipm, max_iter=max_iter, tol=tol)
@@ -494,8 +356,10 @@ def solve_lp_batch(c, A, b, max_iter: int = 25, tol: float = 1e-8):
       (x (B, n), obj (B,), status (B,), iters (B,)) — status per lane:
       0 optimal, 1 iteration budget exhausted, 2 infeasible/unbounded.
 
-    Runs in float64 under a locally scoped ``enable_x64`` so the rest of
-    the (float32) model stack is unaffected.
+    This is the generic dense entry point; :func:`batched_solve` routes
+    through the structured ``[F | I]`` kernel instead.  Runs in float64
+    under a locally scoped ``enable_x64`` so the rest of the (float32)
+    model stack is unaffected.
     """
     with jax.experimental.enable_x64():
         c = jnp.asarray(c, jnp.float64)
@@ -506,80 +370,120 @@ def solve_lp_batch(c, A, b, max_iter: int = 25, tol: float = 1e-8):
 
 
 # ---------------------------------------------------------------------------
-# Vectorized paper-constraint verifiers (the NumPy oracle, batched)
+# LRU cache of compiled family shapes
+# ---------------------------------------------------------------------------
+
+#: Entries kept in the compiled-executable LRU.  Each entry is one
+#: ahead-of-time compiled (batch, rows, vars) family shape of the
+#: structured kernel; eviction just means recompiling on next use.
+COMPILE_CACHE_SIZE = 64
+
+_COMPILED: "OrderedDict[tuple, object]" = OrderedDict()
+
+
+def _structured_executable(B: int, mrows: int, nv: int, n_eq: int,
+                           max_iter: int, tol: float):
+    """AOT-compiled ``jit(vmap(_hsde_ipm_structured))`` for one shape."""
+    key = (B, mrows, nv, n_eq, max_iter, tol)
+    exe = _COMPILED.get(key)
+    if exe is not None:
+        _COMPILED.move_to_end(key)
+        return exe
+    fn = jax.jit(jax.vmap(functools.partial(
+        _hsde_ipm_structured, max_iter=max_iter, tol=tol)))
+    f8 = np.dtype(np.float64)
+    sds = jax.ShapeDtypeStruct
+    exe = fn.lower(
+        sds((B, nv + mrows), f8),
+        sds((B, mrows, nv), f8),
+        sds((B, mrows), f8),
+        sds((B, n_eq), f8),
+    ).compile()
+    _COMPILED[key] = exe
+    while len(_COMPILED) > COMPILE_CACHE_SIZE:
+        _COMPILED.popitem(last=False)
+    return exe
+
+
+def compile_cache_info() -> dict:
+    """Shapes currently held by the compiled-family LRU (for ops/tests)."""
+    return {"size": len(_COMPILED), "maxsize": COMPILE_CACHE_SIZE,
+            "keys": list(_COMPILED)}
+
+
+def _solve_family(fam: FamilyLP, max_iter: int, tol: float,
+                  chunk_size: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Run the structured kernel over a family, chunked along the batch.
+
+    Lane counts are padded to the next power of two (repeating the last
+    lane) so the compiled-shape cache sees a bounded set of batch sizes;
+    padding lanes are dropped before returning.  vmap lanes are
+    independent, so real lanes' results are unaffected by the padding.
+    """
+    B = fam.c.shape[0]
+    mrows, nv = fam.F.shape[1], fam.F.shape[2]
+    n_eq = fam.art.shape[1]
+    xs, sts, nits = [], [], []
+    with jax.experimental.enable_x64():
+        for lo in range(0, B, chunk_size):
+            hi = min(lo + chunk_size, B)
+            Bk = hi - lo
+            Bp = 1 << (Bk - 1).bit_length()
+            parts = [fam.c[lo:hi], fam.F[lo:hi], fam.b[lo:hi],
+                     fam.art[lo:hi]]
+            if Bp != Bk:
+                parts = [np.concatenate(
+                    [p, np.repeat(p[-1:], Bp - Bk, axis=0)]) for p in parts]
+            exe = _structured_executable(Bp, mrows, nv, n_eq,
+                                         int(max_iter), float(tol))
+            x, _, st, ni = exe(*[jnp.asarray(p, jnp.float64) for p in parts])
+            xs.append(np.asarray(x)[:Bk])
+            sts.append(np.asarray(st)[:Bk])
+            nits.append(np.asarray(ni)[:Bk])
+    return np.concatenate(xs), np.concatenate(sts), np.concatenate(nits)
+
+
+# ---------------------------------------------------------------------------
+# Size-bucketed batching
+# ---------------------------------------------------------------------------
+
+def _bucket_m(m: int, edges: Sequence[int]) -> int:
+    for e in edges:
+        if m <= e:
+            return e
+    return m
+
+
+def _group_lanes(bs: BatchedSystemSpec, bucket: str,
+                 m_edges: Sequence[int]):
+    """Order-preserving lane groups keyed by padded bucket shape (n, m)."""
+    if bucket == "none":
+        return {(bs.n_max, bs.m_max): np.arange(bs.batch)}
+    if bucket != "size":
+        raise ValueError(f"unknown bucket mode {bucket!r}: use 'size' or 'none'")
+    groups: "OrderedDict[tuple, list]" = OrderedDict()
+    for k in range(bs.batch):
+        key = (int(bs.n_sources[k]), _bucket_m(int(bs.n_procs[k]), m_edges))
+        groups.setdefault(key, []).append(k)
+    return {key: np.asarray(idx) for key, idx in groups.items()}
+
+
+# ---------------------------------------------------------------------------
+# Vectorized paper-constraint verifiers (compat wrappers over the registry)
 # ---------------------------------------------------------------------------
 
 def verify_frontend_batch(bs: BatchedSystemSpec, beta: np.ndarray,
                           finish: np.ndarray, tol: float = 1e-6) -> np.ndarray:
-    """Check every Sec 3.1 constraint per scenario; True where all hold.
-
-    Mirrors :func:`repro.core.dlt.frontend_lp.verify_frontend` exactly,
-    vectorized over the padded batch (padded cells must be zero).
-    """
-    G, R, A, J = bs.G, bs.R, bs.A, bs.J
-    src, prc, cell = bs.source_mask, bs.proc_mask, bs.cell_mask
-    scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), J))
-    slack = tol * scale
-    ok = ~np.isnan(finish)
-
-    ok &= ~np.any((beta < -slack[:, None, None]) & cell, axis=(1, 2))
-    # Eq 3 (pairs of consecutive real sources; empty slices when N_max == 1)
-    pair = src[:, 1:]
-    lhs3 = R[:, 1:] - R[:, :-1]
-    ok &= ~np.any(pair & (lhs3 > beta[:, :-1, 0] * A[:, :1] + slack[:, None]),
-                  axis=1)
-    # Eq 4
-    if bs.n_max > 1 and bs.m_max > 1:
-        act = cell[:, 1:, :-1] & cell[:, :-1, 1:]
-        lhs = beta[:, :-1, :-1] * A[:, None, :-1] + beta[:, 1:, :-1] * G[:, 1:, None]
-        rhs = beta[:, :-1, :-1] * G[:, :-1, None] + beta[:, :-1, 1:] * A[:, None, 1:]
-        ok &= ~np.any(act & (lhs > rhs + slack[:, None, None]), axis=(1, 2))
-    # Eq 5
-    csum = np.concatenate(
-        [np.zeros((bs.batch, 1)), np.cumsum(beta[:, 0, :-1], axis=1)], axis=1)
-    need = R[:, :1] + G[:, :1] * csum + A * beta.sum(axis=1)
-    ok &= ~np.any(prc & (finish[:, None] < need - slack[:, None]), axis=1)
-    # Eq 6
-    ok &= np.abs(beta.sum(axis=(1, 2)) - J) <= slack
-    return ok
+    """Check every Sec 3.1 constraint per scenario; True where all hold."""
+    return get_formulation("frontend").verify_batch(
+        bs, BatchFields(beta=beta, finish=finish), tol)
 
 
 def verify_nofrontend_batch(bs: BatchedSystemSpec, beta, TS, TF, finish,
                             tol: float = 1e-6) -> np.ndarray:
     """Check every Sec 3.2 constraint per scenario; True where all hold."""
-    G, R, A, J = bs.G, bs.R, bs.A, bs.J
-    src, prc, cell = bs.source_mask, bs.proc_mask, bs.cell_mask
-    B = bs.batch
-    scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), J))
-    slack = tol * scale
-    s3 = slack[:, None, None]
-    ok = ~np.isnan(finish)
-
-    ok &= ~np.any((beta < -s3) & cell, axis=(1, 2))
-    # Eq 7
-    ok &= ~np.any(cell & (np.abs(TF - TS - beta * G[:, :, None]) > s3),
-                  axis=(1, 2))
-    # Eq 8 / Eq 9
-    if bs.n_max > 1:
-        act = cell[:, 1:, :]
-        ok &= ~np.any(act & (TF[:, :-1, :] > TS[:, 1:, :] + s3), axis=(1, 2))
-    if bs.m_max > 1:
-        act = cell[:, :, 1:]
-        ok &= ~np.any(act & (TF[:, :, :-1] > TS[:, :, 1:] + s3), axis=(1, 2))
-    # Eq 10-12
-    ok &= np.abs(TS[:, 0, 0] - R[:, 0]) <= slack
-    if bs.n_max > 1:
-        act = src[:, 1:]
-        ok &= ~np.any(act & (TS[:, 1:, 0] < R[:, 1:] - slack[:, None]), axis=1)
-        ok &= ~np.any(act & (TF[:, :-1, 0] < R[:, 1:] - slack[:, None]), axis=1)
-    # Eq 13 (TF of each scenario's LAST real source)
-    last = np.maximum(bs.n_sources - 1, 0)
-    tf_last = TF[np.arange(B), last, :]                    # (B, M_max)
-    need = tf_last + A * beta.sum(axis=1)
-    ok &= ~np.any(prc & (finish[:, None] < need - slack[:, None]), axis=1)
-    # Eq 14
-    ok &= np.abs(beta.sum(axis=(1, 2)) - J) <= slack
-    return ok
+    return get_formulation("nofrontend").verify_batch(
+        bs, BatchFields(beta=beta, TS=TS, TF=TF, finish=finish), tol)
 
 
 # ---------------------------------------------------------------------------
@@ -592,7 +496,9 @@ class BatchedSolution:
 
     ``beta[k]`` rows/cols beyond ``(n_sources[k], n_procs[k])`` are zero.
     ``status[k]`` follows the module STATUS_* codes; infeasible scenarios
-    carry NaN finish times.
+    carry NaN finish times.  ``fallback_mask[k]`` is True where the IPM
+    could not certify the lane and the scalar simplex oracle was (or would
+    have been) consulted; ``fallback_count`` totals them.
     """
 
     spec: BatchedSystemSpec
@@ -603,10 +509,17 @@ class BatchedSolution:
     iterations: np.ndarray        # (B,)
     TS: Optional[np.ndarray] = None  # (B, N_max, M_max) no-frontend only
     TF: Optional[np.ndarray] = None
+    formulation: str = ""
+    fallback_mask: Optional[np.ndarray] = None  # (B,) bool
 
     @property
     def batch(self) -> int:
         return self.spec.batch
+
+    @property
+    def fallback_count(self) -> int:
+        """Lanes the vectorized IPM could not certify on its own."""
+        return 0 if self.fallback_mask is None else int(self.fallback_mask.sum())
 
     def monetary_cost(self) -> np.ndarray:
         """Eq 17 per scenario (NaN where unsolved or the spec had no C)."""
@@ -641,59 +554,80 @@ class BatchedSolution:
 def batched_solve(
     specs,
     frontend: bool = True,
+    formulation: "Formulation | str | None" = None,
     max_iter: int = 25,
     tol: float = 1e-8,
     verify: bool = True,
     oracle_fallback: bool = True,
     presorted: bool = False,
     chunk_size: int = 256,
+    bucket: str = "size",
+    m_bucket_edges: Sequence[int] = DEFAULT_M_BUCKET_EDGES,
 ) -> BatchedSolution:
     """Solve a whole family of DLT programs in one jitted vmapped call.
 
     Args:
       specs: a sequence of :class:`SystemSpec` or a ready
         :class:`BatchedSystemSpec` (ragged (N, M) welcome — scenarios are
-        embedded in a shared padded LP shape).
+        embedded in shared padded LP shapes).
       frontend: Sec 3.1 (True) vs Sec 3.2 (False) formulation, whole batch.
+      formulation: registry name or :class:`Formulation` overriding
+        ``frontend``.  Defaults to ``"frontend"`` / the column-reduced
+        ``"nofrontend_reduced"`` (exactly equivalent to Sec 3.2 — pin
+        ``"nofrontend"`` for the full interval program).
       max_iter / tol: iteration budget and residual tolerance of the
         interior-point solver.
       verify: re-check each solved scenario against the paper constraint
-        sets (vectorized NumPy oracle).
+        sets (vectorized NumPy oracle; the reduced formulation is checked
+        against the ORIGINAL Sec 3.2 constraints).
       oracle_fallback: every scenario the IPM could not certify optimal —
         iteration-budget misses, verification misses, AND infeasibility
         verdicts — is re-solved with the scalar simplex path, so the
         returned batch is always simplex-confirmed: status 2 means the
-        oracle agreed the program is infeasible.
+        oracle agreed the program is infeasible.  Fallbacks are recorded
+        in ``fallback_mask`` / ``fallback_count`` either way.
       presorted: specs are already canonical (G-/A-ascending).
       chunk_size: scenarios per device batch (bounds peak memory for the
-        stacked (B, m, n) constraint tensors).
+        stacked constraint tensors).
+      bucket: ``"size"`` groups ragged scenarios into per-(N, M-bucket)
+        padded shapes (cuts the padding blowup for mixed size families);
+        ``"none"`` embeds everything in one global-max shape.
+      m_bucket_edges: processor-count bucket boundaries for ``"size"``.
     """
+    fm = get_formulation(
+        formulation if formulation is not None
+        else (True if frontend else DEFAULT_NOFRONTEND_FORMULATION))
+    frontend = fm.frontend
     bspec = (specs if isinstance(specs, BatchedSystemSpec)
              else BatchedSystemSpec.from_specs(specs, presorted=presorted))
     B, Nmax, Mmax = bspec.batch, bspec.n_max, bspec.m_max
 
-    c, A, b = build_standard_form_batch(bspec, frontend)
-    xs, statuses, iterss = [], [], []
-    for lo in range(0, B, chunk_size):
-        hi = min(lo + chunk_size, B)
-        x, _, st, ni = solve_lp_batch(c[lo:hi], A[lo:hi], b[lo:hi],
-                                      max_iter=max_iter, tol=tol)
-        xs.append(x)
-        statuses.append(st)
-        iterss.append(ni)
-    x = np.concatenate(xs)
-    status = np.concatenate(statuses)
-    iters = np.concatenate(iterss)
+    beta = np.zeros((B, Nmax, Mmax))
+    finish = np.full(B, np.nan)
+    TS = TF = None
+    if fm.has_intervals:
+        TS = np.zeros((B, Nmax, Mmax))
+        TF = np.zeros((B, Nmax, Mmax))
+    status = np.full(B, STATUS_MAXITER, dtype=np.int64)
+    iters = np.zeros(B, dtype=np.int64)
 
-    nmp = Nmax * Mmax
-    beta = x[:, :nmp].reshape(B, Nmax, Mmax).copy()
-    if frontend:
-        TS = TF = None
-        finish = x[:, nmp].copy()
-    else:
-        TS = x[:, nmp: 2 * nmp].reshape(B, Nmax, Mmax).copy()
-        TF = x[:, 2 * nmp: 3 * nmp].reshape(B, Nmax, Mmax).copy()
-        finish = x[:, 3 * nmp].copy()
+    for (nb, mb), idx in _group_lanes(bspec, bucket, m_bucket_edges).items():
+        # never pad past the group's true max — a group's padded shape then
+        # depends only on its own lanes, so solving it inside a ragged batch
+        # or alone is the same computation (and the largest bucket is tight)
+        mb = min(mb, int(bspec.n_procs[idx].max()))
+        sub = bspec.take(idx, n_pad=nb, m_pad=mb)
+        fam = build_family_lp(sub, fm)
+        x, st, ni = _solve_family(fam, max_iter, tol, chunk_size)
+        fields = fm.unpack_batch(sub, x)
+        sl = np.ix_(idx, np.arange(nb), np.arange(mb))
+        beta[sl] = fields.beta
+        finish[idx] = fields.finish
+        if fm.has_intervals:
+            TS[sl] = fields.TS
+            TF[sl] = fields.TF
+        status[idx] = st
+        iters[idx] = ni
 
     # exact zeros on padding (IPM leaves ~tol-level dust on masked vars)
     cell = bspec.cell_mask
@@ -704,14 +638,13 @@ def batched_solve(
 
     ok = status == STATUS_OPTIMAL
     if verify:
-        if frontend:
-            good = verify_frontend_batch(bspec, beta, finish)
-        else:
-            good = verify_nofrontend_batch(bspec, beta, TS, TF, finish)
+        good = fm.verify_batch(
+            bspec, BatchFields(beta=beta, finish=finish, TS=TS, TF=TF))
         demoted = ok & ~good
         status[demoted] = STATUS_MAXITER
         ok &= good
 
+    fallback_mask = ~ok
     if oracle_fallback:
         # every uncertified lane — including IPM infeasibility verdicts,
         # which the simplex either confirms or overturns with a solution
@@ -727,11 +660,16 @@ def batched_solve(
             beta[k] = 0.0
             beta[k, :n, :m] = sched.beta
             finish[k] = sched.finish_time
-            if TS is not None and sched.TS is not None:
+            if TS is not None:
                 TS[k] = 0.0
                 TF[k] = 0.0
-                TS[k, :n, :m] = sched.TS
-                TF[k, :n, :m] = sched.TF
+                if sched.TS is not None:
+                    TS[k, :n, :m] = sched.TS
+                    TF[k, :n, :m] = sched.TF
+                else:
+                    # Sec 2 closed form (single source): back-to-back chain
+                    TS[k, 0, :m], TF[k, 0, :m] = single_source_intervals(
+                        sp.R[0], sp.G[0], sched.beta[0])
             status[k] = STATUS_OPTIMAL
 
     infeasible = status == STATUS_INFEASIBLE
@@ -743,4 +681,5 @@ def batched_solve(
     return BatchedSolution(
         spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
         status=status, iterations=iters, TS=TS, TF=TF,
+        formulation=fm.name, fallback_mask=fallback_mask,
     )

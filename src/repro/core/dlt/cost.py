@@ -60,15 +60,18 @@ def sweep_processors(
     solver: str = "auto",
     m_max: Optional[int] = None,
     engine: str = "batched",
+    formulation: Optional[str] = None,
 ) -> ProcessorSweep:
     """Solve the DLT program for every prefix of the (sorted) processor list.
 
     ``engine="batched"`` (default) solves all prefixes in one jitted vmapped
     interior-point call (see :mod:`repro.core.dlt.batched`), with the scalar
     simplex as per-scenario verification oracle and fallback.
-    ``engine="scalar"`` keeps the original one-LP-at-a-time loop.  A pinned
-    ``solver`` (anything but "auto") implies the scalar engine, which is
-    the only path that honors it.
+    ``engine="scalar"`` keeps the original one-LP-at-a-time loop.
+    ``formulation`` pins a registry formulation for either engine (the
+    batched default is the column-reduced Sec 3.2 program when
+    ``frontend=False``).  A pinned ``solver`` (anything but "auto") implies
+    the scalar engine, which is the only path that honors it.
     """
     if engine not in ("batched", "scalar"):
         raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
@@ -80,7 +83,8 @@ def sweep_processors(
         from .batched import STATUS_OPTIMAL, batched_solve
 
         subs = [cspec.subset_processors(m) for m in range(1, M + 1)]
-        sol = batched_solve(subs, frontend=frontend, presorted=True)
+        sol = batched_solve(subs, frontend=frontend,
+                            formulation=formulation, presorted=True)
         keep = sol.status == STATUS_OPTIMAL
         ms = np.flatnonzero(keep) + 1
         costs = (sol.monetary_cost()[keep] if cspec.C is not None
@@ -90,7 +94,8 @@ def sweep_processors(
     for m in range(1, M + 1):
         sub = cspec.subset_processors(m)
         try:
-            sched = solve(sub, frontend=frontend, solver=solver, presorted=True)
+            sched = solve(sub, frontend=frontend, solver=solver,
+                          presorted=True, formulation=formulation)
         except InfeasibleError:
             continue
         ms.append(m)

@@ -1,0 +1,42 @@
+"""Formulation registry for the paper's DLT programs.
+
+Every LP formulation — Sec 3.1 front-end, Sec 3.2 no-front-end, and the
+column-reduced no-front-end chain variant — is one :class:`Formulation`
+object exposing scalar builds, batched row builds, unpacking, and
+verification.  The scalar simplex path and the batched interior-point
+engine share these objects, so each LP row and each paper constraint is
+written down exactly once.
+
+>>> from repro.core.dlt.formulations import get_formulation
+>>> get_formulation("nofrontend_reduced").family_dims(2, 8)
+FamilyDims(nv=25, n_ub=25, n_eq=1)
+"""
+
+from .base import (
+    BatchFields,
+    BatchRows,
+    FamilyDims,
+    Formulation,
+    available_formulations,
+    get_formulation,
+    register_formulation,
+)
+from .frontend import FRONTEND, FrontendFormulation
+from .nofrontend import NOFRONTEND, NoFrontendFormulation
+from .nofrontend_reduced import NOFRONTEND_REDUCED, ReducedNoFrontendFormulation
+
+__all__ = [
+    "Formulation",
+    "FamilyDims",
+    "BatchRows",
+    "BatchFields",
+    "register_formulation",
+    "get_formulation",
+    "available_formulations",
+    "FrontendFormulation",
+    "NoFrontendFormulation",
+    "ReducedNoFrontendFormulation",
+    "FRONTEND",
+    "NOFRONTEND",
+    "NOFRONTEND_REDUCED",
+]

@@ -1,0 +1,216 @@
+"""Formulation registry — each paper LP as one pluggable object.
+
+A :class:`Formulation` owns everything the solvers need to know about one
+of the paper's programs:
+
+* ``family_dims``       — static LP shape of the padded ``(N_max, M_max)``
+  family (variable / inequality-row / equality-row counts),
+* ``build_batch_rows``  — the vectorized constraint rows over a
+  :class:`~repro.core.dlt.stacking.BatchedSystemSpec` (the ONLY place row
+  coefficients are written down — the scalar path derives from it),
+* ``batch_column_mask`` — which LP variables are real per scenario,
+* ``unpack_batch``      — solution vector -> named schedule fields,
+* ``constraint_checks`` — the paper constraint set as labeled vectorized
+  predicates, shared by the batch verifier and the scalar verifier.
+
+The scalar entry points (``build_scalar``, ``unpack_scalar``,
+``verify_scalar``) are derived on a one-lane batch, so there is exactly
+one implementation of every LP row and every constraint check in the
+repo, used by the simplex path and the batched interior-point path alike.
+
+Conventions shared by every formulation:
+
+* LP variables are nonnegative and the LAST variable is the objective
+  ``T_f`` (minimized);
+* inequality rows read ``A_ub x <= b_ub``, equalities ``A_eq x = b_eq``;
+* a padded scenario's inactive rows must read ``0 <= 1`` / come with
+  ``eq_active=False`` so the standard-form embedding can park them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Optional, Tuple, Union
+
+import numpy as np
+
+from ..stacking import BatchedSystemSpec
+from ..types import Schedule, SystemSpec
+
+__all__ = [
+    "FamilyDims",
+    "BatchRows",
+    "BatchFields",
+    "Formulation",
+    "register_formulation",
+    "get_formulation",
+    "available_formulations",
+]
+
+
+class FamilyDims(NamedTuple):
+    """Static shape of one padded LP family."""
+
+    nv: int     # LP variables (incl. T_f, the last one)
+    n_ub: int   # inequality rows
+    n_eq: int   # equality rows
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_ub + self.n_eq
+
+    @property
+    def n_std(self) -> int:
+        """Standard-form width: variables + ub slacks + eq artificials."""
+        return self.nv + self.n_ub + self.n_eq
+
+
+class BatchRows(NamedTuple):
+    """Stacked constraint rows of a padded family (B leading axis)."""
+
+    A_ub: np.ndarray       # (B, n_ub, nv)
+    b_ub: np.ndarray       # (B, n_ub)
+    A_eq: np.ndarray       # (B, n_eq, nv)
+    b_eq: np.ndarray       # (B, n_eq)
+    eq_active: np.ndarray  # (B, n_eq) bool — False on padded eq rows
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchFields:
+    """Named solution fields in the padded (B, N_max, M_max) layout."""
+
+    beta: np.ndarray            # (B, N_max, M_max)
+    finish: np.ndarray          # (B,)
+    TS: Optional[np.ndarray] = None
+    TF: Optional[np.ndarray] = None
+
+
+class Formulation:
+    """Base class: one paper LP formulation, scalar + batched."""
+
+    name: str = ""
+    frontend: bool = False        # Schedule semantics (Sec 3.1 vs 3.2)
+    has_intervals: bool = False   # unpack produces TS/TF
+
+    # ---- required per-formulation pieces -------------------------------
+
+    def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
+        raise NotImplementedError
+
+    def build_batch_rows(self, bs: BatchedSystemSpec) -> BatchRows:
+        raise NotImplementedError
+
+    def batch_column_mask(self, bs: BatchedSystemSpec) -> np.ndarray:
+        """(B, nv) bool — True on LP variables real for that scenario."""
+        raise NotImplementedError
+
+    def unpack_batch(self, bs: BatchedSystemSpec, x: np.ndarray) -> BatchFields:
+        """Solution vectors (B, >=nv) -> named fields (padding NOT zeroed)."""
+        raise NotImplementedError
+
+    def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
+                          tol: float) -> List[Tuple[str, np.ndarray]]:
+        """The paper constraint set as ``[(label, (B,) ok-mask), ...]``.
+
+        Fields must already have exact zeros on padded cells.
+        """
+        raise NotImplementedError
+
+    # ---- derived: batch verification -----------------------------------
+
+    def verify_batch(self, bs: BatchedSystemSpec, fields: BatchFields,
+                     tol: float = 1e-6) -> np.ndarray:
+        """(B,) True where every paper constraint holds."""
+        ok = ~np.isnan(fields.finish)
+        for _, mask in self.constraint_checks(bs, fields, tol):
+            ok &= mask
+        return ok
+
+    # ---- derived: scalar path (one-lane batch) -------------------------
+
+    def _singleton(self, spec: SystemSpec) -> BatchedSystemSpec:
+        return BatchedSystemSpec.from_specs([spec], presorted=True)
+
+    def build_scalar(self, spec: SystemSpec):
+        """(c, A_ub, b_ub, A_eq, b_eq) over x >= 0 for an exact-size spec."""
+        bs = self._singleton(spec)
+        dims = self.family_dims(bs.n_max, bs.m_max)
+        rows = self.build_batch_rows(bs)
+        c = np.zeros(dims.nv)
+        c[dims.nv - 1] = 1.0
+        return c, rows.A_ub[0], rows.b_ub[0], rows.A_eq[0], rows.b_eq[0]
+
+    def unpack_scalar(self, spec: SystemSpec, x: np.ndarray) -> Schedule:
+        bs = self._singleton(spec)
+        f = self.unpack_batch(bs, np.asarray(x)[None, :])
+        kw = {}
+        if self.has_intervals:
+            kw = {"TS": f.TS[0].copy(), "TF": f.TF[0].copy()}
+        return Schedule(spec=spec, beta=f.beta[0].copy(),
+                        finish_time=float(f.finish[0]),
+                        frontend=self.frontend, **kw)
+
+    def verify_scalar(self, sched: Schedule, tol: float = 1e-6) -> list:
+        """Violation labels (empty when the schedule satisfies the paper)."""
+        return self.verify_scalar_fields(
+            sched.spec, sched.beta, sched.finish_time,
+            TS=sched.TS, TF=sched.TF, tol=tol)
+
+    def verify_scalar_fields(self, spec: SystemSpec, beta: np.ndarray,
+                             finish: float, TS=None, TF=None,
+                             tol: float = 1e-6) -> list:
+        bs = self._singleton(spec)
+        fields = BatchFields(
+            beta=np.asarray(beta, dtype=np.float64)[None],
+            finish=np.asarray([finish], dtype=np.float64),
+            TS=None if TS is None else np.asarray(TS, dtype=np.float64)[None],
+            TF=None if TF is None else np.asarray(TF, dtype=np.float64)[None],
+        )
+        bad = []
+        if np.isnan(fields.finish[0]):
+            bad.append("finish time is NaN")
+        for label, mask in self.constraint_checks(bs, fields, tol):
+            if not mask[0]:
+                bad.append(f"{label} violated")
+        return bad
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Formulation] = {}
+
+FormulationLike = Union[Formulation, str, bool]
+
+
+def register_formulation(formulation: Formulation) -> Formulation:
+    """Register a formulation instance under its ``name``."""
+    if not formulation.name:
+        raise ValueError("formulation needs a non-empty name")
+    _REGISTRY[formulation.name] = formulation
+    return formulation
+
+
+def get_formulation(which: FormulationLike) -> Formulation:
+    """Resolve a formulation: instance, registry name, or legacy bool.
+
+    ``True`` / ``False`` map to the paper's Sec 3.1 front-end / Sec 3.2
+    no-front-end programs (the pre-registry API surface).
+    """
+    if isinstance(which, Formulation):
+        return which
+    if isinstance(which, (bool, np.bool_)):
+        return _REGISTRY["frontend" if which else "nofrontend"]
+    if isinstance(which, str):
+        try:
+            return _REGISTRY[which]
+        except KeyError:
+            raise KeyError(
+                f"unknown formulation {which!r}; available: "
+                f"{available_formulations()}") from None
+    raise TypeError(f"cannot resolve formulation from {which!r}")
+
+
+def available_formulations() -> list:
+    return sorted(_REGISTRY)

@@ -1,0 +1,159 @@
+"""Paper Sec 3.1 — multi-source multi-processor LP, processors WITH front-ends.
+
+A front-end lets a processor compute while its next fraction is still being
+received, so (given the paper's continuous-processing constraints) processor
+``P_j`` computes without interruption from the moment its first fraction
+starts arriving until the makespan.
+
+Variables (canonical sorted order):   x = [beta_{1,1..M}, ..., beta_{N,1..M}, T_f]
+
+Constraints:
+  (Eq 3)  release chaining:      R_{i+1} - R_i <= beta_{i,1} A_1
+  (Eq 4)  continuous processing: beta_{i,j} A_j + beta_{i+1,j} G_{i+1}
+                                   <= beta_{i,j} G_i + beta_{i,j+1} A_{j+1}
+  (Eq 5)  finish time:           T_f >= R_1 + sum_{k<j} beta_{1,k} G_1
+                                          + A_j sum_i beta_{i,j}
+  (Eq 6)  normalization:         sum_{i,j} beta_{i,j} = J
+
+Note: the paper's summary box prints the finish-time sum as ``k=1..j`` but the
+derivation (Eq 5) and the front-end semantics ("start computing once it starts
+receiving") give ``k=1..j-1`` — P_j's pipeline begins when S_1 *starts*
+sending its fraction, i.e. after serving P_1..P_{j-1}.  We implement Eq 5.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..stacking import BatchedSystemSpec
+from .base import (
+    BatchFields,
+    BatchRows,
+    FamilyDims,
+    Formulation,
+    register_formulation,
+)
+
+__all__ = ["FrontendFormulation", "FRONTEND"]
+
+
+class FrontendFormulation(Formulation):
+    """Sec 3.1 front-end LP: ``x = [beta (N*M), T_f]``."""
+
+    name = "frontend"
+    frontend = True
+    has_intervals = False
+
+    def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
+        N, M = n_max, m_max
+        return FamilyDims(
+            nv=N * M + 1,
+            n_ub=(N - 1) + (N - 1) * (M - 1) + M,
+            n_eq=1,
+        )
+
+    def batch_column_mask(self, bs: BatchedSystemSpec) -> np.ndarray:
+        cell = bs.cell_mask.reshape(bs.batch, -1)
+        return np.concatenate(
+            [cell, np.ones((bs.batch, 1), dtype=bool)], axis=1)
+
+    def build_batch_rows(self, bs: BatchedSystemSpec) -> BatchRows:
+        """Sec 3.1 LP rows (Eqs 3-6), batched over B with row/column masking."""
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        G, R, A, J = bs.G, bs.R, bs.A, bs.J
+        ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
+        dims = self.family_dims(N, M)
+        nv, n_ub = dims.nv, dims.n_ub
+        tf = N * M
+
+        A_ub = np.zeros((B, n_ub, nv))
+        b_ub = np.zeros((B, n_ub))
+
+        # (Eq 3)  -beta_{i,1} A_1 <= R_i - R_{i+1},  rows [0, N-1)
+        if N > 1:
+            i3 = np.arange(N - 1)
+            act3 = (i3[None, :] + 1) < ns
+            A_ub[:, i3, i3 * M] = np.where(act3, -A[:, :1], 0.0)
+            b_ub[:, i3] = np.where(act3, R[:, :-1] - R[:, 1:], 1.0)
+
+        # (Eq 4)  beta_{i,j}(A_j - G_i) + beta_{i+1,j} G_{i+1}
+        #         - beta_{i,j+1} A_{j+1} <= 0,  rows [N-1, N-1 + (N-1)(M-1))
+        o4 = N - 1
+        if N > 1 and M > 1:
+            ii = np.repeat(np.arange(N - 1), M - 1)
+            jj = np.tile(np.arange(M - 1), N - 1)
+            act4 = ((ii[None, :] + 1) < ns) & ((jj[None, :] + 1) < ms)
+            r4 = o4 + np.arange(ii.size)
+            A_ub[:, r4, ii * M + jj] = np.where(act4, A[:, jj] - G[:, ii], 0.0)
+            A_ub[:, r4, (ii + 1) * M + jj] = np.where(act4, G[:, ii + 1], 0.0)
+            A_ub[:, r4, ii * M + jj + 1] = np.where(act4, -A[:, jj + 1], 0.0)
+            b_ub[:, r4] = np.where(act4, 0.0, 1.0)
+
+        # (Eq 5)  sum_{k<j} beta_{1,k} G_1 + A_j sum_i beta_{i,j} - T_f <= -R_1
+        o5 = (N - 1) + (N - 1) * (M - 1)
+        jc = np.arange(M)
+        act5 = jc[None, :] < ms
+        tri = (jc[:, None] > jc[None, :]).astype(float)   # (row j, col k<j)
+        A_ub[:, o5: o5 + M, 0:M] = G[:, 0, None, None] * tri[None]
+        rows = np.repeat(jc, N)
+        cols = np.tile(np.arange(N), M) * M + np.repeat(jc, N)
+        A_ub[:, o5 + rows, cols] = A[:, np.repeat(jc, N)]
+        A_ub[:, o5 + jc, tf] = -1.0
+        A_ub[:, o5: o5 + M] *= act5[:, :, None]
+        b_ub[:, o5 + jc] = np.where(act5, -R[:, :1], 1.0)
+
+        # (Eq 6)  sum beta = J  (padded columns masked out downstream)
+        A_eq = np.zeros((B, 1, nv))
+        A_eq[:, 0, :tf] = 1.0
+        b_eq = J[:, None].copy()
+        eq_active = np.ones((B, 1), dtype=bool)
+        return BatchRows(A_ub, b_ub, A_eq, b_eq, eq_active)
+
+    def unpack_batch(self, bs: BatchedSystemSpec, x: np.ndarray) -> BatchFields:
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        nm = N * M
+        return BatchFields(
+            beta=x[:, :nm].reshape(B, N, M).copy(),
+            finish=x[:, nm].copy(),
+        )
+
+    def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
+                          tol: float):
+        """Eqs 3-6, vectorized over the padded batch (padded cells zero)."""
+        G, R, A, J = bs.G, bs.R, bs.A, bs.J
+        src, prc, cell = bs.source_mask, bs.proc_mask, bs.cell_mask
+        beta, finish = fields.beta, fields.finish
+        scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), J))
+        slack = tol * scale
+        checks = []
+
+        checks.append(("beta >= 0", ~np.any(
+            (beta < -slack[:, None, None]) & cell, axis=(1, 2))))
+        # Eq 3 (pairs of consecutive real sources; empty slices at N_max == 1)
+        pair = src[:, 1:]
+        lhs3 = R[:, 1:] - R[:, :-1]
+        checks.append(("Eq3", ~np.any(
+            pair & (lhs3 > beta[:, :-1, 0] * A[:, :1] + slack[:, None]),
+            axis=1)))
+        # Eq 4
+        if bs.n_max > 1 and bs.m_max > 1:
+            act = cell[:, 1:, :-1] & cell[:, :-1, 1:]
+            lhs = (beta[:, :-1, :-1] * A[:, None, :-1]
+                   + beta[:, 1:, :-1] * G[:, 1:, None])
+            rhs = (beta[:, :-1, :-1] * G[:, :-1, None]
+                   + beta[:, :-1, 1:] * A[:, None, 1:])
+            checks.append(("Eq4", ~np.any(
+                act & (lhs > rhs + slack[:, None, None]), axis=(1, 2))))
+        # Eq 5
+        csum = np.concatenate(
+            [np.zeros((bs.batch, 1)), np.cumsum(beta[:, 0, :-1], axis=1)],
+            axis=1)
+        need = R[:, :1] + G[:, :1] * csum + A * beta.sum(axis=1)
+        checks.append(("Eq5", ~np.any(
+            prc & (finish[:, None] < need - slack[:, None]), axis=1)))
+        # Eq 6
+        checks.append(("Eq6", np.abs(beta.sum(axis=(1, 2)) - J) <= slack))
+        return checks
+
+
+FRONTEND = register_formulation(FrontendFormulation())

@@ -1,0 +1,208 @@
+"""Paper Sec 3.2 — multi-source multi-processor LP, processors WITHOUT front-ends.
+
+Without a front-end a processor may only start computing after *all* of its
+load has arrived, so the LP additionally schedules every transmission interval
+explicitly via start/finish variables ``TS_{i,j}``/``TF_{i,j}``.
+
+Variables (canonical sorted order):
+    x = [beta (N*M), TS (N*M), TF (N*M), T_f]     all >= 0
+
+Constraints:
+  (Eq 7)   TF_{i,j} - TS_{i,j} = beta_{i,j} G_i            (transfer length)
+  (Eq 8)   TF_{i,j} <= TS_{i+1,j}                  (per-processor source order)
+  (Eq 9)   TF_{i,j} <= TS_{i,j+1}                  (per-source processor order)
+  (Eq 10)  TS_{1,1} = R_1
+  (Eq 11)  TS_{i,1} >= R_i                    i = 2..N
+  (Eq 12)  TF_{i-1,1} >= R_i                  i = 2..N      (keep sources busy)
+  (Eq 13)  T_f >= TF_{N,j} + A_j sum_i beta_{i,j}
+  (Eq 14)  sum beta = J
+
+See :mod:`.nofrontend_reduced` for the column-reduced equivalent that
+eliminates the ``TS`` block (and source 1's ``TF`` row) via this chain.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..stacking import BatchedSystemSpec
+from .base import (
+    BatchFields,
+    BatchRows,
+    FamilyDims,
+    Formulation,
+    register_formulation,
+)
+
+__all__ = ["NoFrontendFormulation", "NOFRONTEND"]
+
+
+class NoFrontendFormulation(Formulation):
+    """Sec 3.2 no-front-end LP: ``x = [beta, TS, TF, T_f]`` (3NM+1 vars)."""
+
+    name = "nofrontend"
+    frontend = False
+    has_intervals = True
+
+    def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
+        N, M = n_max, m_max
+        return FamilyDims(
+            nv=3 * N * M + 1,
+            n_ub=(N - 1) * M + N * (M - 1) + 2 * (N - 1) + M,
+            n_eq=N * M + 2,
+        )
+
+    def batch_column_mask(self, bs: BatchedSystemSpec) -> np.ndarray:
+        cell = bs.cell_mask.reshape(bs.batch, -1)
+        return np.concatenate(
+            [np.tile(cell, (1, 3)), np.ones((bs.batch, 1), dtype=bool)],
+            axis=1)
+
+    def build_batch_rows(self, bs: BatchedSystemSpec) -> BatchRows:
+        """Sec 3.2 LP rows (Eqs 7-14), batched over B with row/column masking."""
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        G, R, A, J = bs.G, bs.R, bs.A, bs.J
+        ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
+        nm = N * M
+        dims = self.family_dims(N, M)
+        nv, n_ub, n_eq = dims.nv, dims.n_ub, dims.n_eq
+        tf = 3 * nm
+        cell = bs.cell_mask.reshape(B, nm)
+
+        def b_(i, j):
+            return i * M + j
+
+        def ts(i, j):
+            return nm + i * M + j
+
+        def tfn(i, j):
+            return 2 * nm + i * M + j
+
+        A_ub = np.zeros((B, n_ub, nv))
+        b_ub = np.zeros((B, n_ub))
+
+        # (Eq 8)  TF_{i,j} - TS_{i+1,j} <= 0,  (N-1)*M rows
+        o8 = 0
+        if N > 1:
+            ii = np.repeat(np.arange(N - 1), M)
+            jj = np.tile(np.arange(M), N - 1)
+            act = ((ii[None, :] + 1) < ns) & (jj[None, :] < ms)
+            r = o8 + np.arange(ii.size)
+            A_ub[:, r, tfn(ii, jj)] = np.where(act, 1.0, 0.0)
+            A_ub[:, r, ts(ii + 1, jj)] = np.where(act, -1.0, 0.0)
+            b_ub[:, r] = np.where(act, 0.0, 1.0)
+
+        # (Eq 9)  TF_{i,j} - TS_{i,j+1} <= 0,  N*(M-1) rows
+        o9 = (N - 1) * M
+        if M > 1:
+            ii = np.repeat(np.arange(N), M - 1)
+            jj = np.tile(np.arange(M - 1), N)
+            act = (ii[None, :] < ns) & ((jj[None, :] + 1) < ms)
+            r = o9 + np.arange(ii.size)
+            A_ub[:, r, tfn(ii, jj)] = np.where(act, 1.0, 0.0)
+            A_ub[:, r, ts(ii, jj + 1)] = np.where(act, -1.0, 0.0)
+            b_ub[:, r] = np.where(act, 0.0, 1.0)
+
+        # (Eq 11) -TS_{i,1} <= -R_i  and  (Eq 12) -TF_{i-1,1} <= -R_i, i=2..N
+        o11 = o9 + N * (M - 1)
+        o12 = o11 + (N - 1)
+        if N > 1:
+            i1 = np.arange(1, N)
+            act = i1[None, :] < ns
+            r11 = o11 + np.arange(N - 1)
+            A_ub[:, r11, ts(i1, 0)] = np.where(act, -1.0, 0.0)
+            b_ub[:, r11] = np.where(act, -R[:, 1:], 1.0)
+            r12 = o12 + np.arange(N - 1)
+            A_ub[:, r12, tfn(i1 - 1, 0)] = np.where(act, -1.0, 0.0)
+            b_ub[:, r12] = np.where(act, -R[:, 1:], 1.0)
+
+        # (Eq 13) TF_{N,j} + A_j sum_i beta_{i,j} - T_f <= 0 (N per-scenario!)
+        o13 = o12 + (N - 1)
+        jc = np.arange(M)
+        act13 = jc[None, :] < ms
+        rows = np.repeat(jc, N)
+        cols = b_(np.tile(np.arange(N), M), np.repeat(jc, N))
+        A_ub[:, o13 + rows, cols] = A[:, np.repeat(jc, N)]
+        batch_ix = np.arange(B)[:, None]
+        last_tf_col = tfn(bs.n_sources[:, None] - 1, jc[None, :])  # (B, M)
+        A_ub[batch_ix, o13 + jc[None, :], last_tf_col] = 1.0
+        A_ub[:, o13 + jc, tf] = -1.0
+        A_ub[:, o13: o13 + M] *= act13[:, :, None]
+        b_ub[:, o13 + jc] = np.where(act13, 0.0, 1.0)
+
+        # equality rows: (Eq 7) per cell, then (Eq 10), (Eq 14)
+        A_eq = np.zeros((B, n_eq, nv))
+        b_eq = np.zeros((B, n_eq))
+        eq_active = np.ones((B, n_eq), dtype=bool)
+
+        ii = np.repeat(np.arange(N), M)
+        jj = np.tile(np.arange(M), N)
+        r7 = np.arange(nm)
+        act7 = cell
+        A_eq[:, r7, tfn(ii, jj)] = np.where(act7, 1.0, 0.0)
+        A_eq[:, r7, ts(ii, jj)] = np.where(act7, -1.0, 0.0)
+        A_eq[:, r7, b_(ii, jj)] = np.where(act7, -G[:, ii], 0.0)
+        eq_active[:, r7] = act7
+
+        A_eq[:, nm, ts(0, 0)] = 1.0          # (Eq 10) TS_{1,1} = R_1
+        b_eq[:, nm] = R[:, 0]
+        A_eq[:, nm + 1, :nm] = 1.0           # (Eq 14) sum beta = J
+        b_eq[:, nm + 1] = J
+        return BatchRows(A_ub, b_ub, A_eq, b_eq, eq_active)
+
+    def unpack_batch(self, bs: BatchedSystemSpec, x: np.ndarray) -> BatchFields:
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        nm = N * M
+        return BatchFields(
+            beta=x[:, :nm].reshape(B, N, M).copy(),
+            TS=x[:, nm: 2 * nm].reshape(B, N, M).copy(),
+            TF=x[:, 2 * nm: 3 * nm].reshape(B, N, M).copy(),
+            finish=x[:, 3 * nm].copy(),
+        )
+
+    def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
+                          tol: float):
+        """Eqs 7-14, vectorized over the padded batch (padded cells zero)."""
+        G, R, A, J = bs.G, bs.R, bs.A, bs.J
+        src, prc, cell = bs.source_mask, bs.proc_mask, bs.cell_mask
+        beta, TS, TF, finish = fields.beta, fields.TS, fields.TF, fields.finish
+        B = bs.batch
+        scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), J))
+        slack = tol * scale
+        s3 = slack[:, None, None]
+        checks = []
+
+        checks.append(("beta >= 0", ~np.any((beta < -s3) & cell, axis=(1, 2))))
+        # Eq 7
+        checks.append(("Eq7", ~np.any(
+            cell & (np.abs(TF - TS - beta * G[:, :, None]) > s3),
+            axis=(1, 2))))
+        # Eq 8 / Eq 9
+        if bs.n_max > 1:
+            act = cell[:, 1:, :]
+            checks.append(("Eq8", ~np.any(
+                act & (TF[:, :-1, :] > TS[:, 1:, :] + s3), axis=(1, 2))))
+        if bs.m_max > 1:
+            act = cell[:, :, 1:]
+            checks.append(("Eq9", ~np.any(
+                act & (TF[:, :, :-1] > TS[:, :, 1:] + s3), axis=(1, 2))))
+        # Eq 10-12
+        checks.append(("Eq10", np.abs(TS[:, 0, 0] - R[:, 0]) <= slack))
+        if bs.n_max > 1:
+            act = src[:, 1:]
+            checks.append(("Eq11", ~np.any(
+                act & (TS[:, 1:, 0] < R[:, 1:] - slack[:, None]), axis=1)))
+            checks.append(("Eq12", ~np.any(
+                act & (TF[:, :-1, 0] < R[:, 1:] - slack[:, None]), axis=1)))
+        # Eq 13 (TF of each scenario's LAST real source)
+        last = np.maximum(bs.n_sources - 1, 0)
+        tf_last = TF[np.arange(B), last, :]                # (B, M_max)
+        need = tf_last + A * beta.sum(axis=1)
+        checks.append(("Eq13", ~np.any(
+            prc & (finish[:, None] < need - slack[:, None]), axis=1)))
+        # Eq 14
+        checks.append(("Eq14", np.abs(beta.sum(axis=(1, 2)) - J) <= slack))
+        return checks
+
+
+NOFRONTEND = register_formulation(NoFrontendFormulation())

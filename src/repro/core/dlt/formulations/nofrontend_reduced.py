@@ -1,0 +1,212 @@
+"""Column-reduced Sec 3.2 LP — the no-front-end program on the chain basis.
+
+The full Sec 3.2 program (:mod:`.nofrontend`) carries ``3NM+1`` variables
+because every transmission interval is scheduled explicitly.  Two exact
+eliminations shrink it (the move the multi-load DLT literature makes on
+transmission-order chains, cf. Wu/Cao/Robertazzi arXiv:1902.01898 and
+Gallet/Robert/Vivien RR-6235):
+
+1. **TS block (Eq 7).**  ``TS_{i,j} = TF_{i,j} - beta_{i,j} G_i`` is an
+   equality, so every ``TS`` variable and every Eq 7 row disappears;
+   Eqs 8-13 are rewritten on ``TF`` alone.
+
+2. **Source 1's TF row (Eqs 9-10).**  Row 1 of the transmission grid is a
+   pure chain: ``TS_{1,1}`` is PINNED to ``R_1`` (Eq 10) and cell
+   ``(1,j)`` has the single predecessor ``(1,j-1)``, so its minimal
+   schedule is back-to-back: ``TF_{1,j} = R_1 + G_1 * sum_{k<=j}
+   beta_{1,k}``.  Row-1 TF values appear elsewhere only as *upper* bounds
+   (Eq 8's handoff to source 2), hence taking the minimum is lossless,
+   Eq 9 within row 1 becomes ``0 <= 0``, and the whole row of variables
+   collapses into prefix sums of ``beta``.
+
+Variables (canonical sorted order):
+    x = [beta (N*M), TF rows 2..N ((N-1)*M), T_f]      all >= 0
+
+i.e. ``NM + M + 1`` variables at the paper's staple N=2 and
+``(2N-1)M + 1`` in general — vs ``3NM+1`` — while every equality row but
+the Eq 14 normalization vanishes.  For N=1 the program IS the Sec 2
+single-source LP.  The reduction is exact: objective values match the
+full Sec 3.2 program to LP-solver precision (see
+``tests/test_formulations.py``), and ``unpack`` reconstructs the full
+``TS``/``TF`` grids so solutions are verified against the ORIGINAL
+Eq 7-14 constraint set, never against the reduced rows.
+
+Constraint rows (with ``TF1_j`` shorthand for the row-1 prefix form):
+  (Eq 8)   TF_{i,j} + beta_{i+1,j} G_{i+1} <= TF_{i+1,j}     i = 1..N-1
+  (Eq 9)   TF_{i,j} + beta_{i,j+1} G_i     <= TF_{i,j+1}     i = 2..N
+  (Eq 11)  TF_{i,1} - beta_{i,1} G_i       >= R_i            i = 2..N
+  (Eq 12)  TF_{i-1,1}                      >= R_i            i = 2..N
+  (Eq 13)  T_f >= TF_{N,j} + A_j sum_i beta_{i,j}
+  (Eq 14)  sum beta = J
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..single_source import single_source_intervals
+from ..stacking import BatchedSystemSpec
+from .base import BatchFields, BatchRows, FamilyDims, register_formulation
+from .nofrontend import NoFrontendFormulation
+
+__all__ = ["ReducedNoFrontendFormulation", "NOFRONTEND_REDUCED"]
+
+
+class ReducedNoFrontendFormulation(NoFrontendFormulation):
+    """Column-reduced Sec 3.2 LP: ``x = [beta, TF rows 2..N, T_f]``.
+
+    Inherits the Sec 3.2 constraint checks — verification always runs
+    against the original Eq 7-14 set on the reconstructed intervals.
+    """
+
+    name = "nofrontend_reduced"
+    frontend = False
+    has_intervals = True
+
+    def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
+        N, M = n_max, m_max
+        return FamilyDims(
+            nv=N * M + (N - 1) * M + 1,
+            n_ub=(N - 1) * M + (N - 1) * (M - 1) + 2 * (N - 1) + M,
+            n_eq=1,
+        )
+
+    def batch_column_mask(self, bs: BatchedSystemSpec) -> np.ndarray:
+        cell = bs.cell_mask
+        B = bs.batch
+        return np.concatenate(
+            [cell.reshape(B, -1), cell[:, 1:, :].reshape(B, -1),
+             np.ones((B, 1), dtype=bool)], axis=1)
+
+    def build_batch_rows(self, bs: BatchedSystemSpec) -> BatchRows:
+        """Reduced rows, batched over B with row/column masking.
+
+        Lanes with a single real source keep only their Eq 13/14 rows (the
+        closed-form chain); in mixed batches the inert coefficient a
+        single-source lane leaves on the padded ``TF`` block is cleared by
+        the column mask downstream, exactly like every other padded cell.
+        """
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        G, R, A, J = bs.G, bs.R, bs.A, bs.J
+        ns, ms = bs.n_sources[:, None], bs.n_procs[:, None]
+        nm = N * M
+        dims = self.family_dims(N, M)
+        nv, n_ub = dims.nv, dims.n_ub
+        t = nv - 1
+        jc = np.arange(M)
+        tri_incl = (jc[:, None] >= jc[None, :]).astype(float)  # k <= j
+
+        def b_(i, j):
+            return i * M + j
+
+        def f_(i, j):  # TF column of source i >= 1 (0-based)
+            return nm + (i - 1) * M + j
+
+        A_ub = np.zeros((B, n_ub, nv))
+        b_ub = np.zeros((B, n_ub))
+
+        # (Eq 8, source 1 -> 2)  R_1 + G_1 sum_{k<=j} beta_{1,k}
+        #                        + G_2 beta_{2,j} - TF_{2,j} <= 0,  M rows
+        o8 = 0
+        if N > 1:
+            act = (ns > 1) & (jc[None, :] < ms)
+            A_ub[:, o8: o8 + M, 0:M] = G[:, 0, None, None] * tri_incl[None]
+            A_ub[:, o8 + jc, M + jc] = G[:, 1:2]
+            A_ub[:, o8 + jc, nm + jc] = -1.0
+            A_ub[:, o8: o8 + M] *= act[:, :, None]
+            b_ub[:, o8 + jc] = np.where(act, -R[:, :1], 1.0)
+
+        # (Eq 8, i >= 2)  TF_{i,j} + G_{i+1} beta_{i+1,j} - TF_{i+1,j} <= 0
+        if N > 2:
+            ii = np.repeat(np.arange(1, N - 1), M)
+            jj = np.tile(jc, N - 2)
+            act = ((ii[None, :] + 1) < ns) & (jj[None, :] < ms)
+            r = o8 + M + np.arange(ii.size)
+            A_ub[:, r, f_(ii, jj)] = np.where(act, 1.0, 0.0)
+            A_ub[:, r, b_(ii + 1, jj)] = np.where(act, G[:, ii + 1], 0.0)
+            A_ub[:, r, f_(ii + 1, jj)] = np.where(act, -1.0, 0.0)
+            b_ub[:, r] = np.where(act, 0.0, 1.0)
+
+        # (Eq 9, i >= 2)  TF_{i,j} + G_i beta_{i,j+1} - TF_{i,j+1} <= 0
+        o9 = (N - 1) * M
+        if N > 1 and M > 1:
+            ii = np.repeat(np.arange(1, N), M - 1)
+            jj = np.tile(np.arange(M - 1), N - 1)
+            act = (ii[None, :] < ns) & ((jj[None, :] + 1) < ms)
+            r = o9 + np.arange(ii.size)
+            A_ub[:, r, f_(ii, jj)] = np.where(act, 1.0, 0.0)
+            A_ub[:, r, b_(ii, jj + 1)] = np.where(act, G[:, ii], 0.0)
+            A_ub[:, r, f_(ii, jj + 1)] = np.where(act, -1.0, 0.0)
+            b_ub[:, r] = np.where(act, 0.0, 1.0)
+
+        # (Eq 11)  -TF_{i,1} + G_i beta_{i,1} <= -R_i,  i = 2..N
+        o11 = o9 + (N - 1) * (M - 1)
+        o12 = o11 + (N - 1)
+        if N > 1:
+            i1 = np.arange(1, N)
+            act = i1[None, :] < ns
+            r11 = o11 + np.arange(N - 1)
+            A_ub[:, r11, f_(i1, 0)] = np.where(act, -1.0, 0.0)
+            A_ub[:, r11, b_(i1, 0)] = np.where(act, G[:, 1:], 0.0)
+            b_ub[:, r11] = np.where(act, -R[:, 1:], 1.0)
+
+            # (Eq 12)  TF_{i-1,1} >= R_i.  For i=2 the row-1 prefix form:
+            # -G_1 beta_{1,1} <= R_1 - R_2; for i>2 plain -TF_{i-1,1} <= -R_i.
+            act2 = (ns > 1)[:, 0]
+            A_ub[:, o12, 0] = np.where(act2, -G[:, 0], 0.0)
+            b_ub[:, o12] = np.where(act2, R[:, 0] - R[:, 1], 1.0)
+            if N > 2:
+                kk = np.arange(2, N)
+                act = kk[None, :] < ns
+                r12 = o12 + 1 + np.arange(N - 2)
+                A_ub[:, r12, f_(kk - 1, 0)] = np.where(act, -1.0, 0.0)
+                b_ub[:, r12] = np.where(act, -R[:, 2:], 1.0)
+
+        # (Eq 13)  TF_{N,j} + A_j sum_i beta_{i,j} - T_f <= 0 (N per lane);
+        # single-source lanes inline the row-1 prefix form of TF_{1,j}.
+        o13 = o12 + (N - 1)
+        act13 = jc[None, :] < ms
+        rows = np.repeat(jc, N)
+        cols = b_(np.tile(np.arange(N), M), np.repeat(jc, N))
+        A_ub[:, o13 + rows, cols] = A[:, np.repeat(jc, N)]
+        sgl = (ns == 1)[:, 0]
+        if N > 1:
+            batch_ix = np.arange(B)[:, None]
+            # single-source lanes land this 1.0 on a padded (masked) column
+            last_tf_col = f_(np.maximum(bs.n_sources, 2)[:, None] - 1,
+                             jc[None, :])
+            A_ub[batch_ix, o13 + jc[None, :], last_tf_col] = np.where(
+                sgl[:, None], 0.0, 1.0)
+        A_ub[:, o13: o13 + M, 0:M] += (
+            sgl[:, None, None] * G[:, 0, None, None] * tri_incl[None])
+        A_ub[:, o13 + jc, t] = -1.0
+        A_ub[:, o13: o13 + M] *= act13[:, :, None]
+        b_ub[:, o13 + jc] = np.where(
+            act13, np.where(sgl[:, None], -R[:, :1], 0.0), 1.0)
+
+        # (Eq 14)  sum beta = J
+        A_eq = np.zeros((B, 1, nv))
+        A_eq[:, 0, :nm] = 1.0
+        b_eq = J[:, None].copy()
+        eq_active = np.ones((B, 1), dtype=bool)
+        return BatchRows(A_ub, b_ub, A_eq, b_eq, eq_active)
+
+    def unpack_batch(self, bs: BatchedSystemSpec, x: np.ndarray) -> BatchFields:
+        """Reconstruct the full Eq 7-12 interval grids from the chain basis."""
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        nm = N * M
+        dims = self.family_dims(N, M)
+        beta = x[:, :nm].reshape(B, N, M).copy()
+        TF = np.empty((B, N, M))
+        _, TF[:, 0, :] = single_source_intervals(
+            bs.R[:, :1], bs.G[:, :1], beta[:, 0, :])
+        if N > 1:
+            TF[:, 1:, :] = x[:, nm: nm + (N - 1) * M].reshape(B, N - 1, M)
+        TS = TF - beta * bs.G[:, :, None]
+        return BatchFields(beta=beta, TS=TS, TF=TF,
+                           finish=x[:, dims.nv - 1].copy())
+
+    # constraint_checks inherited: always the ORIGINAL Sec 3.2 Eq 7-14 set.
+
+
+NOFRONTEND_REDUCED = register_formulation(ReducedNoFrontendFormulation())

@@ -1,88 +1,26 @@
-"""Paper Sec 3.1 — multi-source multi-processor LP, processors WITH front-ends.
+"""Paper Sec 3.1 front-end LP — compatibility shim.
 
-A front-end lets a processor compute while its next fraction is still being
-received, so (given the paper's continuous-processing constraints) processor
-``P_j`` computes without interruption from the moment its first fraction
-starts arriving until the makespan.
-
-Variables (canonical sorted order):   x = [beta_{1,1..M}, ..., beta_{N,1..M}, T_f]
-
-Constraints:
-  (Eq 3)  release chaining:      R_{i+1} - R_i <= beta_{i,1} A_1
-  (Eq 4)  continuous processing: beta_{i,j} A_j + beta_{i+1,j} G_{i+1}
-                                   <= beta_{i,j} G_i + beta_{i,j+1} A_{j+1}
-  (Eq 5)  finish time:           T_f >= R_1 + sum_{k<j} beta_{1,k} G_1
-                                          + A_j sum_i beta_{i,j}
-  (Eq 6)  normalization:         sum_{i,j} beta_{i,j} = J
-
-Note: the paper's summary box prints the finish-time sum as ``k=1..j`` but the
-derivation (Eq 5) and the front-end semantics ("start computing once it starts
-receiving") give ``k=1..j-1`` — P_j's pipeline begins when S_1 *starts*
-sending its fraction, i.e. after serving P_1..P_{j-1}.  We implement Eq 5.
+The formulation itself (row builders, unpacking, verification, and the
+equation-by-equation documentation) lives in
+:mod:`repro.core.dlt.formulations.frontend`; this module keeps the
+original free-function API for existing callers.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from .formulations import get_formulation
 from .types import SystemSpec
 
 __all__ = ["build_frontend_lp", "unpack_frontend", "verify_frontend"]
 
+_FM = get_formulation("frontend")
+
 
 def build_frontend_lp(spec: SystemSpec):
     """Returns (c, A_ub, b_ub, A_eq, b_eq) over x = [beta.ravel(), T_f] >= 0."""
-    N, M = spec.num_sources, spec.num_processors
-    G, R, A, J = spec.G, spec.R, spec.A, spec.J
-    nv = N * M + 1
-    t = N * M  # index of T_f
-
-    def bidx(i: int, j: int) -> int:
-        return i * M + j
-
-    ub_rows, ub_rhs = [], []
-
-    # (Eq 3) -beta_{i,1} A_1 <= R_i - R_{i+1}
-    for i in range(N - 1):
-        row = np.zeros(nv)
-        row[bidx(i, 0)] = -A[0]
-        ub_rows.append(row)
-        ub_rhs.append(R[i] - R[i + 1])
-
-    # (Eq 4) beta_{i,j}(A_j - G_i) + beta_{i+1,j} G_{i+1} - beta_{i,j+1} A_{j+1} <= 0
-    for i in range(N - 1):
-        for j in range(M - 1):
-            row = np.zeros(nv)
-            row[bidx(i, j)] = A[j] - G[i]
-            row[bidx(i + 1, j)] = G[i + 1]
-            row[bidx(i, j + 1)] = -A[j + 1]
-            ub_rows.append(row)
-            ub_rhs.append(0.0)
-
-    # (Eq 5) sum_{k<j} beta_{1,k} G_1 + A_j sum_i beta_{i,j} - T_f <= -R_1
-    for j in range(M):
-        row = np.zeros(nv)
-        for k in range(j):
-            row[bidx(0, k)] += G[0]
-        for i in range(N):
-            row[bidx(i, j)] += A[j]
-        row[t] = -1.0
-        ub_rows.append(row)
-        ub_rhs.append(-R[0])
-
-    # (Eq 6) sum beta = J
-    eq_row = np.zeros(nv)
-    eq_row[:t] = 1.0
-
-    c = np.zeros(nv)
-    c[t] = 1.0
-    return (
-        c,
-        np.asarray(ub_rows),
-        np.asarray(ub_rhs),
-        eq_row[None, :],
-        np.asarray([J]),
-    )
+    return _FM.build_scalar(spec)
 
 
 def unpack_frontend(spec: SystemSpec, x: np.ndarray):
@@ -92,27 +30,7 @@ def unpack_frontend(spec: SystemSpec, x: np.ndarray):
     return beta, tf
 
 
-def verify_frontend(spec: SystemSpec, beta: np.ndarray, tf: float, tol: float = 1e-6) -> list[str]:
+def verify_frontend(spec: SystemSpec, beta: np.ndarray, tf: float,
+                    tol: float = 1e-6) -> list:
     """Check every Sec 3.1 constraint; returns a list of violation strings."""
-    N, M = spec.num_sources, spec.num_processors
-    G, R, A, J = spec.G, spec.R, spec.A, spec.J
-    bad = []
-    scale = max(1.0, float(tf), float(J))
-    if np.any(beta < -tol * scale):
-        bad.append(f"negative beta: min={beta.min()}")
-    for i in range(N - 1):
-        if R[i + 1] - R[i] > beta[i, 0] * A[0] + tol * scale:
-            bad.append(f"Eq3 violated at i={i}")
-    for i in range(N - 1):
-        for j in range(M - 1):
-            lhs = beta[i, j] * A[j] + beta[i + 1, j] * G[i + 1]
-            rhs = beta[i, j] * G[i] + beta[i, j + 1] * A[j + 1]
-            if lhs > rhs + tol * scale:
-                bad.append(f"Eq4 violated at i={i},j={j}: {lhs} > {rhs}")
-    for j in range(M):
-        need = R[0] + G[0] * beta[0, :j].sum() + A[j] * beta[:, j].sum()
-        if tf < need - tol * scale:
-            bad.append(f"Eq5 violated at j={j}: Tf={tf} < {need}")
-    if abs(beta.sum() - J) > tol * scale:
-        bad.append(f"Eq6 violated: sum={beta.sum()} != J={J}")
-    return bad
+    return _FM.verify_scalar_fields(spec, beta, tf, tol=tol)

@@ -1,133 +1,35 @@
-"""Paper Sec 3.2 — multi-source multi-processor LP, processors WITHOUT front-ends.
+"""Paper Sec 3.2 no-front-end LP — compatibility shim.
 
-Without a front-end a processor may only start computing after *all* of its
-load has arrived, so the LP additionally schedules every transmission interval
-explicitly via start/finish variables ``TS_{i,j}``/``TF_{i,j}``.
-
-Variables (canonical sorted order):
-    x = [beta (N*M), TS (N*M), TF (N*M), T_f]     all >= 0
-
-Constraints:
-  (Eq 7)   TF_{i,j} - TS_{i,j} = beta_{i,j} G_i            (transfer length)
-  (Eq 8)   TF_{i,j} <= TS_{i+1,j}                           (per-processor source order)
-  (Eq 9)   TF_{i,j} <= TS_{i,j+1}                           (per-source processor order)
-  (Eq 10)  TS_{1,1} = R_1
-  (Eq 11)  TS_{i,1} >= R_i                    i = 2..N
-  (Eq 12)  TF_{i-1,1} >= R_i                  i = 2..N      (keep sources busy)
-  (Eq 13)  T_f >= TF_{N,j} + A_j sum_i beta_{i,j}
-  (Eq 14)  sum beta = J
+The formulation itself (row builders, unpacking, verification, and the
+equation-by-equation documentation) lives in
+:mod:`repro.core.dlt.formulations.nofrontend`; the column-reduced
+equivalent in :mod:`repro.core.dlt.formulations.nofrontend_reduced`.
+This module keeps the original free-function API for existing callers.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from .formulations import get_formulation
 from .types import SystemSpec
 
 __all__ = ["build_nofrontend_lp", "unpack_nofrontend", "verify_nofrontend"]
 
+_FM = get_formulation("nofrontend")
+
 
 def build_nofrontend_lp(spec: SystemSpec):
     """Returns (c, A_ub, b_ub, A_eq, b_eq) over x = [beta, TS, TF, T_f] >= 0."""
-    N, M = spec.num_sources, spec.num_processors
-    G, R, A, J = spec.G, spec.R, spec.A, spec.J
-    nm = N * M
-    nv = 3 * nm + 1
-    t = 3 * nm
-
-    def b_(i, j):
-        return i * M + j
-
-    def ts(i, j):
-        return nm + i * M + j
-
-    def tf(i, j):
-        return 2 * nm + i * M + j
-
-    ub_rows, ub_rhs = [], []
-    eq_rows, eq_rhs = [], []
-
-    # (Eq 7) TF - TS - beta*G_i = 0
-    for i in range(N):
-        for j in range(M):
-            row = np.zeros(nv)
-            row[tf(i, j)] = 1.0
-            row[ts(i, j)] = -1.0
-            row[b_(i, j)] = -G[i]
-            eq_rows.append(row)
-            eq_rhs.append(0.0)
-
-    # (Eq 8) TF_{i,j} - TS_{i+1,j} <= 0
-    for i in range(N - 1):
-        for j in range(M):
-            row = np.zeros(nv)
-            row[tf(i, j)] = 1.0
-            row[ts(i + 1, j)] = -1.0
-            ub_rows.append(row)
-            ub_rhs.append(0.0)
-
-    # (Eq 9) TF_{i,j} - TS_{i,j+1} <= 0
-    for i in range(N):
-        for j in range(M - 1):
-            row = np.zeros(nv)
-            row[tf(i, j)] = 1.0
-            row[ts(i, j + 1)] = -1.0
-            ub_rows.append(row)
-            ub_rhs.append(0.0)
-
-    # (Eq 10) TS_{1,1} = R_1
-    row = np.zeros(nv)
-    row[ts(0, 0)] = 1.0
-    eq_rows.append(row)
-    eq_rhs.append(R[0])
-
-    # (Eq 11) -TS_{i,1} <= -R_i
-    for i in range(1, N):
-        row = np.zeros(nv)
-        row[ts(i, 0)] = -1.0
-        ub_rows.append(row)
-        ub_rhs.append(-R[i])
-
-    # (Eq 12) -TF_{i-1,1} <= -R_i
-    for i in range(1, N):
-        row = np.zeros(nv)
-        row[tf(i - 1, 0)] = -1.0
-        ub_rows.append(row)
-        ub_rhs.append(-R[i])
-
-    # (Eq 13) TF_{N,j} + A_j sum_i beta_{i,j} - T_f <= 0
-    for j in range(M):
-        row = np.zeros(nv)
-        row[tf(N - 1, j)] = 1.0
-        for i in range(N):
-            row[b_(i, j)] += A[j]
-        row[t] = -1.0
-        ub_rows.append(row)
-        ub_rhs.append(0.0)
-
-    # (Eq 14) sum beta = J
-    row = np.zeros(nv)
-    row[:nm] = 1.0
-    eq_rows.append(row)
-    eq_rhs.append(J)
-
-    c = np.zeros(nv)
-    c[t] = 1.0
-    return (
-        c,
-        np.asarray(ub_rows),
-        np.asarray(ub_rhs),
-        np.asarray(eq_rows),
-        np.asarray(eq_rhs),
-    )
+    return _FM.build_scalar(spec)
 
 
 def unpack_nofrontend(spec: SystemSpec, x: np.ndarray):
     N, M = spec.num_sources, spec.num_processors
     nm = N * M
     beta = x[:nm].reshape(N, M).copy()
-    TS = x[nm : 2 * nm].reshape(N, M).copy()
-    TF = x[2 * nm : 3 * nm].reshape(N, M).copy()
+    TS = x[nm: 2 * nm].reshape(N, M).copy()
+    TF = x[2 * nm: 3 * nm].reshape(N, M).copy()
     tf_val = float(x[3 * nm])
     return beta, TS, TF, tf_val
 
@@ -139,37 +41,6 @@ def verify_nofrontend(
     TF: np.ndarray,
     tf_val: float,
     tol: float = 1e-6,
-) -> list[str]:
+) -> list:
     """Check every Sec 3.2 constraint; returns a list of violation strings."""
-    N, M = spec.num_sources, spec.num_processors
-    G, R, A, J = spec.G, spec.R, spec.A, spec.J
-    bad = []
-    scale = max(1.0, float(tf_val), float(J))
-    if np.any(beta < -tol * scale):
-        bad.append("negative beta")
-    for i in range(N):
-        for j in range(M):
-            if abs(TF[i, j] - TS[i, j] - beta[i, j] * G[i]) > tol * scale:
-                bad.append(f"Eq7 violated at ({i},{j})")
-    for i in range(N - 1):
-        for j in range(M):
-            if TF[i, j] > TS[i + 1, j] + tol * scale:
-                bad.append(f"Eq8 violated at ({i},{j})")
-    for i in range(N):
-        for j in range(M - 1):
-            if TF[i, j] > TS[i, j + 1] + tol * scale:
-                bad.append(f"Eq9 violated at ({i},{j})")
-    if abs(TS[0, 0] - R[0]) > tol * scale:
-        bad.append("Eq10 violated")
-    for i in range(1, N):
-        if TS[i, 0] < R[i] - tol * scale:
-            bad.append(f"Eq11 violated at i={i}")
-        if TF[i - 1, 0] < R[i] - tol * scale:
-            bad.append(f"Eq12 violated at i={i}")
-    for j in range(M):
-        need = TF[N - 1, j] + A[j] * beta[:, j].sum()
-        if tf_val < need - tol * scale:
-            bad.append(f"Eq13 violated at j={j}")
-    if abs(beta.sum() - J) > tol * scale:
-        bad.append("Eq14 violated")
-    return bad
+    return _FM.verify_scalar_fields(spec, beta, tf_val, TS=TS, TF=TF, tol=tol)

@@ -28,7 +28,25 @@ import numpy as np
 
 from .types import Schedule, SystemSpec
 
-__all__ = ["solve_single_source", "finish_time_single_source"]
+__all__ = [
+    "solve_single_source",
+    "finish_time_single_source",
+    "single_source_intervals",
+]
+
+
+def single_source_intervals(R0, G, beta_row):
+    """Back-to-back transmission intervals of one source's chain.
+
+    ``(TS, TF)`` rows for a source released at ``R0`` with inverse link
+    speed ``G`` sending fractions ``beta_row`` to processors 1..M in
+    order without idle: ``TF_j = R0 + G * sum_{k<=j} beta_k``.  Works on
+    a single row or batched leading axes (broadcasts over ``R0``/``G``).
+    Shared by the Sec 2 closed form and the column-reduced Sec 3.2
+    formulation's row-1 reconstruction.
+    """
+    TF = R0 + G * np.cumsum(beta_row, axis=-1)
+    return TF - G * beta_row, TF
 
 
 def solve_single_source(spec: SystemSpec, frontend: bool = False) -> Schedule:

@@ -1,20 +1,21 @@
 """Unified solve API for the paper's DLT programs.
 
 ``solve(spec, frontend=...)`` canonicalizes node order (G ascending, A
-ascending — paper Sec 3 sorting rule), builds the Sec 3.1 or Sec 3.2 LP,
-solves it with the self-contained simplex (or scipy/HiGHS when requested),
-verifies every paper constraint on the result, and returns a
+ascending — paper Sec 3 sorting rule), builds the requested formulation
+from the registry (:mod:`repro.core.dlt.formulations` — Sec 3.1, Sec 3.2,
+or the column-reduced Sec 3.2 chain variant), solves it with the
+self-contained simplex (or scipy/HiGHS when requested), verifies every
+paper constraint on the result, and returns a
 :class:`~repro.core.dlt.types.Schedule` in canonical order.
 """
 
 from __future__ import annotations
 
-from typing import Literal
+from typing import Literal, Union
 
 import numpy as np
 
-from .frontend_lp import build_frontend_lp, unpack_frontend, verify_frontend
-from .nofrontend_lp import build_nofrontend_lp, unpack_nofrontend, verify_nofrontend
+from .formulations import Formulation, get_formulation
 from .simplex import linprog_simplex
 from .single_source import solve_single_source
 from .types import InfeasibleError, Schedule, SystemSpec
@@ -52,6 +53,7 @@ def solve(
     solver: Solver = "auto",
     verify: bool = True,
     presorted: bool = False,
+    formulation: "Union[Formulation, str, None]" = None,
 ) -> Schedule:
     """Minimal-makespan schedule for a multi-source multi-processor system.
 
@@ -62,40 +64,38 @@ def solve(
       solver: "simplex" (self-contained), "highs" (scipy), or "auto".
       verify: re-check every paper constraint on the solution.
       presorted: skip canonical sorting (inputs already G-/A-ascending).
+      formulation: registry name or :class:`Formulation` overriding
+        ``frontend`` — e.g. ``"nofrontend_reduced"`` pins the
+        column-reduced Sec 3.2 program.  When omitted, the classic
+        mapping applies (``"frontend"`` / ``"nofrontend"``), keeping this
+        path the independent oracle for the batched engine's reduced
+        default.
     """
     cspec = spec if presorted else spec.canonical()[0]
+    if formulation is not None:
+        fm = get_formulation(formulation)
+        frontend = fm.frontend
+    else:
+        if cspec.num_sources == 1 and not frontend:
+            # Sec 2 closed form — also serves as an LP cross-check in tests.
+            return solve_single_source(cspec, frontend=False)
+        fm = get_formulation(frontend)
 
-    if cspec.num_sources == 1 and not frontend:
-        # Sec 2 closed form — also serves as an LP cross-check in tests.
-        sched = solve_single_source(cspec, frontend=False)
-        return sched
-
-    if frontend:
-        c, A_ub, b_ub, A_eq, b_eq = build_frontend_lp(cspec)
-        x = _run_lp(c, A_ub, b_ub, A_eq, b_eq, solver)
-        beta, tf = unpack_frontend(cspec, x)
-        sched = Schedule(spec=cspec, beta=beta, finish_time=tf, frontend=True)
-        if verify:
-            bad = verify_frontend(cspec, beta, tf)
-            if bad:
-                raise RuntimeError(f"front-end solution violates constraints: {bad[:3]}")
-        return sched
-
-    c, A_ub, b_ub, A_eq, b_eq = build_nofrontend_lp(cspec)
+    c, A_ub, b_ub, A_eq, b_eq = fm.build_scalar(cspec)
     x = _run_lp(c, A_ub, b_ub, A_eq, b_eq, solver)
-    beta, TS, TF, tf = unpack_nofrontend(cspec, x)
-    sched = Schedule(spec=cspec, beta=beta, finish_time=tf, frontend=False, TS=TS, TF=TF)
+    sched = fm.unpack_scalar(cspec, x)
     if verify:
-        bad = verify_nofrontend(cspec, beta, TS, TF, tf)
+        bad = fm.verify_scalar(sched)
         if bad:
-            raise RuntimeError(f"no-front-end solution violates constraints: {bad[:3]}")
+            raise RuntimeError(
+                f"{fm.name} solution violates constraints: {bad[:3]}")
     return sched
 
 
-def verify_schedule(sched: Schedule, tol: float = 1e-6) -> list[str]:
+def verify_schedule(sched: Schedule, tol: float = 1e-6) -> list:
     """Re-validate a schedule against the paper's constraint set."""
     if sched.frontend:
-        return verify_frontend(sched.spec, sched.beta, sched.finish_time, tol)
+        return get_formulation("frontend").verify_scalar(sched, tol)
     if sched.TS is None or sched.TF is None:
         # closed-form single-source schedule: check Eq 1/2 directly
         spec = sched.spec
@@ -109,6 +109,4 @@ def verify_schedule(sched: Schedule, tol: float = 1e-6) -> list[str]:
             if abs(tf_i - sched.finish_time) > tol * max(1.0, sched.finish_time):
                 bad.append(f"Eq1 violated at i={i}")
         return bad
-    return verify_nofrontend(
-        sched.spec, sched.beta, sched.TS, sched.TF, sched.finish_time, tol
-    )
+    return get_formulation("nofrontend").verify_scalar(sched, tol)

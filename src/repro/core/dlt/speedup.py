@@ -11,7 +11,7 @@ the whole Fig 14/15 surface.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -29,9 +29,19 @@ class SpeedupGrid:
     speedup: np.ndarray        # (P, Q)  Eq 16 against the p=first row
 
     def at(self, p: int, n: int) -> float:
-        i = int(np.flatnonzero(self.sources == p)[0])
-        j = int(np.flatnonzero(self.processors == n)[0])
-        return float(self.speedup[i, j])
+        """Speedup at (p sources, n processors).
+
+        Raises ``KeyError`` naming the available counts when the pair was
+        not part of the grid.
+        """
+        si = np.flatnonzero(self.sources == p)
+        pi = np.flatnonzero(self.processors == n)
+        if not si.size or not pi.size:
+            raise KeyError(
+                f"(sources={p}, processors={n}) not in grid — available "
+                f"sources: {[int(v) for v in self.sources]}, "
+                f"processors: {[int(v) for v in self.processors]}")
+        return float(self.speedup[int(si[0]), int(pi[0])])
 
 
 def speedup_grid(
@@ -41,6 +51,7 @@ def speedup_grid(
     frontend: bool = False,
     solver: str = "auto",
     engine: str = "batched",
+    formulation: Optional[str] = None,
 ) -> SpeedupGrid:
     """Finish time + Eq 16 speedup over a (sources x processors) grid.
 
@@ -51,9 +62,12 @@ def speedup_grid(
     ``engine="batched"`` solves each source-count row of the grid as one
     jitted vmapped batch (rows share the source dimension, so the padded
     LP family stays tight); ``engine="scalar"`` is the original loop.
-    Both engines raise :class:`InfeasibleError` if any grid cell admits no
-    schedule.  A pinned ``solver`` (anything but "auto") implies the
-    scalar engine, which is the only path that honors it.
+    ``formulation`` pins a registry formulation for either engine (the
+    batched default is the column-reduced Sec 3.2 program when
+    ``frontend=False``).  Both engines raise :class:`InfeasibleError` if
+    any grid cell admits no schedule.  A pinned ``solver`` (anything but
+    "auto") implies the scalar engine, which is the only path that honors
+    it.
     """
     if engine not in ("batched", "scalar"):
         raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
@@ -68,7 +82,8 @@ def speedup_grid(
         for a, p in enumerate(source_counts):
             sub_s = cspec.subset_sources(p)
             subs = [sub_s.subset_processors(n) for n in processor_counts]
-            sol = batched_solve(subs, frontend=frontend, presorted=True)
+            sol = batched_solve(subs, frontend=frontend,
+                                formulation=formulation, presorted=True)
             bad = np.flatnonzero(sol.status == STATUS_INFEASIBLE)
             if bad.size:  # match the scalar engine's behavior
                 raise InfeasibleError(
@@ -84,6 +99,7 @@ def speedup_grid(
                     frontend=frontend,
                     solver=solver,
                     presorted=True,
+                    formulation=formulation,
                 )
                 tf[a, b] = sched.finish_time
     base = tf[0:1, :]  # row for the smallest source count (paper: 1 source)

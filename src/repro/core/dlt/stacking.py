@@ -1,0 +1,133 @@
+"""Padded stacking of system specs for the batched solving engine.
+
+:class:`BatchedSystemSpec` turns a ragged family of canonically-sorted
+:class:`~repro.core.dlt.types.SystemSpec` into dense ``(B, N_max)`` /
+``(B, M_max)`` arrays with per-scenario size masks.  Padding values are
+inert: the LP embeddings (see :mod:`repro.core.dlt.formulations`) mask
+padded rows and columns exactly, so they never influence a scenario's
+program.
+
+This lives in its own module so the formulation registry can build
+scalar programs through the batched row builders (a one-lane batch)
+without importing the solver engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .types import SystemSpec
+
+__all__ = ["BatchedSystemSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedSystemSpec:
+    """A stack of canonically-sorted system specs, padded to (N_max, M_max)."""
+
+    G: np.ndarray            # (B, N_max)
+    R: np.ndarray            # (B, N_max)
+    A: np.ndarray            # (B, M_max)
+    J: np.ndarray            # (B,)
+    C: Optional[np.ndarray]  # (B, M_max) or None
+    n_sources: np.ndarray    # (B,) actual N per scenario
+    n_procs: np.ndarray      # (B,) actual M per scenario
+    has_cost: Optional[np.ndarray] = None  # (B,) True where the spec had C
+
+    @property
+    def batch(self) -> int:
+        return int(self.J.shape[0])
+
+    @property
+    def n_max(self) -> int:
+        return int(self.G.shape[1])
+
+    @property
+    def m_max(self) -> int:
+        return int(self.A.shape[1])
+
+    @property
+    def source_mask(self) -> np.ndarray:
+        return np.arange(self.n_max)[None, :] < self.n_sources[:, None]
+
+    @property
+    def proc_mask(self) -> np.ndarray:
+        return np.arange(self.m_max)[None, :] < self.n_procs[:, None]
+
+    @property
+    def cell_mask(self) -> np.ndarray:
+        """(B, N_max, M_max) — True on real (source, processor) cells."""
+        return self.source_mask[:, :, None] & self.proc_mask[:, None, :]
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[SystemSpec],
+                   presorted: bool = False) -> "BatchedSystemSpec":
+        if not len(specs):
+            raise ValueError("empty spec batch")
+        cspecs = [s if presorted else s.canonical()[0] for s in specs]
+        B = len(cspecs)
+        Nmax = max(s.num_sources for s in cspecs)
+        Mmax = max(s.num_processors for s in cspecs)
+        G = np.ones((B, Nmax))
+        R = np.zeros((B, Nmax))
+        A = np.ones((B, Mmax))
+        J = np.empty(B)
+        any_c = any(s.C is not None for s in cspecs)
+        C = np.zeros((B, Mmax)) if any_c else None
+        has_c = np.zeros(B, dtype=bool)
+        ns = np.empty(B, dtype=np.int64)
+        ms = np.empty(B, dtype=np.int64)
+        for k, s in enumerate(cspecs):
+            n, m = s.num_sources, s.num_processors
+            G[k, :n], R[k, :n], A[k, :m], J[k] = s.G, s.R, s.A, s.J
+            if s.C is not None:
+                C[k, :m] = s.C
+                has_c[k] = True
+            ns[k], ms[k] = n, m
+        return cls(G=G, R=R, A=A, J=J, C=C, n_sources=ns, n_procs=ms,
+                   has_cost=has_c)
+
+    def _lane_has_cost(self, k: int) -> bool:
+        if self.C is None:
+            return False
+        return bool(self.has_cost[k]) if self.has_cost is not None else True
+
+    def scenario(self, k: int) -> SystemSpec:
+        """The k-th scenario as a scalar (already canonical) SystemSpec."""
+        n, m = int(self.n_sources[k]), int(self.n_procs[k])
+        return SystemSpec(
+            G=self.G[k, :n], R=self.R[k, :n], A=self.A[k, :m],
+            J=float(self.J[k]),
+            C=self.C[k, :m] if self._lane_has_cost(k) else None,
+        )
+
+    def take(self, idx: np.ndarray, n_pad: Optional[int] = None,
+             m_pad: Optional[int] = None) -> "BatchedSystemSpec":
+        """Lanes ``idx`` re-padded to ``(n_pad, m_pad)`` (default: current).
+
+        ``n_pad`` / ``m_pad`` must cover every selected lane's true size;
+        this is how the solver re-packs a size bucket into a tight shape.
+        """
+        idx = np.asarray(idx)
+        n_pad = self.n_max if n_pad is None else n_pad
+        m_pad = self.m_max if m_pad is None else m_pad
+        if np.any(self.n_sources[idx] > n_pad) or np.any(self.n_procs[idx] > m_pad):
+            raise ValueError("bucket shape smaller than a selected lane")
+
+        def _fit(arr, width, fill):
+            out = arr[idx][:, :width]
+            if out.shape[1] < width:
+                pad = np.full((out.shape[0], width - out.shape[1]), fill)
+                out = np.concatenate([out, pad], axis=1)
+            return out
+
+        return BatchedSystemSpec(
+            G=_fit(self.G, n_pad, 1.0), R=_fit(self.R, n_pad, 0.0),
+            A=_fit(self.A, m_pad, 1.0), J=self.J[idx],
+            C=None if self.C is None else _fit(self.C, m_pad, 0.0),
+            n_sources=self.n_sources[idx], n_procs=self.n_procs[idx],
+            has_cost=None if self.has_cost is None else self.has_cost[idx],
+        )

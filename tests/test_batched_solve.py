@@ -170,6 +170,6 @@ def test_batched_spec_layout_roundtrip():
         np.testing.assert_allclose(back.C, canon.C)
         assert back.J == canon.J
     # standard-form tensors are static-shaped across the ragged batch
-    c, A, b = build_standard_form_batch(bs, frontend=True)
+    c, A, b = build_standard_form_batch(bs, "frontend")
     assert c.shape[0] == A.shape[0] == b.shape[0] == 6
     assert A.shape[2] == c.shape[1] and A.shape[1] == b.shape[1]

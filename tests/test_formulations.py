@@ -1,0 +1,210 @@
+"""Formulation registry: reduced-LP equivalence, bucketing, kernel parity.
+
+The column-reduced no-front-end formulation is an *exact* reformulation of
+the Sec 3.2 program (TS eliminated via Eq 7, source 1's TF row collapsed
+via Eqs 9-10), so its optimal finish time must match the original LP to
+solver precision on arbitrary instances — that is the headline property
+test here.  Size-bucketed batching is pure repacking, so it must be
+bit-identical to solving each bucket on its own.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline fallback: seeded-random shim
+    from _hyp import given, settings, strategies as st
+
+from repro.core.dlt import (
+    InfeasibleError,
+    SystemSpec,
+    available_formulations,
+    batched_solve,
+    get_formulation,
+    solve,
+    solve_lp_batch,
+    verify_schedule,
+)
+from repro.core.dlt.batched import (
+    DEFAULT_M_BUCKET_EDGES,
+    BatchedSystemSpec,
+    _bucket_m,
+    build_standard_form_batch,
+)
+from repro.core.dlt.formulations import Formulation
+from repro.core.dlt.speedup import speedup_grid
+
+REL_TOL = 1e-6
+
+
+def _random_spec(seed, n, m, r_zero=False):
+    rng = np.random.default_rng(seed)
+    return SystemSpec(
+        G=np.sort(rng.uniform(0.05, 2.0, n)),
+        R=np.zeros(n) if r_zero else rng.uniform(0.0, 3.0, n),
+        A=np.sort(rng.uniform(0.2, 8.0, m)),
+        J=float(rng.uniform(1.0, 200.0)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+def test_registry_contents_and_resolution():
+    names = available_formulations()
+    assert {"frontend", "nofrontend", "nofrontend_reduced"} <= set(names)
+    fe = get_formulation("frontend")
+    assert isinstance(fe, Formulation) and fe.frontend
+    assert get_formulation(True) is fe                  # legacy bool mapping
+    assert get_formulation(False).name == "nofrontend"
+    assert get_formulation(fe) is fe                    # instance passthrough
+    with pytest.raises(KeyError, match="nofrontend_reduced"):
+        get_formulation("no_such_formulation")
+
+
+def test_reduced_family_dims_match_advertised_counts():
+    red = get_formulation("nofrontend_reduced")
+    full = get_formulation("nofrontend")
+    for n, m in [(1, 1), (1, 8), (2, 8), (3, 5), (5, 8)]:
+        d = red.family_dims(n, m)
+        assert d.nv == n * m + (n - 1) * m + 1          # NM+M+1 at N=2
+        assert d.nv < full.family_dims(n, m).nv or n == 1
+        assert d.n_eq == 1                              # Eq 14 only
+    assert red.family_dims(2, 8).nv == 2 * 8 + 8 + 1
+
+
+# ---------------------------------------------------------------------------
+# column-reduced == original Sec 3.2 (the tentpole equivalence)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 5), m=st.integers(1, 8), seed=st.integers(0, 10**6),
+       r_zero=st.booleans())
+def test_reduced_matches_original_nofrontend(n, m, seed, r_zero):
+    """Finish-time parity to 1e-6 across N in 1..5, M in 1..8."""
+    spec = _random_spec(seed, n, m, r_zero=r_zero)
+    try:
+        ref = solve(spec, formulation="nofrontend", solver="simplex")
+    except InfeasibleError:
+        with pytest.raises(InfeasibleError):
+            solve(spec, formulation="nofrontend_reduced", solver="simplex")
+        return
+    red = solve(spec, formulation="nofrontend_reduced", solver="simplex")
+    assert red.finish_time == pytest.approx(ref.finish_time, rel=REL_TOL)
+    # the reconstructed intervals satisfy the ORIGINAL Eq 7-14 set
+    assert red.TS is not None and red.TF is not None
+    assert verify_schedule(red) == []
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 4), m=st.integers(1, 6), seed=st.integers(0, 10**6))
+def test_reduced_batched_matches_scalar_oracle(n, m, seed):
+    specs = [_random_spec(seed + k, n, m) for k in range(4)]
+    sol = batched_solve(specs, formulation="nofrontend_reduced")
+    for k, sp in enumerate(specs):
+        try:
+            ref = solve(sp, frontend=False, solver="simplex").finish_time
+        except InfeasibleError:
+            assert np.isnan(sol.finish_time[k])
+            continue
+        assert sol.finish_time[k] == pytest.approx(ref, rel=REL_TOL)
+
+
+# ---------------------------------------------------------------------------
+# size-bucketed batching == per-bucket solves, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("formulation", ["frontend", "nofrontend_reduced"])
+def test_bucketed_bit_identical_to_single_bucket(formulation):
+    """Bucketing is pure repacking: each bucket's lanes solve exactly as if
+    that bucket were the whole batch."""
+    rng = np.random.default_rng(11)
+    specs = [
+        _random_spec(int(rng.integers(1 << 30)),
+                     int(rng.integers(1, 4)), int(rng.integers(1, 9)))
+        for _ in range(24)
+    ]
+    ragged = batched_solve(specs, formulation=formulation, bucket="size")
+
+    canon = [sp.canonical()[0] for sp in specs]
+    keys = [(sp.num_sources, _bucket_m(sp.num_processors,
+                                       DEFAULT_M_BUCKET_EDGES))
+            for sp in canon]
+    for key in dict.fromkeys(keys):        # insertion order, unique
+        idx = [k for k, kk in enumerate(keys) if kk == key]
+        alone = batched_solve([specs[k] for k in idx],
+                              formulation=formulation, bucket="size")
+        nb = alone.spec.n_max
+        mb = alone.spec.m_max
+        for a, k in enumerate(idx):
+            assert np.array_equal(ragged.finish_time[k],
+                                  alone.finish_time[a], equal_nan=True)
+            assert np.array_equal(ragged.beta[k, :nb, :mb], alone.beta[a])
+            assert ragged.status[k] == alone.status[a]
+
+
+def test_bucket_none_matches_bucket_size_to_tolerance():
+    rng = np.random.default_rng(5)
+    specs = [
+        _random_spec(int(rng.integers(1 << 30)),
+                     int(rng.integers(1, 3)), int(rng.integers(2, 7)))
+        for _ in range(12)
+    ]
+    a = batched_solve(specs, frontend=False, bucket="size")
+    b = batched_solve(specs, frontend=False, bucket="none")
+    np.testing.assert_allclose(a.finish_time, b.finish_time, rtol=REL_TOL)
+    with pytest.raises(ValueError, match="bucket"):
+        batched_solve(specs, frontend=False, bucket="bogus")
+
+
+# ---------------------------------------------------------------------------
+# structured [F | I] kernel == dense kernel
+# ---------------------------------------------------------------------------
+
+def test_structured_kernel_matches_dense_kernel():
+    specs = [_random_spec(100 + k, 2, 4) for k in range(8)]
+    bs = BatchedSystemSpec.from_specs(specs)
+    for name in ("frontend", "nofrontend", "nofrontend_reduced"):
+        sol = batched_solve(bs, formulation=name, verify=False,
+                            oracle_fallback=False)
+        c, A, b = build_standard_form_batch(bs, name)
+        x, obj, status, _ = solve_lp_batch(c, A, b)
+        ok = (status == 0) & (sol.status == 0)
+        assert ok.sum() >= 6, f"{name}: too few certified lanes"
+        np.testing.assert_allclose(sol.finish_time[ok], obj[ok],
+                                   rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_speedup_grid_at_raises_keyerror_with_available_counts():
+    spec = SystemSpec(G=[0.5, 0.5], R=[0.0, 0.0], A=[2.0] * 4, J=10)
+    grid = speedup_grid(spec, source_counts=(1, 2), processor_counts=(2, 4),
+                        frontend=False)
+    assert grid.at(2, 4) > 0
+    with pytest.raises(KeyError) as ei:
+        grid.at(3, 4)
+    assert "[1, 2]" in str(ei.value) and "[2, 4]" in str(ei.value)
+    with pytest.raises(KeyError):
+        grid.at(2, 3)
+
+
+def test_fallback_is_recorded_not_silent():
+    specs = [_random_spec(200 + k, 2, 5) for k in range(6)]
+    # an absurdly small iteration budget cannot certify anything: every
+    # lane must fall back to the simplex oracle — and say so.
+    starved = batched_solve(specs, frontend=False, max_iter=2)
+    assert starved.fallback_count == len(specs)
+    assert starved.fallback_mask.sum() == starved.fallback_count
+    assert np.all(starved.status == 0)     # oracle still solved them
+    healthy = batched_solve(specs, frontend=False)
+    assert healthy.fallback_mask is not None
+    assert healthy.fallback_count == int(healthy.fallback_mask.sum())
+    for k, sp in enumerate(specs):
+        ref = solve(sp, frontend=False, solver="simplex").finish_time
+        assert starved.finish_time[k] == pytest.approx(ref, rel=REL_TOL)
+        assert healthy.finish_time[k] == pytest.approx(ref, rel=REL_TOL)

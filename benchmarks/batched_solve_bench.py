@@ -1,36 +1,51 @@
 """Batched vs scalar DLT solving throughput (scenarios/second).
 
-Measures end-to-end ``batched_solve`` (stacking + size-bucketed jitted
-vmapped interior-point + vectorized verification + oracle fallback)
-against (a) the scalar loop the repo's consumers used before the rewire
-(``solve()`` per scenario, simplex + per-scenario verification) on the
-uniform families, and (b) the PR-1 engine configuration (full Sec 3.2
-formulation, one global-max padded shape) on a mixed-size ragged
-no-front-end family — the workload the column-reduced formulation and
-size bucketing exist for.  The jit compile is warmed before timing — a
-production sweep service pays it once per family shape (and the engine
-LRU-caches compiled shapes).
+Runs on the session API (:class:`repro.core.dlt.DLTEngine`): one
+configured engine owns the compiled-shape LRU for the whole bench, and a
+warm-vs-cold pass measures the warm-started parametric sweep on the
+Sec 6 prefix family.  Measures:
+
+* end-to-end ``engine.solve_batch`` (stacking + size-bucketed jitted
+  vmapped interior-point + vectorized verification + oracle fallback)
+  against the scalar loop (``solve()`` per scenario) on uniform
+  families,
+* the PR-1 engine configuration (full Sec 3.2 formulation, one
+  global-max padded shape) on a mixed-size ragged no-front-end family —
+  the workload the column-reduced formulation and size bucketing exist
+  for,
+* warm-started vs cold ``engine.sweep`` on the Sec 6 prefix family:
+  total IPM iterations and scenarios/sec (the warm seed completes a
+  neighboring prefix's solution, so most lanes skip the approach phase).
+
+The jit compile is warmed before timing — a production sweep service
+pays it once per family shape (the engine LRU-caches compiled shapes,
+reported at the end via ``compile_cache_info``).
 
 Run:  PYTHONPATH=src python -m benchmarks.batched_solve_bench
       PYTHONPATH=src python -m benchmarks.batched_solve_bench --smoke
 The --smoke mode is a fast parity + speedup sanity pass used by
 scripts/check.sh; it runs a scaled-down mixed ragged family so the
-bucketing path is exercised in tier-1 smoke.
+bucketing path is exercised in tier-1 smoke.  With ``BENCH_OUT=<path>``
+a perf-trajectory JSON (scenarios/sec, warm vs cold iterations, cache
+hit/miss counters) is written — CI uploads it as a workflow artifact.
 
 Acceptance targets: >= 10x scenarios/sec over the scalar loop at batch
->= 256 on the small "cost-query" family, and >= 3x scenarios/sec over
-the PR-1 engine path on the mixed-size no-front-end family (2-core CPU
+>= 256 on the small "cost-query" family, >= 3x scenarios/sec over the
+PR-1 engine path on the mixed-size no-front-end family, and measurably
+fewer total IPM iterations for the warm-started sweep (2-core CPU
 reference; margins grow with cores).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
 import numpy as np
 
-from repro.core.dlt import SystemSpec, batched_solve, solve
+from repro.core.dlt import DLTEngine, SystemSpec, solve
 from .common import check, table
 
 FAMILIES = [
@@ -39,6 +54,9 @@ FAMILIES = [
     ("planner     N=3 M=8 fe", 3, 8, True),
     ("nofrontend  N=2 M=4", 2, 4, False),
 ]
+
+#: The bench session: every pass shares this engine's compiled-shape LRU.
+ENGINE = DLTEngine()
 
 
 def _specs(rng, count, n, m):
@@ -67,9 +85,10 @@ def _mixed_specs(rng, count, n_max, m_lo, m_hi):
     ]
 
 
-def _time_batched(specs, frontend, **kw):
+def _time_batched(specs, frontend, **config_overrides):
+    eng = ENGINE.configured(**config_overrides)
     t0 = time.perf_counter()
-    sol = batched_solve(specs, frontend=frontend, **kw)
+    sol = eng.solve_batch(specs, frontend=frontend)
     return time.perf_counter() - t0, sol
 
 
@@ -81,7 +100,7 @@ def _time_scalar(specs, frontend, sample):
     return (time.perf_counter() - t0) / sample * len(specs)
 
 
-def run_uniform(r, rng, smoke):
+def run_uniform(r, rng, smoke, out):
     families = FAMILIES[:1] if smoke else FAMILIES
     batches = (256,) if smoke else (256, 1024)
     scalar_sample = 128
@@ -98,6 +117,10 @@ def run_uniform(r, rng, smoke):
             speedup = ts / tb
             rows.append([label, B, round(B / ts, 1), round(B / tb, 1),
                          f"{speedup:.1f}x", sol.fallback_count])
+            out["uniform"].append(dict(
+                family=label, batch=B, scalar_per_s=B / ts,
+                batched_per_s=B / tb, speedup=speedup,
+                fallbacks=sol.fallback_count))
             if B >= 256:
                 best_at_256 = max(best_at_256, speedup)
             assert np.all(sol.status == 0), "bench family must be feasible"
@@ -109,7 +132,7 @@ def run_uniform(r, rng, smoke):
     r.note("best speedup at batch >= 256", f"{best_at_256:.1f}x")
 
 
-def run_mixed(r, rng, smoke):
+def run_mixed(r, rng, smoke, out):
     """Mixed-size ragged no-front-end family: the bucketing + column-
     reduction win vs the PR-1 engine path (full Sec 3.2 formulation, one
     global-max padded shape)."""
@@ -132,6 +155,9 @@ def run_mixed(r, rng, smoke):
     table(["family", "batch", "pr1/s", "batched/s", "speedup", "fallbacks"],
           [[label, B, round(B / t_leg, 2), round(B / t_new, 1),
             f"{speedup:.1f}x", sol.fallback_count]], fmt="{:>22}")
+    out["mixed"] = dict(family=label, batch=B, pr1_per_s=B / t_leg,
+                        batched_per_s=B / t_new, speedup=speedup,
+                        fallbacks=sol.fallback_count)
     r.note("mixed-family fallback count",
            f"{sol.fallback_count}/{B} lanes re-certified by the simplex oracle")
     r.check("mixed family >= 3x PR-1 engine path at batch >= "
@@ -148,22 +174,100 @@ def run_mixed(r, rng, smoke):
             bool(worst < 1e-6), True, rtol=0)
 
 
+def run_warm(r, rng, smoke, out):
+    """Warm-started vs cold parametric sweep on the Sec 6 prefix family."""
+    if smoke:
+        N, M = 2, 16
+    else:
+        N, M = 3, 32
+    G = [0.5, 0.6, 0.65, 0.7, 0.8][:N]
+    R = [2.0, 3.0, 3.5, 4.0, 4.5][:N]
+    A = np.round(np.linspace(1.1, 3.0, M), 10)
+    spec = SystemSpec(G=G, R=R, A=A, J=100)
+    label = f"Sec6 prefix N={N} M=1..{M} nofe"
+
+    runs = {}
+    for mode, warm in (("cold", False), ("warm", True)):
+        eng = ENGINE.configured(warm_start=warm)
+        eng.sweep(spec, frontend=False)             # compile + warm shapes
+        before = ENGINE.stats
+        t0 = time.perf_counter()
+        sweep = eng.sweep(spec, frontend=False)
+        dt = time.perf_counter() - t0
+        st = ENGINE.stats
+        runs[mode] = dict(
+            iterations=st.ipm_iterations - before.ipm_iterations,
+            warm_lanes=st.warm_lanes - before.warm_lanes,
+            fallbacks=st.fallback_lanes - before.fallback_lanes,
+            scen_per_s=M / dt, seconds=dt,
+            finish=sweep.finish_time)
+
+    cold, warm = runs["cold"], runs["warm"]
+    table(["sweep", "lanes", "ipm iters", "scen/s", "fallbacks"],
+          [[f"{label} cold", M, cold["iterations"],
+            round(cold["scen_per_s"], 1), cold["fallbacks"]],
+           [f"{label} warm", M, warm["iterations"],
+            round(warm["scen_per_s"], 1), warm["fallbacks"]]], fmt="{:>26}")
+    np.testing.assert_allclose(warm["finish"], cold["finish"], rtol=1e-6)
+    # parity vs the scalar simplex oracle at a few prefix lengths
+    cs = spec.canonical()[0]
+    worst = max(
+        abs(warm["finish"][m - 1]
+            - solve(cs.subset_processors(m), frontend=False, solver="simplex",
+                    presorted=True).finish_time) / max(1.0, warm["finish"][m - 1])
+        for m in (1, M // 2, M))
+    r.check("warm sweep parity vs scalar oracle (rel err < 1e-6)",
+            bool(worst < 1e-6), True, rtol=0)
+    r.check("warm sweep uses fewer total IPM iterations than cold",
+            bool(warm["iterations"] < cold["iterations"]), True, rtol=0)
+    r.note("warm vs cold IPM iterations",
+           f"{warm['iterations']} vs {cold['iterations']} "
+           f"({warm['warm_lanes']}/{M} lanes warm-started)")
+    r.note("warm vs cold scenarios/sec",
+           f"{warm['scen_per_s']:.1f} vs {cold['scen_per_s']:.1f}")
+    out["warm"] = dict(
+        family=label, lanes=M,
+        cold_iterations=cold["iterations"], warm_iterations=warm["iterations"],
+        warm_lanes=warm["warm_lanes"],
+        cold_scen_per_s=cold["scen_per_s"], warm_scen_per_s=warm["scen_per_s"])
+
+
 def run(smoke=False):
     r = check("batched_solve_bench")
     rng = np.random.default_rng(0)
-    run_uniform(r, rng, smoke)
-    run_mixed(r, rng, smoke)
+    out = {"smoke": smoke, "uniform": [], "mixed": None, "warm": None,
+           "cache": None, "passed": None}
+    run_uniform(r, rng, smoke, out)
+    run_mixed(r, rng, smoke, out)
+    run_warm(r, rng, smoke, out)
 
     if smoke:
         # fast parity spot-check rides along with the smoke bench
         probe = _specs(rng, 16, 2, 5)
-        sol = batched_solve(probe, frontend=True)
+        sol = ENGINE.solve_batch(probe, frontend=True)
         refs = [solve(sp, frontend=True).finish_time for sp in probe]
         worst = max(
             abs(sol.finish_time[k] - ref) / max(1.0, ref)
             for k, ref in enumerate(refs))
         r.check("smoke parity vs scalar (rel err < 1e-6)",
                 bool(worst < 1e-6), True, rtol=0)
+
+    info = ENGINE.compile_cache_info()
+    r.note("compile cache", f"{info['size']}/{info['maxsize']} shapes, "
+           f"{info['hits']} hits / {info['misses']} misses"
+           + (f", persisted at {info['persist_dir']} "
+              f"({info['persist_entries']} entries)"
+              if info["persist_dir"] else ""))
+    out["cache"] = {k: info[k] for k in
+                    ("size", "maxsize", "hits", "misses",
+                     "persist_dir", "persist_entries")}
+    out["passed"] = r.passed
+
+    bench_out = os.environ.get("BENCH_OUT")
+    if bench_out:
+        with open(bench_out, "w") as f:
+            json.dump(out, f, indent=2, default=float)
+        r.note("perf-trajectory JSON", bench_out)
     return r
 
 

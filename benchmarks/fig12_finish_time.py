@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dlt import SystemSpec, batched_solve
+from repro.core.dlt import SystemSpec, get_default_engine
 from .common import check, table
 
 
@@ -20,13 +20,19 @@ def run():
     G = [0.5, 0.6, 0.7]
     R = [2.0, 3.0, 4.0]
 
+    eng = get_default_engine()
     curves = {}
     for n in (1, 2, 3):
-        # the whole 20-processor curve is one batched vmapped solve on the
+        # each 20-processor curve is one warm-started prefix sweep on the
         # registry's column-reduced Sec 3.2 formulation (exact equivalent)
-        specs = [SystemSpec(G=G[:n], R=R[:n], A=A[:m], J=100)
-                 for m in range(1, 21)]
-        curves[n] = batched_solve(specs, frontend=False).finish_time
+        spec = SystemSpec(G=G[:n], R=R[:n], A=A, J=100)
+        sweep = eng.sweep(spec, frontend=False, m_max=20)
+        # the sweep drops non-optimal prefixes; re-expand on the m axis so
+        # a dropped lane can never silently shift the curve
+        tf = np.full(20, np.nan)
+        tf[np.asarray(sweep.m) - 1] = sweep.finish_time
+        assert not np.isnan(tf).any(), f"{n}-source curve has unsolved m"
+        curves[n] = tf
 
     rows = [[m] + [round(curves[n][m - 1], 2) for n in (1, 2, 3)]
             for m in (1, 2, 4, 8, 12, 16, 20)]

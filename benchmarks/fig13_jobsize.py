@@ -8,17 +8,17 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dlt import SystemSpec, batched_solve
+from repro.core.dlt import SystemSpec, get_default_engine
 from .common import check, table
 
 
 def run():
     r = check("fig13_jobsize")
     A = np.round(np.arange(1.1, 3.01, 0.1), 10)
-    # all 60 (J, m) scenarios ride one batched vmapped solve
+    # all 60 (J, m) scenarios ride one batched session call
     specs = [SystemSpec(G=[0.5, 0.6, 0.7], R=[2, 3, 4], A=A[:m], J=J)
              for J in (100, 300, 500) for m in range(1, 21)]
-    tf = batched_solve(specs, frontend=True).finish_time
+    tf = get_default_engine().solve_batch(specs, frontend=True).finish_time
     curves = {J: tf[k * 20: (k + 1) * 20]
               for k, J in enumerate((100, 300, 500))}
 

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.dlt import SystemSpec, sweep_processors
+from repro.core.dlt import SystemSpec, get_default_engine
 from .common import check, table
 
 
@@ -17,7 +17,7 @@ def make_sweep():
     A = np.round(np.arange(1.1, 3.01, 0.1), 10)
     C = np.arange(29, 9, -1.0)
     spec = SystemSpec(G=[0.5, 0.6], R=[2, 3], A=A, C=C, J=100)
-    return sweep_processors(spec, frontend=True)
+    return get_default_engine().sweep(spec, frontend=True)
 
 
 def run():

@@ -18,7 +18,7 @@ sys.path.insert(0, str(ROOT / "src"))
 import numpy as np
 
 from repro.core.advisor import ClusterAdvisor, SliceCandidate
-from repro.core.dlt import SystemSpec
+from repro.core.dlt import DLTEngine, SystemSpec
 
 
 def load_step_time(arch="llama3-8b", shape="train_4k"):
@@ -75,12 +75,13 @@ def main():
                                budget_seconds=0.9 * min_time))
 
     # the same three questions for an explicit DLT system (paper Table 5);
-    # the sweep over all processor prefixes is one batched vmapped solve
+    # the sweep over all processor prefixes is one warm-started session
+    # call on the engine API
     dlt_spec = SystemSpec(
         G=[0.5, 0.6], R=[2, 3],
         A=np.round(np.arange(1.1, 3.01, 0.1), 10),
         C=np.arange(29, 9, -1.0), J=100)
-    adv2 = ClusterAdvisor.from_system_spec(dlt_spec, frontend=True)
+    adv2 = DLTEngine().advisor(dlt_spec, frontend=True)
 
     def show_dlt(label, p):  # DLT sweeps: m = processors, T_f in seconds
         if p.feasible:

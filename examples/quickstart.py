@@ -4,7 +4,7 @@
 2. compare front-end vs no-front-end makespans,
 3. cost/time trade-off plans (paper Sec 6),
 4. use the same solver as a training batch balancer (straggler mitigation),
-5. solve a whole scenario family in one batched vmapped call.
+5. solve whole scenario families through one configured DLTEngine session.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -18,8 +18,8 @@ import numpy as np
 
 from repro.core.balancer import balance_batch
 from repro.core.dlt import (
-    STATUS_INFEASIBLE, STATUS_OPTIMAL, SystemSpec, batched_solve,
-    plan_with_both_budgets, solve, sweep_processors,
+    DLTEngine, STATUS_INFEASIBLE, STATUS_OPTIMAL, SystemSpec,
+    plan_with_both_budgets, solve,
 )
 
 
@@ -51,10 +51,13 @@ def main():
           f"({nofe.finish_time / fe2.finish_time - 1:+.1%})")
 
     # --- 3. Sec 6 trade-off --------------------------------------------------
+    # one configured session behind every remaining solve in this example:
+    # the engine owns the compiled-shape cache and warm-starts its sweeps
+    eng = DLTEngine()
     A = np.round(np.arange(1.1, 3.01, 0.1), 10)
     spec6 = SystemSpec(G=[0.5, 0.6], R=[2, 3], A=A,
                        C=np.arange(29, 9, -1.0), J=100)
-    sweep = sweep_processors(spec6, frontend=True)
+    sweep = eng.sweep(spec6, frontend=True)
     plan = plan_with_both_budgets(sweep, budget_cost=3600.0, budget_time=40.0)
     print("\n== Sec 6 trade-off (Budget_cost=$3600, Budget_time=40s) ==")
     print(f"  feasible: {plan.feasible}; use m={plan.recommended_m} "
@@ -71,14 +74,14 @@ def main():
           f"{plan_b.uniform_makespan:.2f}s "
           f"({plan_b.speedup_vs_uniform:.2f}x)")
 
-    # --- 5. batched what-if sweeps: one jitted call, ragged scenarios -------
-    print("\n== batched engine: 40 link-speed what-ifs in one call ==")
+    # --- 5. batched what-if sweeps through the session ----------------------
+    print("\n== engine session: 40 link-speed what-ifs in one call ==")
     what_ifs = [
         SystemSpec(G=[0.2 * s, 0.4 * s], R=[10, 20], A=[2, 3, 4, 5, 6],
                    J=100)
         for s in np.linspace(0.1, 8.0, 40)
     ]
-    batch = batched_solve(what_ifs, frontend=False)
+    batch = eng.solve_batch(what_ifs, frontend=False)
     n_bad = int(np.sum(batch.status == STATUS_INFEASIBLE))
     ok = batch.status == STATUS_OPTIMAL
     print(f"  solved {int(ok.sum())}/40 scenarios; {n_bad} infeasible at "
@@ -86,6 +89,17 @@ def main():
     best = int(np.nanargmin(batch.finish_time))
     print(f"  best makespan {np.nanmin(batch.finish_time):.2f} at "
           f"G = {np.round(what_ifs[best].G, 2).tolist()}")
+
+    # streaming traffic: engine.map chunks + buckets an iterator of specs
+    # (strict mode — a lane without a certified schedule raises, naming
+    # the lane's status, instead of surfacing as a silent None)
+    feasible_stream = (sp for sp, st in zip(what_ifs, batch.status)
+                       if st == STATUS_OPTIMAL)
+    served = sum(sol.batch for sol in eng.map(feasible_stream,
+                                              frontend=False, strict=True))
+    info = eng.compile_cache_info()
+    print(f"  engine.map served {served} specs from a generator "
+          f"(cache: {info['size']} shapes, {info['hits']} hits)")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,11 @@
 #    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
 # 2. a fast batched-vs-scalar parity + throughput smoke, including a
 #    mixed-size ragged no-front-end family exercising size-bucketed
-#    batching (benchmarks/batched_solve_bench.py --smoke).
+#    batching and a warm-vs-cold Sec 6 prefix sweep
+#    (benchmarks/batched_solve_bench.py --smoke).  The smoke writes a
+#    perf-trajectory JSON (scenarios/sec, warm vs cold IPM iterations,
+#    compile-cache hit/miss counters) to $BENCH_OUT — CI uploads it as
+#    a workflow artifact so the numbers are tracked per commit.
 #
 # CI (.github/workflows/check.yml) runs this script on a bare profile
 # (numpy+jax+pytest only) and a full-extras profile (+hypothesis +scipy).
@@ -16,13 +20,15 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export BENCH_OUT="${BENCH_OUT:-BENCH_engine.json}"
 
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo
-echo "== batched engine smoke (parity + speedup) =="
+echo "== batched engine smoke (parity + speedup + warm sweep) =="
 python -m benchmarks.batched_solve_bench --smoke
 
 echo
+echo "perf trajectory written to ${BENCH_OUT}"
 echo "ALL CHECKS PASSED"

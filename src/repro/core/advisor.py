@@ -22,7 +22,6 @@ from .dlt.cost import (
     plan_with_both_budgets,
     plan_with_cost_budget,
     plan_with_time_budget,
-    sweep_processors,
 )
 from .dlt.types import SystemSpec
 
@@ -81,14 +80,21 @@ class ClusterAdvisor:
         """Advisor over an explicit DLT system instead of slice candidates.
 
         Runs the Sec 6 processor sweep (all prefixes of the canonical
-        processor list, one jitted vmapped batch by default) and exposes
-        the same three budget planners over it.  ``spec`` needs ``C`` for
-        the cost-based plans.  ``formulation`` pins a registry formulation
-        (defaults follow :func:`repro.core.dlt.cost.sweep_processors`).
+        processor list, one warm-started vmapped session call by default)
+        and exposes the same three budget planners over it.  ``spec``
+        needs ``C`` for the cost-based plans.  ``formulation`` pins a
+        registry formulation.  Compatibility shim over
+        :meth:`repro.core.dlt.engine.DLTEngine.advisor` (shared default
+        session); sessions with their own config should call
+        ``DLTEngine(...).advisor(spec)`` directly.
         """
-        return cls(sweep=sweep_processors(
-            spec, frontend=frontend, m_max=m_max, engine=engine,
-            formulation=formulation))
+        from .dlt.engine import get_default_engine
+
+        if engine not in ("batched", "scalar"):
+            raise ValueError(
+                f"unknown engine {engine!r}: use 'batched' or 'scalar'")
+        return get_default_engine().configured(engine=engine).advisor(
+            spec, frontend=frontend, m_max=m_max, formulation=formulation)
 
     def gradient(self) -> np.ndarray:
         """Eq 18 over slice sizes."""

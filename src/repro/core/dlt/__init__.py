@@ -2,12 +2,20 @@
 
 Public API:
     SystemSpec, Schedule, InfeasibleError          (types)
+    DLTEngine, EngineConfig, get_default_engine    (the session API)
     solve, verify_schedule                         (Sec 3.1 / 3.2 LPs)
     get_formulation, Formulation, ...              (formulation registry)
     solve_single_source                            (Sec 2 closed form)
     monetary_cost, sweep_processors, plan_*        (Sec 6 trade-offs)
     speedup_grid                                   (Sec 5 Amdahl analysis)
     batched_solve, BatchedSystemSpec, ...          (batched vmap engine)
+    compile_cache_info                             (compiled-shape cache ops)
+
+Every free function is a thin shim over one shared default
+:class:`~repro.core.dlt.engine.DLTEngine`; configure a session of your
+own (``DLTEngine(formulation=..., compile_cache_dir=...)``) to pin knobs
+once and reuse warm-started parametric sweeps and the compiled-shape
+cache across the whole workload surface.
 """
 
 from .batched import (
@@ -17,7 +25,14 @@ from .batched import (
     BatchedSolution,
     BatchedSystemSpec,
     batched_solve,
+    compile_cache_info,
     solve_lp_batch,
+)
+from .engine import (
+    DLTEngine,
+    EngineConfig,
+    EngineStats,
+    get_default_engine,
 )
 from .formulations import (
     Formulation,
@@ -45,6 +60,11 @@ __all__ = [
     "SystemSpec",
     "Schedule",
     "InfeasibleError",
+    "DLTEngine",
+    "EngineConfig",
+    "EngineStats",
+    "get_default_engine",
+    "compile_cache_info",
     "solve",
     "batched_solve",
     "solve_lp_batch",

@@ -1,10 +1,12 @@
-"""Batched, vmap-able DLT schedule solving engine (pure JAX).
+"""Batched, vmap-able DLT solver machinery (pure JAX).
 
 The paper's Sec 5-6 analyses (speedup grids, cost sweeps, budget planning)
 are many-scenario computations: thousands of small LPs that differ only in
 their data ``(G, R, A, C, J)`` and sizes ``(N, M)``.  The scalar path solves
-them one at a time through a NumPy simplex; this module solves a whole
-family in ONE jitted call:
+them one at a time through a NumPy simplex; this module holds the machinery
+that solves a whole family in ONE jitted call (the session front door is
+:class:`repro.core.dlt.engine.DLTEngine`; :func:`batched_solve` below is a
+compatibility shim over the shared default engine):
 
 1. :class:`BatchedSystemSpec` stacks canonically-sorted specs into padded
    ``(B, N_max)`` / ``(B, M_max)`` arrays with per-scenario size masks.
@@ -20,7 +22,8 @@ family in ONE jitted call:
 3. **Size-bucketed batching**: ragged scenarios are grouped into a few
    ``(N, M_bucket)`` padded shapes instead of one global max, cutting the
    padding blowup for mixed source/processor counts.  Each bucket runs
-   through an LRU cache of ahead-of-time compiled family shapes.
+   through the engine's LRU of ahead-of-time compiled family shapes
+   (optionally persisted across processes via the JAX compilation cache).
 4. The fixed-budget interior-point kernel (Mehrotra predictor-corrector on
    the homogeneous self-dual embedding, under ``jit(vmap(...))``) exploits
    the ``[F | I]`` structure of the standard form: slack/artificial columns
@@ -44,7 +47,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 from collections import OrderedDict
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,8 +59,6 @@ from .formulations import (
     Formulation,
     get_formulation,
 )
-from .single_source import single_source_intervals
-from .solve import solve
 from .stacking import BatchedSystemSpec
 from .types import InfeasibleError, Schedule
 
@@ -174,7 +175,8 @@ def build_standard_form_batch(bs: BatchedSystemSpec,
 # Fixed-budget interior-point LP solver (homogeneous self-dual embedding)
 # ---------------------------------------------------------------------------
 
-def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float):
+def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float,
+                   init=None):
     """min c'x s.t. Ax=b, x>=0 via Mehrotra predictor-corrector on the HSDE.
 
     The constraint matrix enters only through three linear maps —
@@ -182,16 +184,30 @@ def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float):
     — so dense and structured ``[F | I]`` instantiations share this body.
     Shape-static: a while_loop capped at ``max_iter`` iterations that
     (under vmap) exits once every lane is decided.  Returns
-    (x, obj, status, iters) where x is the primal solution (x/tau).  HSDE
-    certificates make infeasibility detection residual-based: the
-    embedding is always feasible and converges either to tau>0 (optimum)
-    or tau->0 with kappa>0 (primal or dual infeasible).
+    (x, obj, status, iters, y, s) where x is the primal solution (x/tau)
+    and (y, s) the tau-scaled duals — the triple a warm start of a nearby
+    program feeds back in.  HSDE certificates make infeasibility detection
+    residual-based: the embedding is always feasible and converges either
+    to tau>0 (optimum) or tau->0 with kappa>0 (primal or dual infeasible).
+
+    ``init`` (optional) is an interior ``(x0, y0, s0)`` starting triple —
+    every entry of ``x0``/``s0`` must be strictly positive; the embedding
+    restarts at ``tau=1`` with ``kappa`` matched to the average
+    complementarity product, so a shifted previous solution of a nearby
+    LP (same padded shape) enters the central path close to the optimum.
     """
     n = c.shape[0]
     m = b.shape[0]
     nb = 1.0 + jnp.linalg.norm(b)
     nc = 1.0 + jnp.linalg.norm(c)
-    mu0 = 1.0  # x = e, s = e, tau = kappa = 1
+    if init is None:
+        x0, y0, s0 = jnp.ones(n), jnp.zeros(m), jnp.ones(n)
+        tau0, kappa0 = jnp.asarray(1.0), jnp.asarray(1.0)
+    else:
+        x0, y0, s0 = init
+        tau0 = jnp.asarray(1.0)
+        kappa0 = (x0 @ s0) / n
+    mu0 = (x0 @ s0 + tau0 * kappa0) / (n + 1)
 
     def classify(x, y, s, tau, kappa):
         mu = (x @ s + tau * kappa) / (n + 1)
@@ -285,14 +301,13 @@ def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float):
         return (x, y, s, tau, kappa, status, done | done_now,
                 nit + 1)
 
-    carry0 = (jnp.ones(n), jnp.zeros(m), jnp.ones(n),
-              jnp.asarray(1.0), jnp.asarray(1.0),
-              jnp.asarray(STATUS_MAXITER), jnp.asarray(False),
-              jnp.asarray(0))
+    status0, done0 = classify(x0, y0, s0, tau0, kappa0)
+    carry0 = (x0, y0, s0, tau0, kappa0, status0, done0, jnp.asarray(0))
     x, y, s, tau, kappa, status, done, nit = jax.lax.while_loop(
         cond, body, carry0)
-    xsol = x / jnp.maximum(tau, 1e-300)
-    return xsol, c @ xsol, status, nit
+    inv_tau = 1.0 / jnp.maximum(tau, 1e-300)
+    xsol = x * inv_tau
+    return xsol, c @ xsol, status, nit, y * inv_tau, s * inv_tau
 
 
 def _hsde_ipm(c, A, b, max_iter: int, tol: float):
@@ -310,13 +325,13 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float):
     return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol)
 
 
-def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float):
-    """Structured instantiation exploiting the ``[F | I]`` slack block.
+def _structured_ops(F, art):
+    """Linear maps of ``A = [[F_ub, I, 0], [F_eq, 0, diag(art)]]``.
 
-    ``A = [[F_ub, I, 0], [F_eq, 0, diag(art)]]``: slack and artificial
-    columns touch exactly one row each, so they add only a diagonal to the
-    normal equations — each iteration builds ``F D_v F' + diag(extra)``
-    (cost ``m^2 nv``) instead of the dense ``A D A'`` (cost ``m^2 (nv+m)``).
+    Slack and artificial columns touch exactly one row each, so they add
+    only a diagonal to the normal equations — each iteration builds
+    ``F D_v F' + diag(extra)`` (cost ``m^2 nv``) instead of the dense
+    ``A D A'`` (cost ``m^2 (nv+m)``).
     """
     m, nv = F.shape
     n_eq = art.shape[0]
@@ -337,7 +352,27 @@ def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float):
         extra = jnp.concatenate([dsl, art * art * dar])
         return (F * dv[None, :]) @ F.T + jnp.diag(extra)
 
+    return A_mul, AT_mul, normal_mat
+
+
+def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float):
+    """Structured (cold-start) instantiation of the HSDE kernel."""
+    A_mul, AT_mul, normal_mat = _structured_ops(F, art)
     return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol)
+
+
+def _hsde_ipm_structured_warm(c, F, b, art, x0, y0, s0,
+                              max_iter: int, tol: float):
+    """Structured instantiation restarted from an interior ``(x0, y0, s0)``.
+
+    Used by the engine's warm-started parametric sweeps: the previous
+    family member's (shifted) solution triple re-enters the embedding at
+    ``tau=1``, so nearby programs converge in a fraction of the cold
+    iteration count.
+    """
+    A_mul, AT_mul, normal_mat = _structured_ops(F, art)
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol,
+                          init=(x0, y0, s0))
 
 
 @functools.lru_cache(maxsize=None)
@@ -366,81 +401,33 @@ def solve_lp_batch(c, A, b, max_iter: int = 25, tol: float = 1e-8):
         A = jnp.asarray(A, jnp.float64)
         b = jnp.asarray(b, jnp.float64)
         out = _jitted_batch_solver(int(max_iter), float(tol))(c, A, b)
-        return tuple(np.asarray(t) for t in out)
+        return tuple(np.asarray(t) for t in out[:4])
 
 
 # ---------------------------------------------------------------------------
-# LRU cache of compiled family shapes
+# Compiled-family cache (owned by the engine; module-level view for ops)
 # ---------------------------------------------------------------------------
 
-#: Entries kept in the compiled-executable LRU.  Each entry is one
-#: ahead-of-time compiled (batch, rows, vars) family shape of the
-#: structured kernel; eviction just means recompiling on next use.
+#: Default entry count of a :class:`~repro.core.dlt.engine.DLTEngine`'s
+#: compiled-executable LRU.  Each entry is one ahead-of-time compiled
+#: (batch, rows, vars) family shape of the structured kernel; eviction
+#: just means recompiling on next use.  Override per engine via
+#: ``EngineConfig.compile_cache_size``.
 COMPILE_CACHE_SIZE = 64
-
-_COMPILED: "OrderedDict[tuple, object]" = OrderedDict()
-
-
-def _structured_executable(B: int, mrows: int, nv: int, n_eq: int,
-                           max_iter: int, tol: float):
-    """AOT-compiled ``jit(vmap(_hsde_ipm_structured))`` for one shape."""
-    key = (B, mrows, nv, n_eq, max_iter, tol)
-    exe = _COMPILED.get(key)
-    if exe is not None:
-        _COMPILED.move_to_end(key)
-        return exe
-    fn = jax.jit(jax.vmap(functools.partial(
-        _hsde_ipm_structured, max_iter=max_iter, tol=tol)))
-    f8 = np.dtype(np.float64)
-    sds = jax.ShapeDtypeStruct
-    exe = fn.lower(
-        sds((B, nv + mrows), f8),
-        sds((B, mrows, nv), f8),
-        sds((B, mrows), f8),
-        sds((B, n_eq), f8),
-    ).compile()
-    _COMPILED[key] = exe
-    while len(_COMPILED) > COMPILE_CACHE_SIZE:
-        _COMPILED.popitem(last=False)
-    return exe
 
 
 def compile_cache_info() -> dict:
-    """Shapes currently held by the compiled-family LRU (for ops/tests)."""
-    return {"size": len(_COMPILED), "maxsize": COMPILE_CACHE_SIZE,
-            "keys": list(_COMPILED)}
+    """Compiled-family cache state of the shared default engine.
 
-
-def _solve_family(fam: FamilyLP, max_iter: int, tol: float,
-                  chunk_size: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Run the structured kernel over a family, chunked along the batch.
-
-    Lane counts are padded to the next power of two (repeating the last
-    lane) so the compiled-shape cache sees a bounded set of batch sizes;
-    padding lanes are dropped before returning.  vmap lanes are
-    independent, so real lanes' results are unaffected by the padding.
+    Returns shape keys currently held by the LRU plus the engine's
+    hit/miss counters and — when ``EngineConfig.compile_cache_dir`` is
+    set — the persistent JAX compilation-cache directory and its entry
+    count.  Sessions built with their own :class:`DLTEngine` should call
+    ``engine.compile_cache_info()`` instead.
     """
-    B = fam.c.shape[0]
-    mrows, nv = fam.F.shape[1], fam.F.shape[2]
-    n_eq = fam.art.shape[1]
-    xs, sts, nits = [], [], []
-    with jax.experimental.enable_x64():
-        for lo in range(0, B, chunk_size):
-            hi = min(lo + chunk_size, B)
-            Bk = hi - lo
-            Bp = 1 << (Bk - 1).bit_length()
-            parts = [fam.c[lo:hi], fam.F[lo:hi], fam.b[lo:hi],
-                     fam.art[lo:hi]]
-            if Bp != Bk:
-                parts = [np.concatenate(
-                    [p, np.repeat(p[-1:], Bp - Bk, axis=0)]) for p in parts]
-            exe = _structured_executable(Bp, mrows, nv, n_eq,
-                                         int(max_iter), float(tol))
-            x, _, st, ni = exe(*[jnp.asarray(p, jnp.float64) for p in parts])
-            xs.append(np.asarray(x)[:Bk])
-            sts.append(np.asarray(st)[:Bk])
-            nits.append(np.asarray(ni)[:Bk])
-    return np.concatenate(xs), np.concatenate(sts), np.concatenate(nits)
+    from .engine import get_default_engine
+
+    return get_default_engine().compile_cache_info()
 
 
 # ---------------------------------------------------------------------------
@@ -531,10 +518,42 @@ class BatchedSolution:
             cost[~self.spec.has_cost] = np.nan
         return cost
 
-    def schedule(self, k: int) -> Optional[Schedule]:
-        """Scenario k as a scalar Schedule (None if not solved)."""
+    def schedule(self, k: int, strict: bool = False) -> Optional[Schedule]:
+        """Scenario k as a scalar Schedule.
+
+        Lanes without a certified solution return ``None`` by default;
+        with ``strict=True`` they raise instead — an
+        :class:`InfeasibleError` for lanes the solver (and, when the
+        oracle fallback ran, the simplex) proved infeasible, otherwise a
+        ``RuntimeError`` naming the lane's status code and whether the
+        scalar oracle was consulted.  ``engine.map`` serves with
+        ``strict=True`` so failed lanes can never be mistaken for
+        "no schedule needed".
+        """
         if self.status[k] != STATUS_OPTIMAL:
-            return None
+            if not strict:
+                return None
+            names = {STATUS_OPTIMAL: "optimal",
+                     STATUS_MAXITER: "iteration budget exhausted",
+                     STATUS_INFEASIBLE: "infeasible"}
+            st = int(self.status[k])
+            fb = (self.fallback_mask is not None
+                  and bool(self.fallback_mask[k]))
+            if st == STATUS_INFEASIBLE:
+                how = ("infeasibility confirmed by the scalar simplex "
+                       "oracle on fallback" if fb
+                       else "interior-point verdict; no oracle fallback ran")
+            else:
+                # an uncertified lane survives only when the fallback was
+                # disabled — otherwise the simplex would have settled it
+                how = ("lane was flagged for oracle fallback but the "
+                       "fallback was disabled (oracle_fallback=False)"
+                       if fb else "no oracle fallback ran")
+            msg = (f"lane {k} has no schedule: status={st} "
+                   f"({names.get(st, 'unknown')}); {how}")
+            if st == STATUS_INFEASIBLE:
+                raise InfeasibleError(msg)
+            raise RuntimeError(msg)
         n, m = int(self.spec.n_sources[k]), int(self.spec.n_procs[k])
         kw = {}
         if not self.frontend and self.TS is not None:
@@ -547,8 +566,8 @@ class BatchedSolution:
             **kw,
         )
 
-    def schedules(self) -> list:
-        return [self.schedule(k) for k in range(self.batch)]
+    def schedules(self, strict: bool = False) -> list:
+        return [self.schedule(k, strict=strict) for k in range(self.batch)]
 
 
 def batched_solve(
@@ -593,93 +612,19 @@ def batched_solve(
         padded shapes (cuts the padding blowup for mixed size families);
         ``"none"`` embeds everything in one global-max shape.
       m_bucket_edges: processor-count bucket boundaries for ``"size"``.
+
+    This is a compatibility shim over the session API: it runs on the
+    shared default :class:`~repro.core.dlt.engine.DLTEngine` (so repeat
+    calls share one compiled-shape cache) with the keyword knobs applied
+    as per-call config overrides.  New code should configure a
+    :class:`~repro.core.dlt.engine.DLTEngine` once and call
+    ``engine.solve_batch`` / ``engine.map`` instead.
     """
-    fm = get_formulation(
-        formulation if formulation is not None
-        else (True if frontend else DEFAULT_NOFRONTEND_FORMULATION))
-    frontend = fm.frontend
-    bspec = (specs if isinstance(specs, BatchedSystemSpec)
-             else BatchedSystemSpec.from_specs(specs, presorted=presorted))
-    B, Nmax, Mmax = bspec.batch, bspec.n_max, bspec.m_max
+    from .engine import get_default_engine
 
-    beta = np.zeros((B, Nmax, Mmax))
-    finish = np.full(B, np.nan)
-    TS = TF = None
-    if fm.has_intervals:
-        TS = np.zeros((B, Nmax, Mmax))
-        TF = np.zeros((B, Nmax, Mmax))
-    status = np.full(B, STATUS_MAXITER, dtype=np.int64)
-    iters = np.zeros(B, dtype=np.int64)
-
-    for (nb, mb), idx in _group_lanes(bspec, bucket, m_bucket_edges).items():
-        # never pad past the group's true max — a group's padded shape then
-        # depends only on its own lanes, so solving it inside a ragged batch
-        # or alone is the same computation (and the largest bucket is tight)
-        mb = min(mb, int(bspec.n_procs[idx].max()))
-        sub = bspec.take(idx, n_pad=nb, m_pad=mb)
-        fam = build_family_lp(sub, fm)
-        x, st, ni = _solve_family(fam, max_iter, tol, chunk_size)
-        fields = fm.unpack_batch(sub, x)
-        sl = np.ix_(idx, np.arange(nb), np.arange(mb))
-        beta[sl] = fields.beta
-        finish[idx] = fields.finish
-        if fm.has_intervals:
-            TS[sl] = fields.TS
-            TF[sl] = fields.TF
-        status[idx] = st
-        iters[idx] = ni
-
-    # exact zeros on padding (IPM leaves ~tol-level dust on masked vars)
-    cell = bspec.cell_mask
-    beta[~cell] = 0.0
-    if TS is not None:
-        TS[~cell] = 0.0
-        TF[~cell] = 0.0
-
-    ok = status == STATUS_OPTIMAL
-    if verify:
-        good = fm.verify_batch(
-            bspec, BatchFields(beta=beta, finish=finish, TS=TS, TF=TF))
-        demoted = ok & ~good
-        status[demoted] = STATUS_MAXITER
-        ok &= good
-
-    fallback_mask = ~ok
-    if oracle_fallback:
-        # every uncertified lane — including IPM infeasibility verdicts,
-        # which the simplex either confirms or overturns with a solution
-        for k in np.flatnonzero(~ok):
-            try:
-                sched = solve(bspec.scenario(k), frontend=frontend,
-                              solver="simplex", presorted=True)
-            except InfeasibleError:
-                status[k] = STATUS_INFEASIBLE
-                continue
-            sp = sched.spec
-            n, m = sp.num_sources, sp.num_processors
-            beta[k] = 0.0
-            beta[k, :n, :m] = sched.beta
-            finish[k] = sched.finish_time
-            if TS is not None:
-                TS[k] = 0.0
-                TF[k] = 0.0
-                if sched.TS is not None:
-                    TS[k, :n, :m] = sched.TS
-                    TF[k, :n, :m] = sched.TF
-                else:
-                    # Sec 2 closed form (single source): back-to-back chain
-                    TS[k, 0, :m], TF[k, 0, :m] = single_source_intervals(
-                        sp.R[0], sp.G[0], sched.beta[0])
-            status[k] = STATUS_OPTIMAL
-
-    infeasible = status == STATUS_INFEASIBLE
-    finish[infeasible] = np.nan
-    beta[infeasible] = 0.0          # interior-point ray junk, not a schedule
-    if TS is not None:
-        TS[infeasible] = 0.0
-        TF[infeasible] = 0.0
-    return BatchedSolution(
-        spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
-        status=status, iterations=iters, TS=TS, TF=TF,
-        formulation=fm.name, fallback_mask=fallback_mask,
-    )
+    return get_default_engine().configured(
+        max_iter=max_iter, tol=tol, verify=verify,
+        oracle_fallback=oracle_fallback, chunk_size=chunk_size,
+        bucket=bucket, m_bucket_edges=tuple(m_bucket_edges),
+    ).solve_batch(specs, frontend=frontend, formulation=formulation,
+                  presorted=presorted)

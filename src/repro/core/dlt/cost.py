@@ -19,8 +19,7 @@ from typing import Optional
 
 import numpy as np
 
-from .solve import solve
-from .types import InfeasibleError, Schedule, SystemSpec
+from .types import Schedule, SystemSpec
 
 __all__ = [
     "monetary_cost",
@@ -54,6 +53,30 @@ class ProcessorSweep:
         return g
 
 
+def _coerce_solver_engine(solver: str, engine: str, caller: str):
+    """Legacy solver/engine coupling of the free-function shims.
+
+    A pinned ``solver`` (anything but "auto") used to silently imply the
+    scalar engine per a docstring note only.  The shims keep that
+    behavior for compatibility but now say so out loud; new code should
+    build a :class:`~repro.core.dlt.engine.DLTEngine` where the same
+    combination is a validated ``ValueError``.
+    """
+    if engine not in ("batched", "scalar"):
+        raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
+    if solver != "auto" and engine == "batched":
+        import warnings
+
+        warnings.warn(
+            f"{caller}: solver={solver!r} is only honored by the scalar "
+            "engine — falling back to engine='scalar'. This implicit "
+            "downgrade is deprecated: pass engine='scalar' explicitly "
+            "(DLTEngine raises ValueError on this combination).",
+            DeprecationWarning, stacklevel=3)
+        engine = "scalar"
+    return solver, engine
+
+
 def sweep_processors(
     spec: SystemSpec,
     frontend: bool = True,
@@ -71,37 +94,18 @@ def sweep_processors(
     ``formulation`` pins a registry formulation for either engine (the
     batched default is the column-reduced Sec 3.2 program when
     ``frontend=False``).  A pinned ``solver`` (anything but "auto") implies
-    the scalar engine, which is the only path that honors it.
-    """
-    if engine not in ("batched", "scalar"):
-        raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
-    if solver != "auto":
-        engine = "scalar"
-    cspec = spec.canonical()[0]
-    M = cspec.num_processors if m_max is None else min(m_max, cspec.num_processors)
-    if engine == "batched":
-        from .batched import STATUS_OPTIMAL, batched_solve
+    the scalar engine, which is the only path that honors it — deprecated;
+    pass ``engine="scalar"`` explicitly.
 
-        subs = [cspec.subset_processors(m) for m in range(1, M + 1)]
-        sol = batched_solve(subs, frontend=frontend,
-                            formulation=formulation, presorted=True)
-        keep = sol.status == STATUS_OPTIMAL
-        ms = np.flatnonzero(keep) + 1
-        costs = (sol.monetary_cost()[keep] if cspec.C is not None
-                 else np.full(keep.sum(), np.nan))
-        return ProcessorSweep(ms, sol.finish_time[keep], costs)
-    ms, tfs, costs = [], [], []
-    for m in range(1, M + 1):
-        sub = cspec.subset_processors(m)
-        try:
-            sched = solve(sub, frontend=frontend, solver=solver,
-                          presorted=True, formulation=formulation)
-        except InfeasibleError:
-            continue
-        ms.append(m)
-        tfs.append(sched.finish_time)
-        costs.append(sched.monetary_cost() if cspec.C is not None else np.nan)
-    return ProcessorSweep(np.asarray(ms), np.asarray(tfs), np.asarray(costs))
+    Compatibility shim over :meth:`repro.core.dlt.engine.DLTEngine.sweep`
+    (shared default session — batched prefix sweeps are warm-started).
+    """
+    from .engine import get_default_engine
+
+    solver, engine = _coerce_solver_engine(solver, engine, "sweep_processors")
+    return get_default_engine().configured(
+        solver=solver, engine=engine).sweep(
+            spec, frontend=frontend, m_max=m_max, formulation=formulation)
 
 
 def finish_time_gradient(sweep: ProcessorSweep) -> np.ndarray:

@@ -1,0 +1,842 @@
+"""DLTEngine — one configured session object behind every solve path.
+
+The paper's workloads are parametric families: Sec 5 sweeps
+(sources x processors) grids, Sec 6 sweeps processor prefixes of one
+system, and a serving deployment answers streams of near-identical
+scheduling queries.  Before this module each entry point (``solve``,
+``batched_solve``, ``sweep_processors``, ``speedup_grid``,
+``ClusterAdvisor.from_system_spec``) re-exposed an overlapping knob set
+and rebuilt solver state from scratch, throwing away everything a family
+shares.  The session API keeps it:
+
+* :class:`EngineConfig` — every solver / formulation / batching /
+  verification knob in one validated frozen dataclass, with
+  ``replace()``-style overrides.
+* :class:`DLTEngine` — the whole workload surface as methods
+  (``solve``, ``solve_batch``, ``sweep``, ``grid``, ``advisor``,
+  ``map``) over one owned compiled-executable LRU (hit/miss counters,
+  optional on-disk persistence through the JAX compilation cache) and
+  one stats ledger.
+* **Warm-started IPM for parametric families**: prefix/grid sweeps solve
+  a strided subset of anchor lanes cold, then restart every remaining
+  lane's homogeneous self-dual embedding from the nearest anchor's
+  shifted solution triple — same padded LP shape, so no repacking — and
+  converge in a fraction of the cold iteration budget.  Results stay
+  verified against the paper constraint sets and simplex-certified on
+  fallback, exactly like cold solves.
+
+The free functions in :mod:`repro.core.dlt` remain as thin shims over a
+shared default engine (:func:`get_default_engine`), so repeat calls
+share one compiled-shape cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+from typing import Iterable, Iterator, Optional, Sequence, Tuple, Union
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batched import (
+    COMPILE_CACHE_SIZE,
+    DEFAULT_M_BUCKET_EDGES,
+    DEFAULT_NOFRONTEND_FORMULATION,
+    STATUS_INFEASIBLE,
+    STATUS_MAXITER,
+    STATUS_OPTIMAL,
+    BatchedSolution,
+    FamilyLP,
+    _group_lanes,
+    _hsde_ipm_structured,
+    _hsde_ipm_structured_warm,
+    build_family_lp,
+)
+from .cost import ProcessorSweep
+from .formulations import BatchFields, Formulation, get_formulation
+from .single_source import single_source_intervals
+from .solve import solve as _scalar_solve
+from .speedup import SpeedupGrid
+from .stacking import BatchedSystemSpec
+from .types import InfeasibleError, Schedule, SystemSpec
+
+__all__ = [
+    "EngineConfig",
+    "EngineStats",
+    "DLTEngine",
+    "get_default_engine",
+]
+
+_ENGINES = ("batched", "scalar")
+_BUCKETS = ("size", "none")
+_SOLVERS = ("auto", "simplex", "highs")
+
+FormulationLike = Union[Formulation, str, None]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every knob of the DLT solving session, validated in one place.
+
+    Attributes:
+      formulation: registry name (or :class:`Formulation`) pinned for the
+        whole session; ``None`` keeps the classic per-call mapping
+        (``frontend=True`` -> Sec 3.1, ``False`` -> the column-reduced
+        Sec 3.2 program on batched paths, the full Sec 3.2 on scalar).
+      solver: scalar LP backend — ``"auto"`` (HiGHS when scipy is
+        present, else the self-contained simplex), ``"simplex"`` or
+        ``"highs"``.  Pinning a solver requires ``engine="scalar"``: the
+        batched interior-point path does not run it, and silently
+        downgrading (the pre-session behavior) hid that.
+      engine: ``"batched"`` solves families as jitted vmapped
+        interior-point batches; ``"scalar"`` keeps the one-LP-at-a-time
+        loop on every path.
+      verify: re-check solutions against the paper constraint sets.
+      oracle_fallback: re-solve uncertified lanes with the scalar simplex
+        (recorded in ``BatchedSolution.fallback_mask`` — never silent).
+      max_iter / tol: interior-point iteration budget and residual
+        tolerance.
+      chunk_size: scenarios per device batch — also the chunk length of
+        :meth:`DLTEngine.map`.
+      bucket / m_bucket_edges: size-bucketed batching of ragged families.
+      warm_start: warm-start parametric families (``sweep`` / ``grid``):
+        cold-solve every ``warm_stride``-th lane, restart the rest from
+        the nearest anchor's shifted solution triple.
+      warm_stride: anchor spacing (>= 2) of the warm two-phase plan.
+      warm_shift: relative interior shift added to an anchor solution
+        before it seeds a warm start (keeps the restart strictly
+        interior and centered).
+      compile_cache_size: entries kept in the engine's AOT-compiled
+        family-shape LRU.
+      compile_cache_dir: when set, also persist compiled executables via
+        the JAX compilation cache in this directory so later *processes*
+        skip XLA compilation of known shapes.  (JAX scopes this setting
+        per process, not per engine.)
+    """
+
+    formulation: FormulationLike = None
+    solver: str = "auto"
+    engine: str = "batched"
+    verify: bool = True
+    oracle_fallback: bool = True
+    max_iter: int = 25
+    tol: float = 1e-8
+    chunk_size: int = 256
+    bucket: str = "size"
+    m_bucket_edges: Tuple[int, ...] = DEFAULT_M_BUCKET_EDGES
+    warm_start: bool = True
+    warm_stride: int = 4
+    warm_shift: float = 1e-2
+    compile_cache_size: int = COMPILE_CACHE_SIZE
+    compile_cache_dir: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "m_bucket_edges",
+                           tuple(int(e) for e in self.m_bucket_edges))
+        if self.engine not in _ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}: use one of {_ENGINES}")
+        if self.solver not in _SOLVERS:
+            raise ValueError(
+                f"unknown solver {self.solver!r}: use one of {_SOLVERS}")
+        if self.bucket not in _BUCKETS:
+            raise ValueError(
+                f"unknown bucket mode {self.bucket!r}: use one of {_BUCKETS}")
+        if self.solver != "auto" and self.engine == "batched":
+            raise ValueError(
+                f"solver={self.solver!r} pins the scalar LP backend, which "
+                "the batched interior-point engine never runs — pass "
+                "engine='scalar' to honor the pinned solver, or leave "
+                "solver='auto'")
+        if self.formulation is not None:
+            try:
+                get_formulation(self.formulation)
+            except KeyError as e:
+                raise ValueError(str(e)) from None
+        if self.max_iter < 1:
+            raise ValueError(f"max_iter must be >= 1, got {self.max_iter}")
+        if not (0.0 < self.tol < 1.0):
+            raise ValueError(f"tol must be in (0, 1), got {self.tol}")
+        if self.chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {self.chunk_size}")
+        edges = self.m_bucket_edges
+        if not edges or any(e < 1 for e in edges) or list(edges) != sorted(set(edges)):
+            raise ValueError(
+                "m_bucket_edges must be a non-empty strictly increasing "
+                f"sequence of positive ints, got {edges}")
+        if self.warm_stride < 2:
+            raise ValueError(
+                f"warm_stride must be >= 2 (1 makes every lane a cold "
+                f"anchor), got {self.warm_stride}")
+        if not (0.0 < self.warm_shift <= 1.0):
+            raise ValueError(
+                f"warm_shift must be in (0, 1], got {self.warm_shift}")
+        if self.compile_cache_size < 1:
+            raise ValueError(
+                f"compile_cache_size must be >= 1, got {self.compile_cache_size}")
+
+    def replace(self, **overrides) -> "EngineConfig":
+        """A copy with ``overrides`` applied (re-validated)."""
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """Cumulative session counters (snapshot — see ``DLTEngine.stats``)."""
+
+    batches: int = 0            # solve_batch calls completed
+    lanes: int = 0              # scenarios solved through the IPM
+    cold_lanes: int = 0         # lanes started from the cold HSDE point
+    warm_lanes: int = 0         # lanes restarted from an anchor solution
+    cold_iterations: int = 0    # IPM iterations spent on cold lanes
+    warm_iterations: int = 0    # IPM iterations spent on warm lanes
+    fallback_lanes: int = 0     # lanes re-solved by the simplex oracle
+    cache_hits: int = 0         # compiled-executable LRU hits
+    cache_misses: int = 0       # compiled-executable LRU misses (compiles)
+
+    @property
+    def ipm_iterations(self) -> int:
+        """Total interior-point iterations across all lanes."""
+        return self.cold_iterations + self.warm_iterations
+
+
+class _EngineState:
+    """Mutable session state shared by an engine and its configured() views."""
+
+    def __init__(self):
+        from collections import OrderedDict
+
+        self.compiled: "OrderedDict[tuple, object]" = OrderedDict()
+        self.counters = dict(
+            batches=0, lanes=0, cold_lanes=0, warm_lanes=0,
+            cold_iterations=0, warm_iterations=0, fallback_lanes=0,
+            cache_hits=0, cache_misses=0)
+
+    def bump(self, **by):
+        for k, v in by.items():
+            self.counters[k] += int(v)
+
+
+def _enable_persistent_cache(cache_dir: str) -> None:
+    """Point the process-wide JAX compilation cache at ``cache_dir``."""
+    os.makedirs(cache_dir, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    for opt, val in (("jax_persistent_cache_min_compile_time_secs", 0.0),
+                     ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(opt, val)
+        except AttributeError:  # option not present in this jax version
+            pass
+
+
+def _family_take(fam: FamilyLP, pos: np.ndarray) -> FamilyLP:
+    """Lanes ``pos`` of a padded family (shape unchanged)."""
+    return FamilyLP(c=fam.c[pos], F=fam.F[pos], b=fam.b[pos],
+                    art=fam.art[pos], dims=fam.dims)
+
+
+#: Processor-count bucket edges used while warm-starting a parametric
+#: family.  Coarser (power-of-two) than the throughput ladder on purpose:
+#: an anchor can only seed lanes that share its padded LP shape, so warm
+#: sweeps trade a bounded extra padding step (<= 2x, same bound as the
+#: po2 lane padding) for buckets large enough that most lanes start next
+#: to a solved neighbor instead of at the cold HSDE point.
+WARM_M_BUCKET_EDGES = tuple(2 ** k for k in range(11))  # 1, 2, 4, ..., 1024
+
+
+class DLTEngine:
+    """A configured DLT solving session.
+
+    Construct once, then run the whole workload surface through it::
+
+        eng = DLTEngine(formulation="nofrontend_reduced", max_iter=30)
+        eng.solve(spec)                    # one Schedule
+        eng.solve_batch(specs)             # BatchedSolution (ragged ok)
+        eng.sweep(spec, m_max=32)          # Sec 6 prefix family (warm)
+        eng.grid(spec, (1, 2, 3), (4, 8)) # Sec 5 speedup surface (warm)
+        eng.advisor(spec)                  # Sec 6 budget planners
+        for sol in eng.map(spec_stream):   # serving-style chunked stream
+            ...
+
+    The engine owns the AOT-compiled family-shape LRU (shared with every
+    ``configured()`` view), counts hits/misses/fallbacks/iterations in
+    ``stats``, and — with ``compile_cache_dir`` set — persists compiled
+    executables across processes via the JAX compilation cache.
+    """
+
+    def __init__(self, config: Optional[EngineConfig] = None, **overrides):
+        if config is None:
+            config = EngineConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        self.config = config
+        self._state = _EngineState()
+        if config.compile_cache_dir is not None:
+            _enable_persistent_cache(config.compile_cache_dir)
+
+    # ---- configuration ---------------------------------------------------
+
+    def configured(self, **overrides) -> "DLTEngine":
+        """A view of this session with config overrides applied.
+
+        The view shares the compiled-executable cache and the stats
+        ledger with its parent, so shim calls with per-call knobs still
+        amortize compilation across the process.
+        """
+        if not overrides:
+            return self
+        eng = object.__new__(DLTEngine)
+        eng.config = self.config.replace(**overrides)
+        eng._state = self._state
+        if (eng.config.compile_cache_dir is not None
+                and eng.config.compile_cache_dir != self.config.compile_cache_dir):
+            _enable_persistent_cache(eng.config.compile_cache_dir)
+        return eng
+
+    def _formulation(self, frontend: bool,
+                     formulation: FormulationLike) -> Formulation:
+        which = formulation if formulation is not None else self.config.formulation
+        if which is None:
+            which = True if frontend else DEFAULT_NOFRONTEND_FORMULATION
+        return get_formulation(which)
+
+    # ---- stats + compiled-cache introspection ----------------------------
+
+    @property
+    def stats(self) -> EngineStats:
+        return EngineStats(**self._state.counters)
+
+    def reset_stats(self) -> None:
+        """Zero the counters (the compiled cache is kept)."""
+        for k in self._state.counters:
+            self._state.counters[k] = 0
+
+    def compile_cache_info(self) -> dict:
+        """Compiled-family cache state: LRU shapes + hit/miss/persist."""
+        cfg, st = self.config, self._state
+        info = {
+            "size": len(st.compiled),
+            "maxsize": cfg.compile_cache_size,
+            "keys": list(st.compiled),
+            "hits": st.counters["cache_hits"],
+            "misses": st.counters["cache_misses"],
+            "persist_dir": cfg.compile_cache_dir,
+            "persist_entries": None,
+        }
+        if cfg.compile_cache_dir and os.path.isdir(cfg.compile_cache_dir):
+            info["persist_entries"] = sum(
+                1 for _ in os.scandir(cfg.compile_cache_dir))
+        return info
+
+    # ---- compiled executables -------------------------------------------
+
+    def _structured_executable(self, B: int, mrows: int, nv: int, n_eq: int,
+                               warm: bool):
+        """AOT-compiled structured kernel for one family shape (LRU'd)."""
+        cfg, st = self.config, self._state
+        key = (B, mrows, nv, n_eq, int(cfg.max_iter), float(cfg.tol), warm)
+        exe = st.compiled.get(key)
+        if exe is not None:
+            st.compiled.move_to_end(key)
+            st.bump(cache_hits=1)
+            return exe
+        st.bump(cache_misses=1)
+        kern = _hsde_ipm_structured_warm if warm else _hsde_ipm_structured
+        fn = jax.jit(jax.vmap(functools.partial(
+            kern, max_iter=int(cfg.max_iter), tol=float(cfg.tol))))
+        f8 = np.dtype(np.float64)
+        sds = jax.ShapeDtypeStruct
+        n_std = nv + mrows
+        args = [sds((B, n_std), f8), sds((B, mrows, nv), f8),
+                sds((B, mrows), f8), sds((B, n_eq), f8)]
+        if warm:
+            args += [sds((B, n_std), f8), sds((B, mrows), f8),
+                     sds((B, n_std), f8)]
+        exe = fn.lower(*args).compile()
+        st.compiled[key] = exe
+        while len(st.compiled) > cfg.compile_cache_size:
+            st.compiled.popitem(last=False)
+        return exe
+
+    def _solve_family(self, fam: FamilyLP, init=None, want_state: bool = False):
+        """Run the structured kernel over a family, chunked along the batch.
+
+        Lane counts are padded to the next power of two (repeating the
+        last lane) so the compiled-shape cache sees a bounded set of
+        batch sizes; padding lanes are dropped before returning.  vmap
+        lanes are independent, so real lanes' results are unaffected.
+        ``init`` (x0, y0, s0 stacks) switches to the warm kernel; with
+        ``want_state`` the tau-scaled (x, y, s) solution triples are
+        returned for seeding further warm starts.
+        """
+        cfg = self.config
+        B = fam.c.shape[0]
+        mrows, nv = fam.F.shape[1], fam.F.shape[2]
+        n_eq = fam.art.shape[1]
+        warm = init is not None
+        xs, sts, nits, ys, ss = [], [], [], [], []
+        with jax.experimental.enable_x64():
+            for lo in range(0, B, cfg.chunk_size):
+                hi = min(lo + cfg.chunk_size, B)
+                Bk = hi - lo
+                Bp = 1 << (Bk - 1).bit_length()
+                parts = [fam.c[lo:hi], fam.F[lo:hi], fam.b[lo:hi],
+                         fam.art[lo:hi]]
+                if warm:
+                    parts += [a[lo:hi] for a in init]
+                if Bp != Bk:
+                    parts = [np.concatenate(
+                        [p, np.repeat(p[-1:], Bp - Bk, axis=0)])
+                        for p in parts]
+                exe = self._structured_executable(Bp, mrows, nv, n_eq, warm)
+                x, _, st, ni, y, s = exe(
+                    *[jnp.asarray(p, jnp.float64) for p in parts])
+                xs.append(np.asarray(x)[:Bk])
+                sts.append(np.asarray(st)[:Bk])
+                nits.append(np.asarray(ni)[:Bk])
+                if want_state:
+                    ys.append(np.asarray(y)[:Bk])
+                    ss.append(np.asarray(s)[:Bk])
+        out = (np.concatenate(xs), np.concatenate(sts), np.concatenate(nits))
+        if want_state:
+            return out + (np.concatenate(ys), np.concatenate(ss))
+        return out
+
+    def _warm_init(self, fm: Formulation, sub: BatchedSystemSpec,
+                   fam: FamilyLP, rest: np.ndarray, anchor: np.ndarray,
+                   src: np.ndarray, xa: np.ndarray, ya: np.ndarray,
+                   sta: np.ndarray):
+        """Build ``(x0, y0, s0)`` seeding lanes ``rest`` from their anchors.
+
+        A neighboring prefix's *formulation fields* are the part of the
+        solution that transfers (beta moves by a few percent, the dual
+        ``y`` barely at all); raw LP vectors do not — newly activated
+        interval columns jump from ~0 to the chain position and copied
+        slacks break primal feasibility.  So the seed is completed, not
+        copied:
+
+        * beta from the anchor, cleared outside the lane's real cells and
+          renormalized to the lane's Eq 6/14 mass;
+        * transmission intervals on activated cells filled along the
+          minimal chain ``TF_{i,j} = max(TF_{i,j-1}, TF_{i-1,j}) +
+          G_i beta_{i,j}`` (cells the anchor also had keep its values);
+        * slack/artificial coordinates recomputed from the lane's own
+          rows, so the seed starts near-feasible for the lane's program;
+        * dual: the anchor's ``y`` with ``s = c - A'y`` re-derived.
+
+        Both sides are floored ``warm_shift`` (relative) into the
+        interior.  Lanes whose anchor was not certified optimal are
+        seeded with the cold HSDE point instead.
+        """
+        cfg = self.config
+        nv, n_ub = fam.dims.nv, fam.dims.n_ub
+        nR = rest.size
+        sub_a = sub.take(anchor)
+        fields = fm.unpack_batch(sub_a, xa)
+        bsr = sub.take(rest)
+        cell = bsr.cell_mask
+        cell_a = sub_a.cell_mask[src]
+
+        beta = fields.beta[src].copy()
+        beta[~cell] = 0.0
+        tot = beta.sum(axis=(1, 2))
+        beta *= np.where(tot > 0, bsr.J / np.where(tot > 0, tot, 1.0),
+                         1.0)[:, None, None]
+        TS = TF = None
+        if fm.has_intervals:
+            N, M = bsr.n_max, bsr.m_max
+            TF = fields.TF[src].copy()
+            activated = cell & ~cell_a
+            for j in range(M):
+                prev_j = TF[:, :, j - 1] if j else np.zeros((nR, N))
+                for i in range(N):
+                    prev_i = TF[:, i - 1, j] if i else np.full(nR, -np.inf)
+                    cand = (np.maximum(prev_j[:, i], prev_i)
+                            + bsr.G[:, i] * beta[:, i, j])
+                    TF[:, i, j] = np.where(activated[:, i, j],
+                                           np.maximum(cand, 0.0),
+                                           TF[:, i, j])
+            TF[~cell] = 0.0
+            TS = np.clip(TF - beta * bsr.G[:, :, None], 0.0, None)
+            TS[~cell] = 0.0
+        v = fm.pack_batch(bsr, BatchFields(
+            beta=beta, finish=fields.finish[src].copy(), TS=TS, TF=TF))
+
+        Fr, br = fam.F[rest], fam.b[rest]
+        cr, artr = fam.c[rest], fam.art[rest]
+        eps_x = cfg.warm_shift * (1.0 + np.abs(v).max(axis=1, keepdims=True))
+        v = np.maximum(v, eps_x)
+        Fv = np.einsum("brv,bv->br", Fr, v)
+        sl = np.clip(br[:, :n_ub] - Fv[:, :n_ub], eps_x, None)
+        ar = np.where(artr > 0,
+                      np.clip(br[:, n_ub:] - Fv[:, n_ub:], eps_x, None),
+                      eps_x)
+        x0 = np.concatenate([v, sl, ar], axis=1)
+        y0 = ya[src].copy()
+        FTy = np.einsum("brv,br->bv", Fr, y0)
+        s_cat = np.concatenate(
+            [cr[:, :nv] - FTy,
+             cr[:, nv: nv + n_ub] - y0[:, :n_ub],
+             cr[:, nv + n_ub:] - artr * y0[:, n_ub:]], axis=1)
+        eps_s = cfg.warm_shift * (1.0 + np.abs(s_cat).max(axis=1,
+                                                          keepdims=True))
+        s0 = np.maximum(s_cat, eps_s)
+        bad = sta[src] != STATUS_OPTIMAL    # junk anchors seed nothing
+        x0[bad], y0[bad], s0[bad] = 1.0, 0.0, 1.0
+        return x0, y0, s0
+
+    def _solve_group(self, fm: Formulation, sub: BatchedSystemSpec,
+                     fam: FamilyLP, warm: bool):
+        """Solve one padded family, warm two-phase when asked & worthwhile.
+
+        Warm plan: lanes are already ordered by processor count, so every
+        ``warm_stride``-th lane is solved cold (anchor pass) and each
+        remaining lane restarts the HSDE from a completed seed built off
+        its nearest anchor's solution (see :meth:`_warm_init`).  The
+        padded LP shape is shared group-wide, so seeds transfer with no
+        reshaping.
+        """
+        st8 = self._state
+        B = fam.c.shape[0]
+        if not warm or B <= self.config.warm_stride:
+            x, st, ni = self._solve_family(fam)
+            st8.bump(lanes=B, cold_lanes=B, cold_iterations=ni.sum())
+            return x, st, ni
+        anchor = np.arange(0, B, self.config.warm_stride)
+        rest = np.setdiff1d(np.arange(B), anchor)
+        xa, sta, nia, ya, sa = self._solve_family(
+            _family_take(fam, anchor), want_state=True)
+        # nearest anchor (either side) seeds each remaining lane
+        hi = np.clip(np.searchsorted(anchor, rest), 0, anchor.size - 1)
+        lo = np.clip(hi - 1, 0, anchor.size - 1)
+        src = np.where(np.abs(anchor[hi] - rest) < np.abs(rest - anchor[lo]),
+                       hi, lo)
+        init = self._warm_init(fm, sub, fam, rest, anchor, src, xa, ya, sta)
+        xr, str_, nir = self._solve_family(_family_take(fam, rest), init=init)
+        x = np.empty_like(fam.c)
+        st = np.empty(B, dtype=sta.dtype)
+        ni = np.empty(B, dtype=nia.dtype)
+        x[anchor], st[anchor], ni[anchor] = xa, sta, nia
+        x[rest], st[rest], ni[rest] = xr, str_, nir
+        st8.bump(lanes=B, cold_lanes=anchor.size, warm_lanes=rest.size,
+                 cold_iterations=nia.sum(), warm_iterations=nir.sum())
+        return x, st, ni
+
+    def _solve_batch_scalar(self, bspec: BatchedSystemSpec, frontend: bool,
+                            formulation: FormulationLike) -> BatchedSolution:
+        """The scalar engine's batch path: one LP at a time, config solver.
+
+        Follows the classic scalar mapping (``formulation=None`` +
+        ``frontend=False`` uses the full Sec 3.2 program or the Sec 2
+        closed form), so ``engine="scalar"`` batches match a loop of
+        ``solve()`` calls exactly.
+        """
+        which = (formulation if formulation is not None
+                 else self.config.formulation)
+        fm = get_formulation(which if which is not None else frontend)
+        frontend = fm.frontend
+        B, Nmax, Mmax = bspec.batch, bspec.n_max, bspec.m_max
+        beta = np.zeros((B, Nmax, Mmax))
+        finish = np.full(B, np.nan)
+        TS = TF = None
+        if fm.has_intervals:
+            TS = np.zeros((B, Nmax, Mmax))
+            TF = np.zeros((B, Nmax, Mmax))
+        status = np.full(B, STATUS_INFEASIBLE, dtype=np.int64)
+        for k in range(B):
+            try:
+                sched = self.solve(bspec.scenario(k), frontend=frontend,
+                                   presorted=True, formulation=which)
+            except InfeasibleError:
+                continue
+            sp = sched.spec
+            n, m = sp.num_sources, sp.num_processors
+            beta[k, :n, :m] = sched.beta
+            finish[k] = sched.finish_time
+            if TS is not None:
+                if sched.TS is not None:
+                    TS[k, :n, :m] = sched.TS
+                    TF[k, :n, :m] = sched.TF
+                else:
+                    # Sec 2 closed form (single source): back-to-back chain
+                    TS[k, 0, :m], TF[k, 0, :m] = single_source_intervals(
+                        sp.R[0], sp.G[0], sched.beta[0])
+            status[k] = STATUS_OPTIMAL
+        self._state.bump(batches=1)
+        return BatchedSolution(
+            spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
+            status=status, iterations=np.zeros(B, dtype=np.int64),
+            TS=TS, TF=TF, formulation=fm.name,
+            fallback_mask=np.zeros(B, dtype=bool),
+        )
+
+    # ---- the workload surface -------------------------------------------
+
+    def solve(self, spec: SystemSpec, frontend: bool = True, *,
+              formulation: FormulationLike = None,
+              presorted: bool = False) -> Schedule:
+        """One schedule through the scalar path (config solver/verify)."""
+        cfg = self.config
+        return _scalar_solve(
+            spec, frontend=frontend, solver=cfg.solver, verify=cfg.verify,
+            presorted=presorted,
+            formulation=formulation if formulation is not None
+            else cfg.formulation)
+
+    def solve_batch(self, specs, frontend: bool = True,
+                    formulation: FormulationLike = None, *,
+                    presorted: bool = False,
+                    warm: bool = False) -> BatchedSolution:
+        """Solve a whole family of DLT programs in one session call.
+
+        Accepts a ragged list of :class:`SystemSpec` or a prebuilt
+        :class:`BatchedSystemSpec`.  ``warm=True`` applies the two-phase
+        anchor plan within each size bucket (lanes are re-ordered by
+        processor count internally) — meant for parametric families
+        whose neighbors share structure; ``sweep``/``grid`` pass the
+        config's ``warm_start`` automatically.
+        """
+        cfg = self.config
+        fm = self._formulation(frontend, formulation)
+        bspec = (specs if isinstance(specs, BatchedSystemSpec)
+                 else BatchedSystemSpec.from_specs(specs, presorted=presorted))
+        if cfg.engine == "scalar":
+            # honor the config contract: the scalar engine keeps the
+            # one-LP-at-a-time loop (and its pinned solver) on every path
+            return self._solve_batch_scalar(bspec, frontend, formulation)
+        frontend = fm.frontend
+        B, Nmax, Mmax = bspec.batch, bspec.n_max, bspec.m_max
+
+        beta = np.zeros((B, Nmax, Mmax))
+        finish = np.full(B, np.nan)
+        TS = TF = None
+        if fm.has_intervals:
+            TS = np.zeros((B, Nmax, Mmax))
+            TF = np.zeros((B, Nmax, Mmax))
+        status = np.full(B, STATUS_MAXITER, dtype=np.int64)
+        iters = np.zeros(B, dtype=np.int64)
+
+        m_edges = WARM_M_BUCKET_EDGES if warm else cfg.m_bucket_edges
+        for (nb, mb), idx in _group_lanes(
+                bspec, cfg.bucket, m_edges).items():
+            # never pad past the group's true max — a group's padded shape
+            # then depends only on its own lanes, so solving it inside a
+            # ragged batch or alone is the same computation
+            mb = min(mb, int(bspec.n_procs[idx].max()))
+            if warm:  # anchors seed neighbors: order the family by size
+                idx = idx[np.argsort(bspec.n_procs[idx], kind="stable")]
+            sub = bspec.take(idx, n_pad=nb, m_pad=mb)
+            fam = build_family_lp(sub, fm)
+            x, st, ni = self._solve_group(fm, sub, fam, warm)
+            fields = fm.unpack_batch(sub, x)
+            sl = np.ix_(idx, np.arange(nb), np.arange(mb))
+            beta[sl] = fields.beta
+            finish[idx] = fields.finish
+            if fm.has_intervals:
+                TS[sl] = fields.TS
+                TF[sl] = fields.TF
+            status[idx] = st
+            iters[idx] = ni
+
+        # exact zeros on padding (IPM leaves ~tol-level dust on masked vars)
+        cell = bspec.cell_mask
+        beta[~cell] = 0.0
+        if TS is not None:
+            TS[~cell] = 0.0
+            TF[~cell] = 0.0
+
+        ok = status == STATUS_OPTIMAL
+        if cfg.verify:
+            good = fm.verify_batch(
+                bspec, BatchFields(beta=beta, finish=finish, TS=TS, TF=TF))
+            demoted = ok & ~good
+            status[demoted] = STATUS_MAXITER
+            ok &= good
+
+        fallback_mask = ~ok
+        if cfg.oracle_fallback:
+            # every uncertified lane — including IPM infeasibility verdicts,
+            # which the simplex either confirms or overturns with a solution
+            for k in np.flatnonzero(~ok):
+                try:
+                    sched = _scalar_solve(
+                        bspec.scenario(k), frontend=frontend,
+                        solver="simplex", presorted=True)
+                except InfeasibleError:
+                    status[k] = STATUS_INFEASIBLE
+                    continue
+                sp = sched.spec
+                n, m = sp.num_sources, sp.num_processors
+                beta[k] = 0.0
+                beta[k, :n, :m] = sched.beta
+                finish[k] = sched.finish_time
+                if TS is not None:
+                    TS[k] = 0.0
+                    TF[k] = 0.0
+                    if sched.TS is not None:
+                        TS[k, :n, :m] = sched.TS
+                        TF[k, :n, :m] = sched.TF
+                    else:
+                        # Sec 2 closed form (single source): back-to-back
+                        TS[k, 0, :m], TF[k, 0, :m] = single_source_intervals(
+                            sp.R[0], sp.G[0], sched.beta[0])
+                status[k] = STATUS_OPTIMAL
+
+        infeasible = status == STATUS_INFEASIBLE
+        finish[infeasible] = np.nan
+        beta[infeasible] = 0.0      # interior-point ray junk, not a schedule
+        if TS is not None:
+            TS[infeasible] = 0.0
+            TF[infeasible] = 0.0
+        # the counter records lanes the oracle actually re-solved; with the
+        # fallback disabled the mask still marks them, but no oracle ran
+        self._state.bump(batches=1,
+                         fallback_lanes=(fallback_mask.sum()
+                                         if cfg.oracle_fallback else 0))
+        return BatchedSolution(
+            spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
+            status=status, iterations=iters, TS=TS, TF=TF,
+            formulation=fm.name, fallback_mask=fallback_mask,
+        )
+
+    def sweep(self, spec: SystemSpec, frontend: bool = True,
+              m_max: Optional[int] = None, *,
+              formulation: FormulationLike = None) -> ProcessorSweep:
+        """Sec 6 prefix family: T_f(m) and Cost(m) for m = 1..M.
+
+        On the batched engine the whole family is one (warm-started, when
+        ``warm_start``) session call; infeasible prefixes are dropped
+        from the sweep exactly like the scalar loop drops them.
+        """
+        cfg = self.config
+        cspec = spec.canonical()[0]
+        M = (cspec.num_processors if m_max is None
+             else min(m_max, cspec.num_processors))
+        if cfg.engine == "scalar":
+            ms, tfs, costs = [], [], []
+            for m in range(1, M + 1):
+                sub = cspec.subset_processors(m)
+                try:
+                    sched = self.solve(sub, frontend=frontend,
+                                       presorted=True,
+                                       formulation=formulation)
+                except InfeasibleError:
+                    continue
+                ms.append(m)
+                tfs.append(sched.finish_time)
+                costs.append(sched.monetary_cost()
+                             if cspec.C is not None else np.nan)
+            return ProcessorSweep(np.asarray(ms), np.asarray(tfs),
+                                  np.asarray(costs))
+        subs = [cspec.subset_processors(m) for m in range(1, M + 1)]
+        sol = self.solve_batch(subs, frontend=frontend,
+                               formulation=formulation, presorted=True,
+                               warm=cfg.warm_start)
+        keep = sol.status == STATUS_OPTIMAL
+        ms = np.flatnonzero(keep) + 1
+        costs = (sol.monetary_cost()[keep] if cspec.C is not None
+                 else np.full(int(keep.sum()), np.nan))
+        return ProcessorSweep(ms, sol.finish_time[keep], costs)
+
+    def grid(self, spec: SystemSpec, source_counts: Sequence[int],
+             processor_counts: Sequence[int], frontend: bool = False, *,
+             formulation: FormulationLike = None) -> SpeedupGrid:
+        """Sec 5 Eq 16 speedup surface over (sources x processors).
+
+        Each source-count row is one session call over the processor
+        prefixes (warm-started when ``warm_start``); any infeasible grid
+        cell raises :class:`InfeasibleError` on either engine.
+        """
+        cfg = self.config
+        cspec = spec.canonical()[0]
+        P, Q = len(source_counts), len(processor_counts)
+        tf = np.full((P, Q), np.nan)
+        if cfg.engine == "scalar":
+            for a, p in enumerate(source_counts):
+                sub_s = cspec.subset_sources(p)
+                for b_, n in enumerate(processor_counts):
+                    sched = self.solve(sub_s.subset_processors(n),
+                                       frontend=frontend, presorted=True,
+                                       formulation=formulation)
+                    tf[a, b_] = sched.finish_time
+        else:
+            # a grid row is one parametric family (shared source count):
+            # solve it as a single padded shape so warm anchors can seed
+            # every other cell of the row
+            eng = (self.configured(bucket="none") if cfg.warm_start
+                   else self)
+            for a, p in enumerate(source_counts):
+                sub_s = cspec.subset_sources(p)
+                subs = [sub_s.subset_processors(n) for n in processor_counts]
+                sol = eng.solve_batch(subs, frontend=frontend,
+                                      formulation=formulation,
+                                      presorted=True, warm=cfg.warm_start)
+                bad = np.flatnonzero(sol.status == STATUS_INFEASIBLE)
+                if bad.size:  # match the scalar engine's behavior
+                    raise InfeasibleError(
+                        f"grid cell (sources={p}, processors="
+                        f"{processor_counts[int(bad[0])]}) infeasible")
+                tf[a, :] = sol.finish_time
+        base = tf[0:1, :]  # row of the smallest source count (paper: 1)
+        return SpeedupGrid(
+            sources=np.asarray(source_counts),
+            processors=np.asarray(processor_counts),
+            finish_time=tf,
+            speedup=base / tf,
+        )
+
+    def advisor(self, spec: SystemSpec, frontend: bool = True,
+                m_max: Optional[int] = None, *,
+                formulation: FormulationLike = None):
+        """Sec 6 budget planners over this engine's processor sweep."""
+        from ..advisor import ClusterAdvisor  # local: avoid import cycle
+
+        return ClusterAdvisor(sweep=self.sweep(
+            spec, frontend=frontend, m_max=m_max, formulation=formulation))
+
+    def map(self, specs: Iterable[SystemSpec], frontend: bool = True, *,
+            formulation: FormulationLike = None, presorted: bool = False,
+            strict: bool = True) -> Iterator[BatchedSolution]:
+        """Stream serving-style traffic: chunk, bucket, solve, yield.
+
+        Pulls ``chunk_size`` specs at a time from ``specs`` (any
+        iterable, including generators), solves each chunk as one
+        bucketed batch, and yields its :class:`BatchedSolution`.  With
+        ``strict=True`` (default) a lane without a certified schedule
+        raises through ``BatchedSolution.schedule(k, strict=True)`` —
+        naming the lane's status and fallback state — instead of
+        surfacing as a silent ``None`` downstream.
+        """
+        it = iter(specs)
+        while True:
+            chunk = list(itertools.islice(it, self.config.chunk_size))
+            if not chunk:
+                return
+            sol = self.solve_batch(chunk, frontend=frontend,
+                                   formulation=formulation,
+                                   presorted=presorted)
+            if strict:
+                for k in np.flatnonzero(sol.status != STATUS_OPTIMAL):
+                    sol.schedule(int(k), strict=True)
+            yield sol
+
+
+_DEFAULT_ENGINE: Optional[DLTEngine] = None
+
+
+def get_default_engine() -> DLTEngine:
+    """The process-wide default session the free-function shims run on.
+
+    Created lazily with a default :class:`EngineConfig`; shims apply
+    their keyword knobs through :meth:`DLTEngine.configured`, so every
+    call still shares one compiled-shape cache and stats ledger.
+    """
+    global _DEFAULT_ENGINE
+    if _DEFAULT_ENGINE is None:
+        _DEFAULT_ENGINE = DLTEngine()
+    return _DEFAULT_ENGINE

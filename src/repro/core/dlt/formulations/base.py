@@ -108,6 +108,17 @@ class Formulation:
         """Solution vectors (B, >=nv) -> named fields (padding NOT zeroed)."""
         raise NotImplementedError
 
+    def pack_batch(self, bs: BatchedSystemSpec,
+                   fields: BatchFields) -> np.ndarray:
+        """Named fields -> LP variable vectors ``(B, nv)``.
+
+        Inverse of :meth:`unpack_batch` on real cells (padded cells may
+        land anywhere — callers mask them).  The engine uses this to turn
+        a neighboring lane's solution into a warm-start primal for the
+        interior-point kernel.
+        """
+        raise NotImplementedError
+
     def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
                           tol: float) -> List[Tuple[str, np.ndarray]]:
         """The paper constraint set as ``[(label, (B,) ok-mask), ...]``.

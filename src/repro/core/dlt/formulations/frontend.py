@@ -117,6 +117,12 @@ class FrontendFormulation(Formulation):
             finish=x[:, nm].copy(),
         )
 
+    def pack_batch(self, bs: BatchedSystemSpec,
+                   fields: BatchFields) -> np.ndarray:
+        return np.concatenate(
+            [fields.beta.reshape(bs.batch, -1), fields.finish[:, None]],
+            axis=1)
+
     def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
                           tol: float):
         """Eqs 3-6, vectorized over the padded batch (padded cells zero)."""

@@ -160,6 +160,13 @@ class NoFrontendFormulation(Formulation):
             finish=x[:, 3 * nm].copy(),
         )
 
+    def pack_batch(self, bs: BatchedSystemSpec,
+                   fields: BatchFields) -> np.ndarray:
+        B = bs.batch
+        return np.concatenate(
+            [fields.beta.reshape(B, -1), fields.TS.reshape(B, -1),
+             fields.TF.reshape(B, -1), fields.finish[:, None]], axis=1)
+
     def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
                           tol: float):
         """Eqs 7-14, vectorized over the padded batch (padded cells zero)."""

@@ -206,6 +206,14 @@ class ReducedNoFrontendFormulation(NoFrontendFormulation):
         return BatchFields(beta=beta, TS=TS, TF=TF,
                            finish=x[:, dims.nv - 1].copy())
 
+    def pack_batch(self, bs: BatchedSystemSpec,
+                   fields: BatchFields) -> np.ndarray:
+        """Chain-basis pack: row-1 TF is implicit (beta prefix sums)."""
+        B = bs.batch
+        return np.concatenate(
+            [fields.beta.reshape(B, -1), fields.TF[:, 1:, :].reshape(B, -1),
+             fields.finish[:, None]], axis=1)
+
     # constraint_checks inherited: always the ORIGINAL Sec 3.2 Eq 7-14 set.
 
 

@@ -15,8 +15,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .solve import solve
-from .types import InfeasibleError, SystemSpec
+from .types import SystemSpec
 
 __all__ = ["SpeedupGrid", "speedup_grid"]
 
@@ -67,45 +66,16 @@ def speedup_grid(
     ``frontend=False``).  Both engines raise :class:`InfeasibleError` if
     any grid cell admits no schedule.  A pinned ``solver`` (anything but
     "auto") implies the scalar engine, which is the only path that honors
-    it.
-    """
-    if engine not in ("batched", "scalar"):
-        raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
-    if solver != "auto":
-        engine = "scalar"
-    cspec = spec.canonical()[0]
-    P, Q = len(source_counts), len(processor_counts)
-    tf = np.full((P, Q), np.nan)
-    if engine == "batched":
-        from .batched import STATUS_INFEASIBLE, batched_solve
+    it — deprecated; pass ``engine="scalar"`` explicitly.
 
-        for a, p in enumerate(source_counts):
-            sub_s = cspec.subset_sources(p)
-            subs = [sub_s.subset_processors(n) for n in processor_counts]
-            sol = batched_solve(subs, frontend=frontend,
-                                formulation=formulation, presorted=True)
-            bad = np.flatnonzero(sol.status == STATUS_INFEASIBLE)
-            if bad.size:  # match the scalar engine's behavior
-                raise InfeasibleError(
-                    f"grid cell (sources={p}, "
-                    f"processors={processor_counts[int(bad[0])]}) infeasible")
-            tf[a, :] = sol.finish_time
-    else:
-        for a, p in enumerate(source_counts):
-            sub_s = cspec.subset_sources(p)
-            for b, n in enumerate(processor_counts):
-                sched = solve(
-                    sub_s.subset_processors(n),
-                    frontend=frontend,
-                    solver=solver,
-                    presorted=True,
-                    formulation=formulation,
-                )
-                tf[a, b] = sched.finish_time
-    base = tf[0:1, :]  # row for the smallest source count (paper: 1 source)
-    return SpeedupGrid(
-        sources=np.asarray(source_counts),
-        processors=np.asarray(processor_counts),
-        finish_time=tf,
-        speedup=base / tf,
-    )
+    Compatibility shim over :meth:`repro.core.dlt.engine.DLTEngine.grid`
+    (shared default session — batched grid rows are warm-started).
+    """
+    from .cost import _coerce_solver_engine
+    from .engine import get_default_engine
+
+    solver, engine = _coerce_solver_engine(solver, engine, "speedup_grid")
+    return get_default_engine().configured(
+        solver=solver, engine=engine).grid(
+            spec, source_counts, processor_counts, frontend=frontend,
+            formulation=formulation)

@@ -110,10 +110,14 @@ class BatchedSystemSpec:
 
         ``n_pad`` / ``m_pad`` must cover every selected lane's true size;
         this is how the solver re-packs a size bucket into a tight shape.
+        An empty ``idx`` yields a valid zero-lane batch (so callers can
+        partition lanes without special-casing empty parts).
         """
-        idx = np.asarray(idx)
+        idx = np.asarray(idx, dtype=np.int64)
         n_pad = self.n_max if n_pad is None else n_pad
         m_pad = self.m_max if m_pad is None else m_pad
+        if n_pad < 1 or m_pad < 1:
+            raise ValueError(f"pad shape ({n_pad}, {m_pad}) must be >= (1, 1)")
         if np.any(self.n_sources[idx] > n_pad) or np.any(self.n_procs[idx] > m_pad):
             raise ValueError("bucket shape smaller than a selected lane")
 

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ModelConfig
-from repro.core.dlt import SystemSpec, solve
+from repro.core.dlt import SystemSpec, get_default_engine
 from repro.models import LM
 from .sampler import greedy
 
@@ -107,7 +107,10 @@ def route_requests(stats: RouterStats, num_requests: int,
         J=float(num_requests),
     )
     cspec, _, pperm = spec.canonical()
-    sched = solve(cspec, frontend=frontend, presorted=True)
+    # the shared DLT session: repeat bursts reuse its configuration (and,
+    # for batched routing sweeps, its compiled-shape cache)
+    sched = get_default_engine().solve(cspec, frontend=frontend,
+                                       presorted=True)
     load = sched.processor_load
     shares_c = np.floor(load).astype(np.int64)
     rem = num_requests - int(shares_c.sum())

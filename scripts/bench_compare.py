@@ -1,0 +1,194 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the engine bench's perf-trajectory JSON.
+
+Compares the freshly written ``BENCH_engine.json`` (see
+``benchmarks/batched_solve_bench.py`` / ``scripts/check.sh``) against the
+committed ``BENCH_baseline.json`` and fails on:
+
+* a >30% scenarios/sec regression on any shared family
+  (``--rtol`` tunes the threshold),
+* ANY increase in oracle-fallback counts (a fallback means the
+  vectorized IPM could not certify a lane — more of them is a solver
+  regression even when throughput looks fine),
+* the warm-started sweep dropping below cold scenarios/sec, or its
+  warm/cold iteration ratio regressing past the threshold,
+* the banded kernel falling behind the structured path.
+
+Raw scenarios/sec are machine-dependent (laptop vs CI runner vs core
+count), so throughput comparisons are **machine-normalized**: each
+family's baseline is rescaled by the ratio of the *reference* pass
+(scalar loop / structured sample) measured on the current machine vs
+the baseline machine.  Ratio metrics (speedups, warm/cold) compare
+directly.  Families present on only one side are reported and skipped.
+
+Rebaseline (after an intentional perf change, on a quiet machine)::
+
+    BENCH_OUT=BENCH_engine.json bash scripts/check.sh
+    python scripts/bench_compare.py --write-baseline
+
+and commit the refreshed ``BENCH_baseline.json`` — see CONTRIBUTING.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+DEFAULT_RTOL = 0.30
+
+
+class Gate:
+    """Accumulates check results and renders the verdict table."""
+
+    def __init__(self):
+        self.rows = []
+        self.failed = 0
+
+    def check(self, label, ok, detail):
+        self.rows.append(("ok " if ok else "FAIL", label, detail))
+        if not ok:
+            self.failed += 1
+
+    def skip(self, label, why):
+        self.rows.append(("-- ", label, why))
+
+    def report(self) -> int:
+        width = max((len(r[1]) for r in self.rows), default=0)
+        for mark, label, detail in self.rows:
+            print(f"  [{mark}] {label:<{width}}  {detail}")
+        verdict = "PERF GATE PASSED" if not self.failed else (
+            f"PERF GATE FAILED ({self.failed} check(s))")
+        print(verdict)
+        return 0 if not self.failed else 1
+
+
+def _norm(cur_ref, base_ref):
+    """current/baseline machine-speed factor from a reference pass."""
+    if not cur_ref or not base_ref or base_ref <= 0 or cur_ref <= 0:
+        return 1.0
+    return cur_ref / base_ref
+
+
+def _throughput(gate, label, cur, base, rtol, cur_ref=None, base_ref=None):
+    """cur >= (1 - rtol) * base, baseline rescaled to this machine."""
+    scale = _norm(cur_ref, base_ref)
+    floor = (1.0 - rtol) * base * scale
+    gate.check(
+        f"{label}: scenarios/sec", cur >= floor,
+        f"{cur:.1f} vs baseline {base:.1f} (x{scale:.2f} machine norm, "
+        f"floor {floor:.1f})")
+
+
+def _fallbacks(gate, label, cur, base):
+    gate.check(f"{label}: fallbacks", cur <= base,
+               f"{cur} vs baseline {base} (any increase fails)")
+
+
+def compare(cur: dict, base: dict, rtol: float) -> Gate:
+    gate = Gate()
+    if bool(cur.get("smoke")) != bool(base.get("smoke")):
+        gate.skip("profile", "smoke/full mismatch vs baseline — "
+                  "throughput families compared by label where shared")
+
+    base_uniform = {u["family"]: u for u in base.get("uniform") or []}
+    for u in cur.get("uniform") or []:
+        b = base_uniform.get(u["family"])
+        label = f"uniform[{u['family'].strip()}@{u['batch']}]"
+        if b is None or b.get("batch") != u.get("batch"):
+            gate.skip(label, "no matching baseline family")
+            continue
+        _throughput(gate, label, u["batched_per_s"], b["batched_per_s"],
+                    rtol, u.get("scalar_per_s"), b.get("scalar_per_s"))
+        _fallbacks(gate, label, u.get("fallbacks", 0), b.get("fallbacks", 0))
+
+    for key, ref in (("mixed", "pr1_per_s"), ("banded", "structured_per_s")):
+        c, b = cur.get(key), base.get(key)
+        if not c:
+            gate.check(key, False, "section missing from current run")
+            continue
+        if not b:
+            gate.skip(key, "no baseline section")
+            continue
+        _throughput(gate, key, c["batched_per_s"] if key == "mixed"
+                    else c["banded_per_s"],
+                    b["batched_per_s"] if key == "mixed"
+                    else b["banded_per_s"],
+                    rtol, c.get(ref), b.get(ref))
+        _fallbacks(gate, key, c.get("fallbacks", 0), b.get("fallbacks", 0))
+    c = cur.get("banded")
+    if c:
+        gate.check("banded: beats structured", c["speedup"] >= 1.0,
+                   f"speedup {c['speedup']:.1f}x")
+
+    w, bw = cur.get("warm"), base.get("warm")
+    if not w:
+        gate.check("warm", False, "section missing from current run")
+    else:
+        gate.check(
+            "warm: >= cold scenarios/sec",
+            w["warm_scen_per_s"] >= w["cold_scen_per_s"],
+            f"{w['warm_scen_per_s']:.1f} vs cold {w['cold_scen_per_s']:.1f}")
+        gate.check(
+            "warm: fewer IPM iterations than cold",
+            w["warm_iterations"] < w["cold_iterations"],
+            f"{w['warm_iterations']} vs {w['cold_iterations']}")
+        if bw and bw.get("cold_iterations"):
+            cur_ratio = w["warm_iterations"] / max(w["cold_iterations"], 1)
+            base_ratio = bw["warm_iterations"] / max(bw["cold_iterations"], 1)
+            gate.check(
+                "warm: iteration ratio vs baseline",
+                cur_ratio <= base_ratio * (1.0 + rtol),
+                f"{cur_ratio:.2f} vs baseline {base_ratio:.2f}")
+    return gate
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="exit status: 0 = gate passed, 1 = regression, 2 = bad input")
+    ap.add_argument("--current", default="BENCH_engine.json",
+                    help="freshly written bench JSON (default: %(default)s)")
+    ap.add_argument("--baseline", default="BENCH_baseline.json",
+                    help="committed baseline JSON (default: %(default)s)")
+    ap.add_argument("--rtol", type=float, default=DEFAULT_RTOL,
+                    help="allowed relative throughput regression "
+                         "(default: %(default)s)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="copy --current over --baseline and exit "
+                         "(rebaseline after an intentional perf change)")
+    args = ap.parse_args(argv)
+
+    try:
+        with open(args.current) as f:
+            cur = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {args.current}: {e}")
+        return 2
+    if args.write_baseline:
+        if not cur.get("passed", False):
+            print(f"bench_compare: refusing to rebaseline from {args.current}"
+                  " — that bench run failed its own checks (passed=false); "
+                  "get a green run first")
+            return 2
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline rebased: {args.current} -> {args.baseline}")
+        return 0
+    try:
+        with open(args.baseline) as f:
+            base = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_compare: cannot read {args.baseline}: {e} "
+              "(run with --write-baseline to create it)")
+        return 2
+    if not cur.get("passed", False):
+        print("bench_compare: current bench run itself failed its checks")
+        return 1
+    print(f"== perf gate: {args.current} vs {args.baseline} "
+          f"(rtol {args.rtol:.0%}) ==")
+    return compare(cur, base, args.rtol).report()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

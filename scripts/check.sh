@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification + fast batched-engine smoke.
+# Tier-1 verification + fast batched-engine smoke + perf-regression gate.
 #
 # Usage:  bash scripts/check.sh
 #
@@ -7,14 +7,23 @@
 #    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
 # 2. a fast batched-vs-scalar parity + throughput smoke, including a
 #    mixed-size ragged no-front-end family exercising size-bucketed
-#    batching and a warm-vs-cold Sec 6 prefix sweep
-#    (benchmarks/batched_solve_bench.py --smoke).  The smoke writes a
-#    perf-trajectory JSON (scenarios/sec, warm vs cold IPM iterations,
-#    compile-cache hit/miss counters) to $BENCH_OUT — CI uploads it as
-#    a workflow artifact so the numbers are tracked per commit.
+#    batching, a banded-vs-structured kernel pass, and a warm-vs-cold
+#    Sec 6 prefix sweep (benchmarks/batched_solve_bench.py --smoke).
+#    The smoke writes a perf-trajectory JSON (scenarios/sec, warm vs
+#    cold IPM iterations, compile-cache hit/miss counters) to
+#    $BENCH_OUT — CI uploads it as a workflow artifact so the numbers
+#    are tracked per commit.  With ENGINE_COMPILE_CACHE set, compiled
+#    executables persist in that directory across processes (CI caches
+#    it between workflow runs).
+# 3. scripts/bench_compare.py diffs $BENCH_OUT against the committed
+#    BENCH_baseline.json: >30% machine-normalized scenarios/sec
+#    regression, any fallback-count increase, or a warm sweep slower
+#    than cold fails the build.  Skip with PERF_GATE=0; rebaseline with
+#    `python scripts/bench_compare.py --write-baseline` (CONTRIBUTING.md).
 #
 # CI (.github/workflows/check.yml) runs this script on a bare profile
-# (numpy+jax+pytest only) and a full-extras profile (+hypothesis +scipy).
+# (numpy+jax+pytest only), a full-extras profile (+hypothesis +scipy),
+# and a minimum-supported-versions profile (oldest tested jax/numpy).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -26,9 +35,18 @@ echo "== tier-1: pytest =="
 python -m pytest -x -q
 
 echo
-echo "== batched engine smoke (parity + speedup + warm sweep) =="
+echo "== batched engine smoke (parity + speedup + banded + warm sweep) =="
 python -m benchmarks.batched_solve_bench --smoke
 
 echo
 echo "perf trajectory written to ${BENCH_OUT}"
+
+if [[ "${PERF_GATE:-1}" == "1" ]]; then
+  echo
+  echo "== perf-regression gate (vs BENCH_baseline.json) =="
+  python scripts/bench_compare.py --current "${BENCH_OUT}"
+else
+  echo "perf-regression gate skipped (PERF_GATE=0)"
+fi
+
 echo "ALL CHECKS PASSED"

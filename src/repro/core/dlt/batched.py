@@ -66,6 +66,9 @@ __all__ = [
     "BatchedSystemSpec",
     "BatchedSolution",
     "FamilyLP",
+    "BandedFamilyLP",
+    "BandedGeometry",
+    "build_banded_family",
     "batched_solve",
     "solve_lp_batch",
     "build_family_lp",
@@ -153,6 +156,18 @@ def build_family_lp(bs: BatchedSystemSpec,
     return FamilyLP(c=c, F=F, b=b, art=art, dims=dims)
 
 
+def densify_family(fam: FamilyLP) -> np.ndarray:
+    """The full dense ``A (B, m, n_std)`` of a structured family."""
+    nv, n_ub, n_eq = fam.dims.nv, fam.dims.n_ub, fam.dims.n_eq
+    B, mrows = fam.b.shape
+    A = np.zeros((B, mrows, fam.dims.n_std))
+    A[:, :, :nv] = fam.F
+    A[:, :n_ub, nv: nv + n_ub] = np.eye(n_ub)[None]
+    r_eq = np.arange(n_eq)
+    A[:, n_ub + r_eq, nv + n_ub + r_eq] = fam.art
+    return A
+
+
 def build_standard_form_batch(bs: BatchedSystemSpec,
                               formulation: "Formulation | str | bool"):
     """Dense ``(c (B, n), A (B, m, n), b (B, m))`` stacked standard form.
@@ -161,34 +176,29 @@ def build_standard_form_batch(bs: BatchedSystemSpec,
     legacy bool (``True`` = Sec 3.1 front-end, ``False`` = Sec 3.2).
     """
     fam = build_family_lp(bs, formulation)
-    nv, n_ub, n_eq = fam.dims.nv, fam.dims.n_ub, fam.dims.n_eq
-    B, mrows = fam.b.shape
-    A = np.zeros((B, mrows, fam.dims.n_std))
-    A[:, :, :nv] = fam.F
-    A[:, :n_ub, nv: nv + n_ub] = np.eye(n_ub)[None]
-    r_eq = np.arange(n_eq)
-    A[:, n_ub + r_eq, nv + n_ub + r_eq] = fam.art
-    return fam.c, A, fam.b
+    return fam.c, densify_family(fam), fam.b
 
 
 # ---------------------------------------------------------------------------
 # Fixed-budget interior-point LP solver (homogeneous self-dual embedding)
 # ---------------------------------------------------------------------------
 
-def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float,
-                   init=None):
+def _hsde_ipm_core(c, b, A_mul, AT_mul, make_normal_solver,
+                   max_iter: int, tol: float, init=None):
     """min c'x s.t. Ax=b, x>=0 via Mehrotra predictor-corrector on the HSDE.
 
-    The constraint matrix enters only through three linear maps —
-    ``A_mul(x)``, ``AT_mul(y)`` and ``normal_mat(dinv) = A diag(dinv) A'``
-    — so dense and structured ``[F | I]`` instantiations share this body.
-    Shape-static: a while_loop capped at ``max_iter`` iterations that
-    (under vmap) exits once every lane is decided.  Returns
-    (x, obj, status, iters, y, s) where x is the primal solution (x/tau)
-    and (y, s) the tau-scaled duals — the triple a warm start of a nearby
-    program feeds back in.  HSDE certificates make infeasibility detection
-    residual-based: the embedding is always feasible and converges either
-    to tau>0 (optimum) or tau->0 with kappa>0 (primal or dual infeasible).
+    The constraint matrix enters only through three hooks — ``A_mul(x)``,
+    ``AT_mul(y)`` and ``make_normal_solver(dinv) -> solve`` (build AND
+    factor ``A diag(dinv) A'``, returning a solver over rhs vectors) — so
+    the dense, structured ``[F | I]`` and block-banded instantiations
+    share this body.  Shape-static: a while_loop capped at ``max_iter``
+    iterations that (under vmap) exits once every lane is decided.
+    Returns (x, obj, status, iters, y, s) where x is the primal solution
+    (x/tau) and (y, s) the tau-scaled duals — the triple a warm start of
+    a nearby program feeds back in.  HSDE certificates make infeasibility
+    detection residual-based: the embedding is always feasible and
+    converges either to tau>0 (optimum) or tau->0 with kappa>0 (primal
+    or dual infeasible).
 
     ``init`` (optional) is an interior ``(x0, y0, s0)`` starting triple —
     every entry of ``x0``/``s0`` must be strictly positive; the embedding
@@ -239,15 +249,11 @@ def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float,
         rD = c * tau - AT_mul(y) - s
         rG = c @ x - b @ y + kappa
 
-        # normal-equations matrix M = A diag(x/s) A' (+ tiny relative ridge)
+        # normal equations M = A diag(x/s) A' — built AND factored by the
+        # instantiation (dense/structured: Cholesky of the full matrix;
+        # banded: block-tridiagonal-arrowhead Cholesky)
         dinv = x / s
-        Mmat = normal_mat(dinv)
-        Mmat = Mmat + (1e-13 * (jnp.trace(Mmat) / m + 1.0)) * jnp.eye(m)
-        L = jnp.linalg.cholesky(Mmat)
-
-        def solve_M(rhs):  # rhs (m,) or (m, k)
-            z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
-            return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+        solve_M = make_normal_solver(dinv)
 
         def A_d_mul(r):  # A diag(dinv) r
             return A_mul(dinv * r)
@@ -310,7 +316,20 @@ def _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter: int, tol: float,
     return xsol, c @ xsol, status, nit, y * inv_tau, s * inv_tau
 
 
-def _hsde_ipm(c, A, b, max_iter: int, tol: float):
+def _chol_solver(Mmat):
+    """Factor a dense normal matrix (+ tiny relative ridge) -> solver."""
+    m = Mmat.shape[0]
+    Mmat = Mmat + (1e-13 * (jnp.trace(Mmat) / m + 1.0)) * jnp.eye(m)
+    L = jnp.linalg.cholesky(Mmat)
+
+    def solve_M(rhs):  # rhs (m,) or (m, k)
+        z = jax.scipy.linalg.solve_triangular(L, rhs, lower=True)
+        return jax.scipy.linalg.solve_triangular(L.T, z, lower=False)
+
+    return solve_M
+
+
+def _hsde_ipm(c, A, b, max_iter: int, tol: float, init=None):
     """Dense instantiation (generic ``A``) of the HSDE kernel."""
 
     def A_mul(z):
@@ -319,10 +338,11 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float):
     def AT_mul(y):
         return A.T @ y
 
-    def normal_mat(dinv):
-        return (A * dinv[None, :]) @ A.T
+    def make_normal_solver(dinv):
+        return _chol_solver((A * dinv[None, :]) @ A.T)
 
-    return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol)
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, make_normal_solver,
+                          max_iter, tol, init=init)
 
 
 def _structured_ops(F, art):
@@ -347,18 +367,18 @@ def _structured_ops(F, art):
     def AT_mul(y):
         return jnp.concatenate([F.T @ y, y[:n_ub], art * y[n_ub:]])
 
-    def normal_mat(dinv):
+    def make_normal_solver(dinv):
         dv, dsl, dar = split(dinv)
         extra = jnp.concatenate([dsl, art * art * dar])
-        return (F * dv[None, :]) @ F.T + jnp.diag(extra)
+        return _chol_solver((F * dv[None, :]) @ F.T + jnp.diag(extra))
 
-    return A_mul, AT_mul, normal_mat
+    return A_mul, AT_mul, make_normal_solver
 
 
 def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float):
     """Structured (cold-start) instantiation of the HSDE kernel."""
-    A_mul, AT_mul, normal_mat = _structured_ops(F, art)
-    return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol)
+    A_mul, AT_mul, make_solver = _structured_ops(F, art)
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol)
 
 
 def _hsde_ipm_structured_warm(c, F, b, art, x0, y0, s0,
@@ -370,9 +390,348 @@ def _hsde_ipm_structured_warm(c, F, b, art, x0, y0, s0,
     ``tau=1``, so nearby programs converge in a fraction of the cold
     iteration count.
     """
-    A_mul, AT_mul, normal_mat = _structured_ops(F, art)
-    return _hsde_ipm_core(c, b, A_mul, AT_mul, normal_mat, max_iter, tol,
+    A_mul, AT_mul, make_solver = _structured_ops(F, art)
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol,
                           init=(x0, y0, s0))
+
+
+# ---------------------------------------------------------------------------
+# Banded kernel: block-tridiagonal-arrowhead normal equations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BandedGeometry:
+    """Static block layout of a banded family (shape-level, no lane data).
+
+    Derived from a :class:`~repro.core.dlt.formulations.BandedStructure`:
+    positions (banded row order) are grouped into ``K`` tridiagonal
+    blocks of padded size ``s`` plus ``p`` trailing border rows.  All
+    arrays are position-indexed and shared by every lane of the family,
+    so the jitted kernel closes over them as constants.
+    """
+
+    m: int                 # rows
+    nv: int                # LP variables
+    K: int                 # tridiagonal blocks
+    s: int                 # padded block size
+    p: int                 # border rows
+    perm: np.ndarray       # (m,) original row at each banded position
+    posmat: np.ndarray     # (K, s) position per (block, slot), -1 padded
+    bkb: np.ndarray        # (m - p,) block of each band position
+    slotb: np.ndarray      # (m - p,) slot of each band position
+    dprev_c: np.ndarray    # (m,) chain-predecessor position (clipped to 0)
+    has_prev: np.ndarray   # (m,) bool
+    succ_c: np.ndarray     # (m,) chain-successor position (clipped to 0)
+    has_succ: np.ndarray   # (m,) bool
+    pair_same: np.ndarray  # (3, nd) (block, slot_t, slot_prev) same-block pairs
+    pair_st: np.ndarray    # (nd,) position t of each same-block pair
+    pair_cross: np.ndarray  # (3, nc) (block_prev, slot_t, slot_prev) cross pairs
+    pair_ct: np.ndarray    # (nc,) position t of each cross-block pair
+
+    @property
+    def n_band(self) -> int:
+        return self.m - self.p
+
+
+def _banded_geometry(struct, dims: FamilyDims) -> BandedGeometry:
+    """Block layout from a formulation's banded structure (validated)."""
+    struct.validate(dims)
+    m = dims.n_rows
+    K = struct.n_blocks
+    block = struct.block
+    band = block < K
+    n_band = int(band.sum())
+    sizes = np.bincount(block[band], minlength=K)
+    s = max(int(sizes.max()) if K else 1, 1)
+    p = m - n_band
+
+    slot = np.zeros(m, dtype=np.int64)
+    posmat = np.full((K, s), -1, dtype=np.int64)
+    fill = np.zeros(K, dtype=np.int64)
+    for t in range(n_band):
+        k = int(block[t])
+        slot[t] = fill[k]
+        posmat[k, fill[k]] = t
+        fill[k] += 1
+    slot[n_band:] = np.arange(p)
+
+    has_prev = struct.dprev >= 0
+    dprev_c = np.maximum(struct.dprev, 0)
+    succ = struct.successor()
+    has_succ = succ >= 0
+    succ_c = np.maximum(succ, 0)
+
+    same, same_t, cross, cross_t = [], [], [], []
+    for t in np.flatnonzero(has_prev):
+        u = int(struct.dprev[t])
+        if block[t] == block[u]:
+            same.append((int(block[t]), int(slot[t]), int(slot[u])))
+            same_t.append(int(t))
+        else:  # validated: block[t] == block[u] + 1
+            cross.append((int(block[u]), int(slot[t]), int(slot[u])))
+            cross_t.append(int(t))
+    to3 = lambda lst: (np.asarray(lst, dtype=np.int64).reshape(-1, 3).T
+                       if lst else np.zeros((3, 0), dtype=np.int64))
+    return BandedGeometry(
+        m=m, nv=dims.nv, K=K, s=s, p=p, perm=struct.perm, posmat=posmat,
+        bkb=block[:n_band], slotb=slot[:n_band],
+        dprev_c=dprev_c, has_prev=has_prev,
+        succ_c=succ_c, has_succ=has_succ,
+        pair_same=to3(same), pair_st=np.asarray(same_t, dtype=np.int64),
+        pair_cross=to3(cross), pair_ct=np.asarray(cross_t, dtype=np.int64),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class BandedFamilyLP:
+    """A padded family in the banded row basis (position-ordered).
+
+    Rows are permuted into processor blocks and chained rows are
+    replaced by differences with their (lane-active) chain predecessor
+    — an invertible per-lane row transform, so every lane solves the
+    SAME LP as its :class:`FamilyLP` counterpart.  Extra (slack /
+    artificial) columns are renumbered so position ``t`` owns extra
+    column ``nv + t``; the kernel variable layout is
+    ``z = [lp_vars, extra (position order)]``.
+    """
+
+    c: np.ndarray       # (B, nv + m)
+    F: np.ndarray       # (B, m, nv) transformed variable rows
+    b: np.ndarray       # (B, m) transformed rhs
+    ext: np.ndarray     # (B, m) extra-column coefficient per position
+    dcoef: np.ndarray   # (B, m) predecessor coefficient (1 = differenced)
+    colix: np.ndarray   # (K, w) variable-column support per block
+    Fg: np.ndarray      # (B, K, s, w) block rows on their support
+    Hg: np.ndarray      # (B, K, s, w) next block's rows on this support
+    Ug: np.ndarray      # (B, K, p, w) border rows on this support
+    Bq: np.ndarray      # (B, p, nv) border rows, dense
+    geom: BandedGeometry
+
+    @property
+    def w(self) -> int:
+        return int(self.colix.shape[1])
+
+
+def build_banded_family(fam: FamilyLP, struct) -> BandedFamilyLP:
+    """Transform a :class:`FamilyLP` into the banded row basis.
+
+    The differencing coefficient is per-lane data: a chained row is
+    differenced only when both it and its predecessor are structurally
+    active in that lane, so padded trailing rows of a chain stay pure
+    slack rows and the block-tridiagonal pattern holds for every lane.
+    The per-block column support is computed from the union pattern of
+    the transformed rows across lanes (data-driven, hence an input of
+    the kernel rather than part of the static geometry).
+    """
+    geom = _banded_geometry(struct, fam.dims)
+    perm = struct.perm
+    m, nv, K, s, p = geom.m, geom.nv, geom.K, geom.s, geom.p
+    B = fam.c.shape[0]
+    n_ub = fam.dims.n_ub
+
+    F0 = fam.F[:, perm, :]
+    b0 = fam.b[:, perm]
+    active = np.any(F0 != 0.0, axis=2)
+    dcoef = np.zeros((B, m))
+    hp = geom.has_prev
+    dcoef[:, hp] = (active[:, hp]
+                    & active[:, geom.dprev_c[hp]]).astype(float)
+    Ft = F0 - dcoef[:, :, None] * F0[:, geom.dprev_c, :]
+    bt = b0 - dcoef * b0[:, geom.dprev_c]
+
+    ext = np.concatenate(
+        [np.ones((B, n_ub)), fam.art], axis=1)[:, perm]
+    c = np.concatenate([fam.c[:, :nv], fam.c[:, nv:][:, perm]], axis=1)
+
+    # per-block column support: union pattern over lanes and slots
+    posc = np.where(geom.posmat >= 0, geom.posmat, 0)
+    real = (geom.posmat >= 0)
+    Fblk = (Ft[:, posc.reshape(-1), :].reshape(B, K, s, nv)
+            * real[None, :, :, None])
+    pat = np.any(Fblk != 0.0, axis=(0, 2))          # (K, nv)
+    w = max(int(pat.sum(axis=1).max()) if K else 1, 1)
+    colix = np.zeros((K, w), dtype=np.int64)
+    wmask = np.zeros((K, w))
+    for k in range(K):
+        cols = np.flatnonzero(pat[k])
+        colix[k, :cols.size] = cols
+        wmask[k, :cols.size] = 1.0
+
+    def gather(rows):  # (B, K, r, nv) -> (B, K, r, w) on each block support
+        idx = np.broadcast_to(colix[None, :, None, :],
+                              rows.shape[:3] + (w,))
+        return np.take_along_axis(rows, idx, axis=3) * wmask[None, :, None, :]
+
+    Fg = gather(Fblk)
+    pos_next = np.concatenate(
+        [posc[1:], np.zeros((1, s), dtype=np.int64)], axis=0)
+    real_next = np.concatenate(
+        [real[1:], np.zeros((1, s), dtype=bool)], axis=0)
+    Hblk = (Ft[:, pos_next.reshape(-1), :].reshape(B, K, s, nv)
+            * real_next[None, :, :, None])
+    Hg = gather(Hblk)
+    Bq = Ft[:, geom.n_band:, :]                     # (B, p, nv)
+    Ug = gather(np.broadcast_to(Bq[:, None], (B, K, p, nv)))
+    return BandedFamilyLP(c=c, F=Ft, b=bt, ext=ext, dcoef=dcoef,
+                          colix=colix, Fg=Fg, Hg=Hg, Ug=Ug, Bq=Bq, geom=geom)
+
+
+def _banded_take(bfam: BandedFamilyLP, pos: np.ndarray) -> BandedFamilyLP:
+    """Lanes ``pos`` of a banded family (geometry and support unchanged)."""
+    return dataclasses.replace(
+        bfam, c=bfam.c[pos], F=bfam.F[pos], b=bfam.b[pos],
+        ext=bfam.ext[pos], dcoef=bfam.dcoef[pos], Fg=bfam.Fg[pos],
+        Hg=bfam.Hg[pos], Ug=bfam.Ug[pos], Bq=bfam.Bq[pos])
+
+
+def banded_warm_convert(bfam: BandedFamilyLP, x0, y0, s0):
+    """Standard-layout warm triple -> the banded basis (numpy, per lane).
+
+    Primal/dual slacks permute with the extra columns; the transformed
+    dual solves ``E' y_banded = y[perm]`` by back-substitution along the
+    diff chains (``E`` is unit lower triangular, so positivity of the
+    primal/dual slack coordinates is preserved exactly).
+    """
+    g = bfam.geom
+    zperm = np.concatenate([np.arange(g.nv), g.nv + g.perm])
+    xb = x0[:, zperm]
+    sb = s0[:, zperm]
+    yb = np.ascontiguousarray(y0[:, g.perm])
+    dsucc = bfam.dcoef[:, g.succ_c] * g.has_succ[None, :]
+    for t in range(g.m - 1, -1, -1):
+        if g.has_succ[t]:
+            yb[:, t] += dsucc[:, t] * yb[:, g.succ_c[t]]
+    return xb, yb, sb
+
+
+def banded_dual_to_std(bfam: BandedFamilyLP, yb: np.ndarray) -> np.ndarray:
+    """Banded-basis dual -> original row order (``y = P' E' y_banded``)."""
+    g = bfam.geom
+    dsucc = bfam.dcoef[:, g.succ_c] * g.has_succ[None, :]
+    yt = yb - dsucc * yb[:, g.succ_c]
+    y = np.empty_like(yt)
+    y[:, g.perm] = yt
+    return y
+
+
+def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
+                Fg, Hg, Ug, Bq):
+    """Linear maps + block-tridiagonal-arrowhead normal solver (one lane).
+
+    The normal matrix ``A D A'`` in the banded basis is block
+    tridiagonal (diagonal blocks ``D_k``, couplings ``O_k``) with a
+    dense ``p``-row border (``U_k``, ``D_b``) from the mass row.  Build
+    cost is ``O(K s^2 w)`` via the per-block column supports and the
+    factorization is a scan of ``s x s`` Cholesky steps — versus
+    ``O(m^2 nv)`` build + ``O(m^3)`` factor on the dense paths.
+    """
+    m, nv, K, s, p = geom.m, geom.nv, geom.K, geom.s, geom.p
+    ext_prev = ext[geom.dprev_c]
+    dsucc = dcoef[geom.succ_c] * geom.has_succ
+
+    def A_mul(z):
+        v, e = z[:nv], z[nv:]
+        return F @ v + ext * e - dcoef * ext_prev * e[geom.dprev_c]
+
+    def AT_mul(y):
+        return jnp.concatenate([F.T @ y, ext * (y - dsucc * y[geom.succ_c])])
+
+    def make_normal_solver(dinv):
+        dv, dz = dinv[:nv], dinv[nv:]
+        Dg = dv[colix]                                   # (K, w)
+        Dblk = jnp.einsum("ksw,kw,ktw->kst", Fg, Dg, Fg)
+        Oblk = jnp.einsum("ksw,kw,ktw->kst", Hg, Dg, Fg)
+        Ublk = jnp.einsum("kpw,kw,ksw->kps", Ug, Dg, Fg)
+        Db = (Bq * dv[None, :]) @ Bq.T
+
+        # slack/artificial tridiagonal (position space)
+        dz_p = dz[geom.dprev_c]
+        diagv = ext * ext * dz + dcoef * dcoef * ext_prev * ext_prev * dz_p
+        offv = -dcoef * ext_prev * ext_prev * dz_p
+        nb = geom.n_band
+        Dblk = Dblk.at[geom.bkb, geom.slotb, geom.slotb].add(diagv[:nb])
+        Db = Db + jnp.diag(diagv[nb:])
+        ps, pc = geom.pair_same, geom.pair_cross
+        Dblk = Dblk.at[ps[0], ps[1], ps[2]].add(offv[geom.pair_st])
+        Dblk = Dblk.at[ps[0], ps[2], ps[1]].add(offv[geom.pair_st])
+        Oblk = Oblk.at[pc[0], pc[1], pc[2]].add(offv[geom.pair_ct])
+
+        # tiny relative ridge (also keeps padded slots factorizable)
+        tr = (jnp.sum(jnp.diagonal(Dblk, axis1=1, axis2=2))
+              + jnp.trace(Db))
+        ridge = 1e-13 * (tr / m + 1.0)
+        Dblk = Dblk + ridge * jnp.eye(s)[None]
+        Db = Db + ridge * jnp.eye(p)
+
+        Opad = jnp.concatenate([jnp.zeros((1, s, s)), Oblk[:-1]], axis=0)
+
+        def factor_step(carry, inp):
+            Cprev, Vprev, S = carry
+            Dk, Okp, Uk = inp
+            X = jax.scipy.linalg.solve_triangular(
+                Cprev, Okp.T, lower=True).T
+            Ck = jnp.linalg.cholesky(Dk - X @ X.T)
+            Vk = jax.scipy.linalg.solve_triangular(
+                Ck, (Uk - Vprev @ X.T).T, lower=True).T
+            return (Ck, Vk, S + Vk @ Vk.T), (Ck, X, Vk)
+
+        carry0 = (jnp.eye(s), jnp.zeros((p, s)), jnp.zeros((p, p)))
+        (_, _, S), (C, X, V) = jax.lax.scan(
+            factor_step, carry0, (Dblk, Opad, Ublk))
+        Cb = jnp.linalg.cholesky(Db - S)
+        Xnext = jnp.concatenate([X[1:], jnp.zeros((1, s, s))], axis=0)
+
+        def solve_M(rhs):                                # rhs (m,)
+            posc = jnp.where(geom.posmat >= 0, geom.posmat, 0)
+            rband = rhs[posc] * (geom.posmat >= 0)       # (K, s)
+            rb = rhs[geom.n_band:]
+
+            def fwd(u_prev, inp):
+                Ck, Xk, rk = inp
+                u = jax.scipy.linalg.solve_triangular(
+                    Ck, rk - Xk @ u_prev, lower=True)
+                return u, u
+
+            _, u = jax.lax.scan(fwd, jnp.zeros(s), (C, X, rband))
+            t = rb - jnp.einsum("kps,ks->p", V, u)
+            ub = jax.scipy.linalg.solve_triangular(Cb, t, lower=True)
+            wb = jax.scipy.linalg.solve_triangular(Cb.T, ub, lower=False)
+
+            def bwd(w_next, inp):
+                Ck, Xn, Vk, uk = inp
+                wk = jax.scipy.linalg.solve_triangular(
+                    Ck.T, uk - Xn.T @ w_next - Vk.T @ wb, lower=False)
+                return wk, wk
+
+            _, wband = jax.lax.scan(bwd, jnp.zeros(s), (C, Xnext, V, u),
+                                    reverse=True)
+            return jnp.concatenate(
+                [wband[geom.bkb, geom.slotb], wb])
+
+        return solve_M
+
+    return A_mul, AT_mul, make_normal_solver
+
+
+def _hsde_ipm_banded(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
+                     max_iter: int, tol: float, geom=None, init=None):
+    """Banded instantiation of the HSDE kernel (one lane, vmapped)."""
+    A_mul, AT_mul, make_solver = _banded_ops(
+        geom, F, ext, dcoef, colix, Fg, Hg, Ug, Bq)
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol,
+                          init=init)
+
+
+def _hsde_ipm_banded_warm(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
+                          x0, y0, s0, max_iter: int, tol: float, geom=None):
+    """Banded instantiation restarted from a banded-basis warm triple."""
+    return _hsde_ipm_banded(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
+                            max_iter, tol, geom=geom, init=(x0, y0, s0))
+
+
+def _hsde_ipm_dense_warm(c, A, b, x0, y0, s0, max_iter: int, tol: float):
+    """Dense instantiation restarted from an interior ``(x0, y0, s0)``."""
+    return _hsde_ipm(c, A, b, max_iter, tol, init=(x0, y0, s0))
 
 
 @functools.lru_cache(maxsize=None)
@@ -410,10 +769,12 @@ def solve_lp_batch(c, A, b, max_iter: int = 25, tol: float = 1e-8):
 
 #: Default entry count of a :class:`~repro.core.dlt.engine.DLTEngine`'s
 #: compiled-executable LRU.  Each entry is one ahead-of-time compiled
-#: (batch, rows, vars) family shape of the structured kernel; eviction
-#: just means recompiling on next use.  Override per engine via
+#: (kernel kind, batch, rows, vars, budget) family shape; eviction just
+#: means recompiling on next use.  Sized for the banded/structured kernel
+#: split plus the adaptive warm budgets, which roughly double the shape
+#: space a mixed workload touches.  Override per engine via
 #: ``EngineConfig.compile_cache_size``.
-COMPILE_CACHE_SIZE = 64
+COMPILE_CACHE_SIZE = 128
 
 
 def compile_cache_info() -> dict:

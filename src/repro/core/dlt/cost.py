@@ -84,6 +84,7 @@ def sweep_processors(
     m_max: Optional[int] = None,
     engine: str = "batched",
     formulation: Optional[str] = None,
+    kernel: str = "auto",
 ) -> ProcessorSweep:
     """Solve the DLT program for every prefix of the (sorted) processor list.
 
@@ -93,18 +94,22 @@ def sweep_processors(
     ``engine="scalar"`` keeps the original one-LP-at-a-time loop.
     ``formulation`` pins a registry formulation for either engine (the
     batched default is the column-reduced Sec 3.2 program when
-    ``frontend=False``).  A pinned ``solver`` (anything but "auto") implies
+    ``frontend=False``) and ``kernel`` the interior-point linear algebra
+    (``"auto"`` routes large banded-structure families through the
+    block-tridiagonal Cholesky; ``"structured"``/``"banded"``/``"dense"``
+    pin a path).  A pinned ``solver`` (anything but "auto") implies
     the scalar engine, which is the only path that honors it — deprecated;
     pass ``engine="scalar"`` explicitly.
 
     Compatibility shim over :meth:`repro.core.dlt.engine.DLTEngine.sweep`
-    (shared default session — batched prefix sweeps are warm-started).
+    (shared default session — batched prefix sweeps are warm-started
+    under the adaptive reduced iteration budget).
     """
     from .engine import get_default_engine
 
     solver, engine = _coerce_solver_engine(solver, engine, "sweep_processors")
     return get_default_engine().configured(
-        solver=solver, engine=engine).sweep(
+        solver=solver, engine=engine, kernel=kernel).sweep(
             spec, frontend=frontend, m_max=m_max, formulation=formulation)
 
 

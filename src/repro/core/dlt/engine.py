@@ -50,12 +50,22 @@ from .batched import (
     STATUS_INFEASIBLE,
     STATUS_MAXITER,
     STATUS_OPTIMAL,
+    BandedFamilyLP,
     BatchedSolution,
     FamilyLP,
+    _banded_take,
     _group_lanes,
+    _hsde_ipm,
+    _hsde_ipm_banded,
+    _hsde_ipm_banded_warm,
     _hsde_ipm_structured,
     _hsde_ipm_structured_warm,
+    _hsde_ipm_dense_warm,
+    banded_dual_to_std,
+    banded_warm_convert,
+    build_banded_family,
     build_family_lp,
+    densify_family,
 )
 from .cost import ProcessorSweep
 from .formulations import BatchFields, Formulation, get_formulation
@@ -75,6 +85,14 @@ __all__ = [
 _ENGINES = ("batched", "scalar")
 _BUCKETS = ("size", "none")
 _SOLVERS = ("auto", "simplex", "highs")
+_KERNELS = ("auto", "banded", "structured", "dense")
+
+#: Row-count floor below which ``kernel="auto"`` keeps the structured
+#: path: the block-tridiagonal scan only amortizes its per-step overhead
+#: once the normal equations are big enough (measured break-even ~30
+#: rows on 2-core CPU; the win grows superlinearly past it — ~7x at 50
+#: rows, ~20x at 100).
+BANDED_MIN_ROWS = 32
 
 FormulationLike = Union[Formulation, str, None]
 
@@ -104,6 +122,17 @@ class EngineConfig:
       chunk_size: scenarios per device batch — also the chunk length of
         :meth:`DLTEngine.map`.
       bucket / m_bucket_edges: size-bucketed batching of ragged families.
+      kernel: linear-algebra kernel of the batched interior point —
+        ``"auto"`` picks the banded path whenever the formulation
+        publishes a :class:`~repro.core.dlt.formulations.BandedStructure`
+        and the family has at least ``banded_min_rows`` constraint rows
+        (falling back to ``"structured"`` otherwise); ``"banded"`` pins
+        the block-tridiagonal-arrowhead Cholesky (a ``ValueError`` at
+        solve time if the formulation has no structure); ``"structured"``
+        pins the ``[F | I]`` dense-Cholesky path; ``"dense"`` runs the
+        generic dense kernel (debug / apples-to-apples baselines).
+      banded_min_rows: minimum constraint-row count for ``"auto"`` to
+        choose the banded kernel.
       warm_start: warm-start parametric families (``sweep`` / ``grid``):
         cold-solve every ``warm_stride``-th lane, restart the rest from
         the nearest anchor's shifted solution triple.
@@ -111,6 +140,13 @@ class EngineConfig:
       warm_shift: relative interior shift added to an anchor solution
         before it seeds a warm start (keeps the restart strictly
         interior and centered).
+      adaptive_budget: run warm-seeded lanes under a REDUCED iteration
+        budget derived from the observed anchor convergence (see
+        :meth:`DLTEngine._warm_budget`); lanes that fail the reduced
+        budget are automatically re-solved cold at the full ``max_iter``
+        (counted in ``stats.resolve_lanes``) before any oracle fallback,
+        so results are unchanged — only the straggler wall-clock is.
+      min_warm_iter: floor of the adaptive warm budget.
       compile_cache_size: entries kept in the engine's AOT-compiled
         family-shape LRU.
       compile_cache_dir: when set, also persist compiled executables via
@@ -129,9 +165,13 @@ class EngineConfig:
     chunk_size: int = 256
     bucket: str = "size"
     m_bucket_edges: Tuple[int, ...] = DEFAULT_M_BUCKET_EDGES
+    kernel: str = "auto"
+    banded_min_rows: int = BANDED_MIN_ROWS
     warm_start: bool = True
-    warm_stride: int = 4
+    warm_stride: int = 8
     warm_shift: float = 1e-2
+    adaptive_budget: bool = True
+    min_warm_iter: int = 4
     compile_cache_size: int = COMPILE_CACHE_SIZE
     compile_cache_dir: Optional[str] = None
 
@@ -169,6 +209,15 @@ class EngineConfig:
             raise ValueError(
                 "m_bucket_edges must be a non-empty strictly increasing "
                 f"sequence of positive ints, got {edges}")
+        if self.kernel not in _KERNELS:
+            raise ValueError(
+                f"unknown kernel {self.kernel!r}: use one of {_KERNELS}")
+        if self.banded_min_rows < 1:
+            raise ValueError(
+                f"banded_min_rows must be >= 1, got {self.banded_min_rows}")
+        if self.min_warm_iter < 1:
+            raise ValueError(
+                f"min_warm_iter must be >= 1, got {self.min_warm_iter}")
         if self.warm_stride < 2:
             raise ValueError(
                 f"warm_stride must be >= 2 (1 makes every lane a cold "
@@ -195,6 +244,8 @@ class EngineStats:
     warm_lanes: int = 0         # lanes restarted from an anchor solution
     cold_iterations: int = 0    # IPM iterations spent on cold lanes
     warm_iterations: int = 0    # IPM iterations spent on warm lanes
+    banded_lanes: int = 0       # lanes routed through the banded kernel
+    resolve_lanes: int = 0      # warm lanes re-solved at the full budget
     fallback_lanes: int = 0     # lanes re-solved by the simplex oracle
     cache_hits: int = 0         # compiled-executable LRU hits
     cache_misses: int = 0       # compiled-executable LRU misses (compiles)
@@ -214,7 +265,8 @@ class _EngineState:
         self.compiled: "OrderedDict[tuple, object]" = OrderedDict()
         self.counters = dict(
             batches=0, lanes=0, cold_lanes=0, warm_lanes=0,
-            cold_iterations=0, warm_iterations=0, fallback_lanes=0,
+            cold_iterations=0, warm_iterations=0, banded_lanes=0,
+            resolve_lanes=0, fallback_lanes=0,
             cache_hits=0, cache_misses=0)
 
     def bump(self, **by):
@@ -240,13 +292,39 @@ def _family_take(fam: FamilyLP, pos: np.ndarray) -> FamilyLP:
                     art=fam.art[pos], dims=fam.dims)
 
 
+@dataclasses.dataclass(frozen=True)
+class _KernelPlan:
+    """One group's kernel routing: which instantiation + its built family.
+
+    ``kind`` is the RESOLVED kernel ("structured" / "banded" / "dense" —
+    never "auto"); ``bfam`` carries the banded-basis family when the
+    banded kernel was selected and ``A`` the densified constraint tensor
+    for the dense kernel.
+    """
+
+    kind: str
+    fm_name: str
+    fam: FamilyLP
+    bfam: Optional[BandedFamilyLP] = None
+    A: Optional[np.ndarray] = None
+
+
+def _plan_take(plan: _KernelPlan, pos: np.ndarray) -> _KernelPlan:
+    """Lanes ``pos`` of a kernel plan (kind and geometry unchanged)."""
+    return dataclasses.replace(
+        plan, fam=_family_take(plan.fam, pos),
+        bfam=None if plan.bfam is None else _banded_take(plan.bfam, pos),
+        A=None if plan.A is None else plan.A[pos])
+
+
 #: Processor-count bucket edges used while warm-starting a parametric
-#: family.  Coarser (power-of-two) than the throughput ladder on purpose:
-#: an anchor can only seed lanes that share its padded LP shape, so warm
-#: sweeps trade a bounded extra padding step (<= 2x, same bound as the
-#: po2 lane padding) for buckets large enough that most lanes start next
-#: to a solved neighbor instead of at the cold HSDE point.
-WARM_M_BUCKET_EDGES = tuple(2 ** k for k in range(11))  # 1, 2, 4, ..., 1024
+#: family.  Much coarser than the throughput ladder on purpose: an
+#: anchor can only seed lanes that share its padded LP shape, and the
+#: two-phase anchor/rest plan pays a fixed dispatch cost per group, so
+#: warm sweeps trade a bounded extra padding step for FEW large groups
+#: in which most lanes start next to a solved neighbor instead of at
+#: the cold HSDE point.
+WARM_M_BUCKET_EDGES = (4, 16, 64, 256, 1024)
 
 
 class DLTEngine:
@@ -333,74 +411,169 @@ class DLTEngine:
                 1 for _ in os.scandir(cfg.compile_cache_dir))
         return info
 
-    # ---- compiled executables -------------------------------------------
+    # ---- kernel routing + compiled executables ---------------------------
 
-    def _structured_executable(self, B: int, mrows: int, nv: int, n_eq: int,
-                               warm: bool):
-        """AOT-compiled structured kernel for one family shape (LRU'd)."""
+    def _kernel_plan(self, fm: Formulation, sub: BatchedSystemSpec,
+                     fam: FamilyLP) -> _KernelPlan:
+        """Resolve the config's ``kernel`` knob for one padded group.
+
+        ``auto`` routes through the banded kernel whenever the
+        formulation publishes a banded structure AND the family is big
+        enough to amortize the block scan (``banded_min_rows``); it
+        falls back to the structured dense-Cholesky path otherwise.
+        Pinning ``kernel="banded"`` on a structureless formulation is a
+        ``ValueError`` rather than a silent downgrade.
+        """
+        cfg = self.config
+        kind = cfg.kernel
+        if kind in ("auto", "banded"):
+            struct = fm.banded_structure(sub.n_max, sub.m_max)
+            if struct is None:
+                if kind == "banded":
+                    raise ValueError(
+                        f"kernel='banded' but formulation {fm.name!r} "
+                        "publishes no banded_structure — use kernel='auto' "
+                        "(structured fallback) or kernel='structured'")
+                kind = "structured"
+            elif kind == "auto" and fam.dims.n_rows < cfg.banded_min_rows:
+                kind = "structured"
+            else:
+                kind = "banded"
+        if kind == "banded":
+            return _KernelPlan(kind="banded", fm_name=fm.name, fam=fam,
+                               bfam=build_banded_family(fam, struct))
+        if kind == "dense":
+            return _KernelPlan(kind="dense", fm_name=fm.name, fam=fam,
+                               A=densify_family(fam))
+        return _KernelPlan(kind="structured", fm_name=fm.name, fam=fam)
+
+    def _executable(self, plan: _KernelPlan, B: int, warm: bool,
+                    max_iter: int):
+        """AOT-compiled kernel for one (plan, batch, budget) shape (LRU'd)."""
         cfg, st = self.config, self._state
-        key = (B, mrows, nv, n_eq, int(cfg.max_iter), float(cfg.tol), warm)
+        tol = float(cfg.tol)
+        dims = plan.fam.dims
+        if plan.kind == "banded":
+            g = plan.bfam.geom
+            key = ("banded", plan.fm_name, B, g.m, g.nv, g.K, g.s, g.p,
+                   plan.bfam.w, max_iter, tol, warm)
+        elif plan.kind == "dense":
+            key = ("dense", B, dims.n_rows, dims.n_std, max_iter, tol, warm)
+        else:
+            key = ("structured", B, dims.n_rows, dims.nv, dims.n_eq,
+                   max_iter, tol, warm)
         exe = st.compiled.get(key)
         if exe is not None:
             st.compiled.move_to_end(key)
             st.bump(cache_hits=1)
             return exe
         st.bump(cache_misses=1)
-        kern = _hsde_ipm_structured_warm if warm else _hsde_ipm_structured
-        fn = jax.jit(jax.vmap(functools.partial(
-            kern, max_iter=int(cfg.max_iter), tol=float(cfg.tol))))
         f8 = np.dtype(np.float64)
         sds = jax.ShapeDtypeStruct
-        n_std = nv + mrows
-        args = [sds((B, n_std), f8), sds((B, mrows, nv), f8),
-                sds((B, mrows), f8), sds((B, n_eq), f8)]
-        if warm:
-            args += [sds((B, n_std), f8), sds((B, mrows), f8),
-                     sds((B, n_std), f8)]
-        exe = fn.lower(*args).compile()
+        mrows, nv, n_std = dims.n_rows, dims.nv, dims.n_std
+        winit = [sds((B, n_std), f8), sds((B, mrows), f8),
+                 sds((B, n_std), f8)]
+        if plan.kind == "banded":
+            g = plan.bfam.geom
+            w = plan.bfam.w
+            kern = _hsde_ipm_banded_warm if warm else _hsde_ipm_banded
+            fn = functools.partial(kern, max_iter=max_iter, tol=tol, geom=g)
+            in_axes = ((0, 0, 0, 0, 0, None, 0, 0, 0, 0)
+                       + ((0, 0, 0) if warm else ()))
+            args = [sds((B, n_std), f8), sds((B, g.m, g.nv), f8),
+                    sds((B, g.m), f8), sds((B, g.m), f8), sds((B, g.m), f8),
+                    sds((g.K, w), np.dtype(np.int64)),
+                    sds((B, g.K, g.s, w), f8), sds((B, g.K, g.s, w), f8),
+                    sds((B, g.K, g.p, w), f8), sds((B, g.p, g.nv), f8)]
+            exe = (jax.jit(jax.vmap(fn, in_axes=in_axes))
+                   .lower(*(args + (winit if warm else []))).compile())
+        elif plan.kind == "dense":
+            kern = _hsde_ipm_dense_warm if warm else _hsde_ipm
+            fn = functools.partial(kern, max_iter=max_iter, tol=tol)
+            args = [sds((B, n_std), f8), sds((B, mrows, n_std), f8),
+                    sds((B, mrows), f8)]
+            exe = (jax.jit(jax.vmap(fn))
+                   .lower(*(args + (winit if warm else []))).compile())
+        else:
+            kern = _hsde_ipm_structured_warm if warm else _hsde_ipm_structured
+            fn = functools.partial(kern, max_iter=max_iter, tol=tol)
+            args = [sds((B, n_std), f8), sds((B, mrows, nv), f8),
+                    sds((B, mrows), f8), sds((B, dims.n_eq), f8)]
+            exe = (jax.jit(jax.vmap(fn))
+                   .lower(*(args + (winit if warm else []))).compile())
         st.compiled[key] = exe
         while len(st.compiled) > cfg.compile_cache_size:
             st.compiled.popitem(last=False)
         return exe
 
-    def _solve_family(self, fam: FamilyLP, init=None, want_state: bool = False):
-        """Run the structured kernel over a family, chunked along the batch.
+    def _solve_family(self, plan: _KernelPlan, init=None,
+                      want_state: bool = False,
+                      max_iter: Optional[int] = None):
+        """Run the plan's kernel over its family, chunked along the batch.
 
-        Lane counts are padded to the next power of two (repeating the
-        last lane) so the compiled-shape cache sees a bounded set of
-        batch sizes; padding lanes are dropped before returning.  vmap
-        lanes are independent, so real lanes' results are unaffected.
-        ``init`` (x0, y0, s0 stacks) switches to the warm kernel; with
-        ``want_state`` the tau-scaled (x, y, s) solution triples are
-        returned for seeding further warm starts.
+        Cold lane counts are padded to the next power of two (repeating
+        the last lane) so the compiled-shape cache sees a bounded set of
+        batch sizes; warm chunks pad to a multiple of 4 instead — the
+        vmapped while_loop runs to the slowest lane, so po2-padding a
+        warm rest pass with junk lanes would cost up to 2x, defeating
+        the reduced budget.  Padding lanes are dropped before returning.
+        vmap lanes are independent, so real lanes' results are
+        unaffected.
+        ``init`` (x0, y0, s0 stacks, STANDARD layout) switches to the
+        warm kernel — the banded plan converts the triple into its row
+        basis per chunk; with ``want_state`` the tau-scaled (x, y, s)
+        solution triples are returned (y back in the standard row
+        order) for seeding further warm starts.  ``max_iter`` overrides
+        the config budget (the adaptive warm budget rides this).
         """
         cfg = self.config
+        fam = plan.fam
         B = fam.c.shape[0]
-        mrows, nv = fam.F.shape[1], fam.F.shape[2]
-        n_eq = fam.art.shape[1]
         warm = init is not None
+        mi = int(cfg.max_iter if max_iter is None else max_iter)
         xs, sts, nits, ys, ss = [], [], [], [], []
         with jax.experimental.enable_x64():
             for lo in range(0, B, cfg.chunk_size):
                 hi = min(lo + cfg.chunk_size, B)
                 Bk = hi - lo
-                Bp = 1 << (Bk - 1).bit_length()
-                parts = [fam.c[lo:hi], fam.F[lo:hi], fam.b[lo:hi],
-                         fam.art[lo:hi]]
-                if warm:
-                    parts += [a[lo:hi] for a in init]
+                Bp = (4 * ((Bk + 3) // 4) if warm
+                      else 1 << (Bk - 1).bit_length())
+                chunk = np.arange(lo, hi)
+                bchunk = None
+                if plan.kind == "banded":
+                    bchunk = _banded_take(plan.bfam, chunk)
+                    parts = [bchunk.c, bchunk.F, bchunk.b, bchunk.ext,
+                             bchunk.dcoef, bchunk.Fg, bchunk.Hg, bchunk.Ug,
+                             bchunk.Bq]
+                    if warm:
+                        parts += list(banded_warm_convert(
+                            bchunk, *(a[lo:hi] for a in init)))
+                elif plan.kind == "dense":
+                    parts = [fam.c[lo:hi], plan.A[lo:hi], fam.b[lo:hi]]
+                    if warm:
+                        parts += [a[lo:hi] for a in init]
+                else:
+                    parts = [fam.c[lo:hi], fam.F[lo:hi], fam.b[lo:hi],
+                             fam.art[lo:hi]]
+                    if warm:
+                        parts += [a[lo:hi] for a in init]
                 if Bp != Bk:
                     parts = [np.concatenate(
                         [p, np.repeat(p[-1:], Bp - Bk, axis=0)])
                         for p in parts]
-                exe = self._structured_executable(Bp, mrows, nv, n_eq, warm)
-                x, _, st, ni, y, s = exe(
-                    *[jnp.asarray(p, jnp.float64) for p in parts])
+                exe = self._executable(plan, Bp, warm, mi)
+                jparts = [jnp.asarray(p, jnp.float64) for p in parts]
+                if plan.kind == "banded":
+                    jparts.insert(5, jnp.asarray(plan.bfam.colix))
+                x, _, st, ni, y, s = exe(*jparts)
                 xs.append(np.asarray(x)[:Bk])
                 sts.append(np.asarray(st)[:Bk])
                 nits.append(np.asarray(ni)[:Bk])
                 if want_state:
-                    ys.append(np.asarray(y)[:Bk])
+                    yk = np.asarray(y)[:Bk]
+                    if plan.kind == "banded":
+                        yk = banded_dual_to_std(bchunk, yk)
+                    ys.append(yk)
                     ss.append(np.asarray(s)[:Bk])
         out = (np.concatenate(xs), np.concatenate(sts), np.concatenate(nits))
         if want_state:
@@ -490,6 +663,35 @@ class DLTEngine:
         x0[bad], y0[bad], s0[bad] = 1.0, 0.0, 1.0
         return x0, y0, s0
 
+    def _warm_budget(self, nia: np.ndarray, sta: np.ndarray) -> int:
+        """Reduced iteration budget for warm-seeded lanes.
+
+        Derived from the observed anchor convergence of the SAME family.
+        A seeded lane restarts next to the central path and needs ~0.7x
+        the cold iteration count (measured to be nearly independent of
+        the seed's anchor distance), so a healthy warm lane NEVER needs
+        more than its family's cold anchors — but under vmap the whole
+        warm chunk's while_loop runs to its slowest lane, so one
+        pathological lane (junk seed, near-infeasible prefix) would
+        otherwise drag every lane of the pass to the full ``max_iter``.
+        The budget is the anchors' p75 iteration count — neutral for
+        healthy lanes (they exit earlier anyway), a ~2x haircut for
+        pathological ones — floored at ``min_warm_iter``, rounded up to
+        a multiple of 2 (bounding the compiled-budget shapes the LRU
+        sees) and capped at ``max_iter``.  Lanes that exhaust it are
+        re-solved cold at the full budget in one batched pass, so an
+        aggressive budget costs a re-solve — never a wrong result.
+        """
+        cfg = self.config
+        if not cfg.adaptive_budget:
+            return cfg.max_iter
+        ok = nia[sta == STATUS_OPTIMAL]
+        if ok.size == 0:
+            return cfg.max_iter
+        budget = int(np.ceil(np.percentile(ok, 75)))
+        budget = max(budget, cfg.min_warm_iter)
+        return int(min(cfg.max_iter, 2 * ((budget + 1) // 2)))
+
     def _solve_group(self, fm: Formulation, sub: BatchedSystemSpec,
                      fam: FamilyLP, warm: bool):
         """Solve one padded family, warm two-phase when asked & worthwhile.
@@ -497,34 +699,55 @@ class DLTEngine:
         Warm plan: lanes are already ordered by processor count, so every
         ``warm_stride``-th lane is solved cold (anchor pass) and each
         remaining lane restarts the HSDE from a completed seed built off
-        its nearest anchor's solution (see :meth:`_warm_init`).  The
-        padded LP shape is shared group-wide, so seeds transfer with no
-        reshaping.
+        its nearest anchor's solution (see :meth:`_warm_init`), under
+        the reduced adaptive budget (see :meth:`_warm_budget`) — lanes
+        failing it are automatically re-solved cold at the full budget.
+        The padded LP shape is shared group-wide, so seeds transfer with
+        no reshaping.
         """
         st8 = self._state
         B = fam.c.shape[0]
+        plan = self._kernel_plan(fm, sub, fam)
+        if plan.kind == "banded":
+            st8.bump(banded_lanes=B)
         if not warm or B <= self.config.warm_stride:
-            x, st, ni = self._solve_family(fam)
+            x, st, ni = self._solve_family(plan)
             st8.bump(lanes=B, cold_lanes=B, cold_iterations=ni.sum())
             return x, st, ni
         anchor = np.arange(0, B, self.config.warm_stride)
         rest = np.setdiff1d(np.arange(B), anchor)
         xa, sta, nia, ya, sa = self._solve_family(
-            _family_take(fam, anchor), want_state=True)
+            _plan_take(plan, anchor), want_state=True)
         # nearest anchor (either side) seeds each remaining lane
         hi = np.clip(np.searchsorted(anchor, rest), 0, anchor.size - 1)
         lo = np.clip(hi - 1, 0, anchor.size - 1)
         src = np.where(np.abs(anchor[hi] - rest) < np.abs(rest - anchor[lo]),
                        hi, lo)
         init = self._warm_init(fm, sub, fam, rest, anchor, src, xa, ya, sta)
-        xr, str_, nir = self._solve_family(_family_take(fam, rest), init=init)
+        budget = self._warm_budget(nia, sta)
+        rest_plan = _plan_take(plan, rest)
+        xr, str_, nir = self._solve_family(rest_plan, init=init,
+                                           max_iter=budget)
+        st8.bump(warm_iterations=nir.sum())
+        if budget < self.config.max_iter:
+            # adaptive-budget safety net: lanes the reduced budget could
+            # not certify re-run cold at the full budget (still cheaper
+            # than letting every straggler gate the whole warm chunk)
+            failed = np.flatnonzero(str_ == STATUS_MAXITER)
+            if failed.size:
+                xf, stf, nif = self._solve_family(
+                    _plan_take(rest_plan, failed))
+                xr[failed], str_[failed] = xf, stf
+                nir[failed] += nif
+                st8.bump(resolve_lanes=failed.size,
+                         cold_iterations=nif.sum())
         x = np.empty_like(fam.c)
         st = np.empty(B, dtype=sta.dtype)
         ni = np.empty(B, dtype=nia.dtype)
         x[anchor], st[anchor], ni[anchor] = xa, sta, nia
         x[rest], st[rest], ni[rest] = xr, str_, nir
         st8.bump(lanes=B, cold_lanes=anchor.size, warm_lanes=rest.size,
-                 cold_iterations=nia.sum(), warm_iterations=nir.sum())
+                 cold_iterations=nia.sum())
         return x, st, ni
 
     def _solve_batch_scalar(self, bspec: BatchedSystemSpec, frontend: bool,

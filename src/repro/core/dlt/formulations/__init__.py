@@ -13,6 +13,7 @@ FamilyDims(nv=25, n_ub=25, n_eq=1)
 """
 
 from .base import (
+    BandedStructure,
     BatchFields,
     BatchRows,
     FamilyDims,
@@ -30,6 +31,7 @@ __all__ = [
     "FamilyDims",
     "BatchRows",
     "BatchFields",
+    "BandedStructure",
     "register_formulation",
     "get_formulation",
     "available_formulations",

@@ -41,6 +41,7 @@ __all__ = [
     "FamilyDims",
     "BatchRows",
     "BatchFields",
+    "BandedStructure",
     "Formulation",
     "register_formulation",
     "get_formulation",
@@ -73,6 +74,106 @@ class BatchRows(NamedTuple):
     A_eq: np.ndarray       # (B, n_eq, nv)
     b_eq: np.ndarray       # (B, n_eq)
     eq_active: np.ndarray  # (B, n_eq) bool — False on padded eq rows
+
+
+class BandedStructure(NamedTuple):
+    """Block/banded pattern of a formulation's normal equations.
+
+    The paper's programs are transmission-order chains: almost every
+    constraint row touches only the variables of one processor column
+    ``j`` and its neighbors.  The exceptions are *prefix* rows (source
+    1's collapsed ``TF`` chain, Eq 5/Eq 8) and the objective column
+    ``T_f`` (every Eq 13 row) — both become local after an exact,
+    invertible row transform that replaces each chained row by its
+    difference with the previous chain member (a unit-lower-triangular
+    ``E``; ``EAx = Eb`` is the same LP).  This tuple records that
+    transform plus a row ordering under which ``F D F'`` is
+    **block-tridiagonal with a small dense border** (the mass
+    conservation row Eq 6/Eq 14), which is what the banded interior
+    point kernel factors in O(K s^3) instead of O(m^3).
+
+    Positions below index the *banded row order*; ``perm[t]`` is the
+    original row sitting at position ``t``.
+
+    Attributes:
+      perm: (n_rows,) original row index at each banded position;
+        border rows occupy the trailing positions.
+      dprev: (n_rows,) banded position of the row's chain predecessor,
+        or -1.  ``dprev[t] = u`` means transformed row ``t`` reads
+        ``row[perm[t]] - row[perm[u]]`` (applied once, not iterated);
+        each position has at most one successor and predecessors come
+        earlier and sit in the same or the previous block.
+      block: (n_rows,) block id per position — ``0..n_blocks-1`` for
+        band rows (nondecreasing), ``n_blocks`` for border rows.
+      n_blocks: number of tridiagonal blocks (one per processor column).
+    """
+
+    perm: np.ndarray
+    dprev: np.ndarray
+    block: np.ndarray
+    n_blocks: int
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.perm.shape[0])
+
+    @property
+    def n_border(self) -> int:
+        return int(np.sum(self.block == self.n_blocks))
+
+    def successor(self) -> np.ndarray:
+        """(n_rows,) the unique chain successor per position, or -1."""
+        succ = np.full(self.n_rows, -1, dtype=np.int64)
+        has = self.dprev >= 0
+        succ[self.dprev[has]] = np.flatnonzero(has)
+        return succ
+
+    def validate(self, dims: "FamilyDims") -> None:
+        """Structural invariants (cheap; shape-level, not data-level)."""
+        m = dims.n_rows
+        if sorted(self.perm.tolist()) != list(range(m)):
+            raise ValueError("perm is not a permutation of the row set")
+        pos = np.arange(m)
+        has = self.dprev >= 0
+        if np.any(self.dprev[has] >= pos[has]):
+            raise ValueError("chain predecessors must come earlier")
+        db = self.block[pos[has]] - self.block[self.dprev[has]]
+        if np.any((db != 0) & (db != 1)):
+            raise ValueError("chain predecessor outside adjacent blocks")
+        counts = np.bincount(self.dprev[has], minlength=m)
+        if np.any(counts > 1):
+            raise ValueError("a position has more than one chain successor")
+        band = self.block[self.block < self.n_blocks]
+        if band.size and np.any(np.diff(band) < 0):
+            raise ValueError("band block ids must be nondecreasing")
+        if np.any(self.block[band.size:] != self.n_blocks):
+            raise ValueError("border rows must occupy the trailing positions")
+        if np.any(has & (self.block == self.n_blocks)):
+            raise ValueError("border rows cannot be chain members")
+
+
+class _BandedBuilder:
+    """Row-by-row accumulator the formulations use for banded_structure."""
+
+    def __init__(self):
+        self.perm, self.dprev_row, self.block = [], [], []
+
+    def add(self, row: int, block: int, prev_row: int = -1) -> None:
+        self.perm.append(row)
+        self.dprev_row.append(prev_row)
+        self.block.append(block)
+
+    def build(self, n_blocks: int) -> BandedStructure:
+        perm = np.asarray(self.perm, dtype=np.int64)
+        pos_of = np.empty(perm.size, dtype=np.int64)
+        pos_of[perm] = np.arange(perm.size)
+        dprev_row = np.asarray(self.dprev_row, dtype=np.int64)
+        dprev = np.where(dprev_row >= 0,
+                         pos_of[np.maximum(dprev_row, 0)], -1)
+        return BandedStructure(
+            perm=perm, dprev=dprev,
+            block=np.asarray(self.block, dtype=np.int64),
+            n_blocks=n_blocks)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,6 +227,20 @@ class Formulation:
         Fields must already have exact zeros on padded cells.
         """
         raise NotImplementedError
+
+    # ---- optional: normal-equations structure ---------------------------
+
+    def banded_structure(self, n_max: int,
+                         m_max: int) -> Optional[BandedStructure]:
+        """Block/banded pattern of this family's normal equations.
+
+        ``None`` (the default) means no structure is known and the
+        solver must keep the dense/structured path.  Implementations
+        return a :class:`BandedStructure` whose row transform makes
+        ``F D F'`` block-tridiagonal-plus-border for EVERY lane of the
+        padded family (masked rows only shrink the pattern).
+        """
+        return None
 
     # ---- derived: batch verification -----------------------------------
 

@@ -27,10 +27,12 @@ import numpy as np
 
 from ..stacking import BatchedSystemSpec
 from .base import (
+    BandedStructure,
     BatchFields,
     BatchRows,
     FamilyDims,
     Formulation,
+    _BandedBuilder,
     register_formulation,
 )
 
@@ -122,6 +124,31 @@ class FrontendFormulation(Formulation):
         return np.concatenate(
             [fields.beta.reshape(bs.batch, -1), fields.finish[:, None]],
             axis=1)
+
+    def banded_structure(self, n_max: int, m_max: int) -> BandedStructure:
+        """Processor-column blocks; Eq 5 rows are a diff chain over j.
+
+        Block ``j`` holds Eq 5 row ``j`` (differenced: the prefix sum
+        ``sum_{k<j} beta_{1,k}`` and the dense ``T_f`` column cancel,
+        leaving columns of processors ``j-1``/``j``) and the Eq 4 rows
+        coupling ``j-1`` to ``j``; Eq 3 lives in block 0 and the Eq 6
+        mass row is the dense border.
+        """
+        N, M = n_max, m_max
+        dims = self.family_dims(N, M)
+        o4 = N - 1
+        o5 = (N - 1) + (N - 1) * (M - 1)
+        sb = _BandedBuilder()
+        for j in range(M):
+            if j == 0:
+                for i in range(N - 1):                       # Eq 3
+                    sb.add(i, 0)
+            sb.add(o5 + j, j, o5 + j - 1 if j else -1)       # Eq 5 (diff)
+            if j >= 1:
+                for i in range(N - 1):                       # Eq 4 (i, j-1)
+                    sb.add(o4 + i * (M - 1) + (j - 1), j)
+        sb.add(dims.n_ub, M)                                 # Eq 6 border
+        return sb.build(M)
 
     def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
                           tol: float):

@@ -27,10 +27,12 @@ import numpy as np
 
 from ..stacking import BatchedSystemSpec
 from .base import (
+    BandedStructure,
     BatchFields,
     BatchRows,
     FamilyDims,
     Formulation,
+    _BandedBuilder,
     register_formulation,
 )
 
@@ -166,6 +168,36 @@ class NoFrontendFormulation(Formulation):
         return np.concatenate(
             [fields.beta.reshape(B, -1), fields.TS.reshape(B, -1),
              fields.TF.reshape(B, -1), fields.finish[:, None]], axis=1)
+
+    def banded_structure(self, n_max: int, m_max: int) -> BandedStructure:
+        """Processor-column blocks over the full interval grid.
+
+        Every Eq 7/8/10/11/12 row touches one processor column and the
+        Eq 9 rows couple ``j-1`` to ``j``; only Eq 13's ``T_f`` column
+        is dense, removed by the Eq 13 diff chain.  Border: Eq 14.
+        """
+        N, M = n_max, m_max
+        dims = self.family_dims(N, M)
+        n_ub = dims.n_ub
+        o8, o9 = 0, (N - 1) * M
+        o11 = o9 + N * (M - 1)
+        o13 = o11 + 2 * (N - 1)
+        sb = _BandedBuilder()
+        for j in range(M):
+            if j == 0:
+                sb.add(n_ub + N * M, 0)                      # Eq 10
+                for r in range(o11, o11 + 2 * (N - 1)):      # Eq 11 + Eq 12
+                    sb.add(r, 0)
+            for i in range(N):                               # Eq 7 cells
+                sb.add(n_ub + i * M + j, j)
+            for i in range(N - 1):                           # Eq 8
+                sb.add(o8 + i * M + j, j)
+            if j >= 1:
+                for i in range(N):                           # Eq 9 (i, j-1)
+                    sb.add(o9 + i * (M - 1) + (j - 1), j)
+            sb.add(o13 + j, j, o13 + j - 1 if j else -1)     # Eq 13 (diff)
+        sb.add(n_ub + N * M + 1, M)                          # Eq 14 border
+        return sb.build(M)
 
     def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
                           tol: float):

@@ -46,7 +46,14 @@ import numpy as np
 
 from ..single_source import single_source_intervals
 from ..stacking import BatchedSystemSpec
-from .base import BatchFields, BatchRows, FamilyDims, register_formulation
+from .base import (
+    BandedStructure,
+    BatchFields,
+    BatchRows,
+    FamilyDims,
+    _BandedBuilder,
+    register_formulation,
+)
 from .nofrontend import NoFrontendFormulation
 
 __all__ = ["ReducedNoFrontendFormulation", "NOFRONTEND_REDUCED"]
@@ -213,6 +220,36 @@ class ReducedNoFrontendFormulation(NoFrontendFormulation):
         return np.concatenate(
             [fields.beta.reshape(B, -1), fields.TF[:, 1:, :].reshape(B, -1),
              fields.finish[:, None]], axis=1)
+
+    def banded_structure(self, n_max: int, m_max: int) -> BandedStructure:
+        """Processor-column blocks of the chain basis.
+
+        Two diff chains localize the dense couplings this basis
+        introduces: the Eq 8 source-1 rows (whose ``beta_{1,<=j}``
+        prefix sums make them mutually dense) and the Eq 13 rows (the
+        ``T_f`` column, plus the same prefix on single-source lanes).
+        Border: the Eq 14 mass row.
+        """
+        N, M = n_max, m_max
+        dims = self.family_dims(N, M)
+        o8, o9 = 0, (N - 1) * M
+        o11 = o9 + (N - 1) * (M - 1)
+        o13 = o11 + 2 * (N - 1)
+        sb = _BandedBuilder()
+        for j in range(M):
+            if j == 0 and N > 1:
+                for r in range(o11, o11 + 2 * (N - 1)):      # Eq 11 + Eq 12
+                    sb.add(r, 0)
+            if N > 1:
+                sb.add(o8 + j, j, o8 + j - 1 if j else -1)   # Eq 8 src 1 (diff)
+            for i in range(1, N - 1):                        # Eq 8, i >= 2
+                sb.add(o8 + M + (i - 1) * M + j, j)
+            if j >= 1 and N > 1:
+                for i in range(1, N):                        # Eq 9 (i, j-1)
+                    sb.add(o9 + (i - 1) * (M - 1) + (j - 1), j)
+            sb.add(o13 + j, j, o13 + j - 1 if j else -1)     # Eq 13 (diff)
+        sb.add(dims.n_ub, M)                                 # Eq 14 border
+        return sb.build(M)
 
     # constraint_checks inherited: always the ORIGINAL Sec 3.2 Eq 7-14 set.
 

@@ -51,6 +51,7 @@ def speedup_grid(
     solver: str = "auto",
     engine: str = "batched",
     formulation: Optional[str] = None,
+    kernel: str = "auto",
 ) -> SpeedupGrid:
     """Finish time + Eq 16 speedup over a (sources x processors) grid.
 
@@ -63,10 +64,12 @@ def speedup_grid(
     LP family stays tight); ``engine="scalar"`` is the original loop.
     ``formulation`` pins a registry formulation for either engine (the
     batched default is the column-reduced Sec 3.2 program when
-    ``frontend=False``).  Both engines raise :class:`InfeasibleError` if
-    any grid cell admits no schedule.  A pinned ``solver`` (anything but
-    "auto") implies the scalar engine, which is the only path that honors
-    it — deprecated; pass ``engine="scalar"`` explicitly.
+    ``frontend=False``) and ``kernel`` the interior-point linear algebra
+    (``"auto"`` / ``"banded"`` / ``"structured"`` / ``"dense"``).  Both
+    engines raise :class:`InfeasibleError` if any grid cell admits no
+    schedule.  A pinned ``solver`` (anything but "auto") implies the
+    scalar engine, which is the only path that honors it — deprecated;
+    pass ``engine="scalar"`` explicitly.
 
     Compatibility shim over :meth:`repro.core.dlt.engine.DLTEngine.grid`
     (shared default session — batched grid rows are warm-started).
@@ -76,6 +79,6 @@ def speedup_grid(
 
     solver, engine = _coerce_solver_engine(solver, engine, "speedup_grid")
     return get_default_engine().configured(
-        solver=solver, engine=engine).grid(
+        solver=solver, engine=engine, kernel=kernel).grid(
             spec, source_counts, processor_counts, frontend=frontend,
             formulation=formulation)

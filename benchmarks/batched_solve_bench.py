@@ -19,7 +19,11 @@ Sec 6 prefix family.  Measures:
 * warm-started vs cold ``engine.sweep`` on the Sec 6 prefix family:
   total IPM iterations and scenarios/sec (the warm seed completes a
   neighboring prefix's solution and runs under the adaptive reduced
-  iteration budget, so most lanes skip the approach phase).
+  iteration budget, so most lanes skip the approach phase),
+* sharded vs local executor on the mixed family when more than one JAX
+  device is visible (CI: 8 virtual host devices): results must be
+  bit-identical and lane throughput must scale — >= 3x when >= 4
+  physical cores back the devices.
 
 The jit compile is warmed before timing — a production sweep service
 pays it once per family shape (the engine LRU-caches compiled shapes,
@@ -41,7 +45,9 @@ warm-started sweep at fewer total IPM iterations AND >= cold
 scenarios/sec (2-core CPU reference; margins grow with cores).
 
 scripts/bench_compare.py diffs the emitted JSON against the committed
-BENCH_baseline.json and fails CI on regressions.
+BENCH_baseline.json and fails CI on regressions; the JSON carries a
+device-topology stamp (backend / device count / executor) so the gate
+never normalizes throughput across different topologies.
 """
 
 from __future__ import annotations
@@ -51,6 +57,7 @@ import os
 import sys
 import time
 
+import jax
 import numpy as np
 
 from repro.core.dlt import DLTEngine, SystemSpec, solve
@@ -66,8 +73,28 @@ FAMILIES = [
 #: The bench session: every pass shares this engine's compiled-shape LRU.
 #: CI exports ENGINE_COMPILE_CACHE (an actions/cache'd directory) so the
 #: smoke also exercises the persistent-compile path across workflow runs.
+#: ENGINE_EXECUTOR selects the execution backend for every pass
+#: ("local" default; the multi-device CI job exports "sharded" under 8
+#: virtual host devices).
 ENGINE = DLTEngine(
+    executor=os.environ.get("ENGINE_EXECUTOR", "local"),
     compile_cache_dir=os.environ.get("ENGINE_COMPILE_CACHE") or None)
+
+
+def _topology() -> dict:
+    """Device topology stamp written into the bench JSON.
+
+    ``scripts/bench_compare.py`` refuses to compare machine-normalized
+    throughput across runs whose topology differs — a 1-device baseline
+    against an N-device run is not a regression signal either way.
+    """
+    return dict(
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        executor=ENGINE.config.executor if isinstance(
+            ENGINE.config.executor, str) else ENGINE.config.executor.name,
+        cpu_count=os.cpu_count(),
+    )
 
 
 def _specs(rng, count, n, m):
@@ -157,9 +184,13 @@ def run_mixed(r, rng, smoke, out):
                      chunk_size=legacy_sample)
 
     _time_batched(specs, False)                      # warm (compile buckets)
-    t_new, sol = _time_batched(specs, False)
     _time_batched(specs[:legacy_sample], False, **legacy_kw)   # warm legacy
-    t_leg, leg = _time_batched(specs[:legacy_sample], False, **legacy_kw)
+    t_new, t_leg = None, None                        # best-of-3: the families
+    for _ in range(3):                               # are small enough that a
+        tn, sol = _time_batched(specs, False)        # single shot is dispatch-
+        tl, leg = _time_batched(specs[:legacy_sample], False, **legacy_kw)
+        t_new = tn if t_new is None else min(t_new, tn)  # noise bound
+        t_leg = tl if t_leg is None else min(t_leg, tl)
     t_leg *= len(specs) / legacy_sample              # extrapolate to B
     speedup = t_leg / t_new
 
@@ -301,15 +332,88 @@ def run_warm(r, rng, smoke, out):
         cold_scen_per_s=cold["scen_per_s"], warm_scen_per_s=warm["scen_per_s"])
 
 
+def run_sharded(r, rng, smoke, out):
+    """Sharded vs local executor on the mixed acceptance family.
+
+    Same engine, same bucketing — only the executor knob toggles, so
+    the ratio isolates lane sharding.  Results must be BIT-identical
+    (placement never changes per-lane arithmetic; see
+    executors/base.py).  Runs only when more than one JAX device is
+    visible — CI's multi-device job forces 8 virtual host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.  The >=3x
+    scenarios/sec target applies where >=4 physical cores back the
+    devices; on smaller hosts (virtual devices oversubscribe the
+    cores) the check degrades to bit-parity plus a no-slowdown floor,
+    and the measured scaling is recorded either way.
+    """
+    ndev = jax.device_count()
+    if ndev < 2:
+        r.note("sharded executor",
+               "skipped: 1 visible device (run under XLA_FLAGS="
+               "--xla_force_host_platform_device_count=8 to measure)")
+        out["sharded"] = None
+        return
+    B = 128 if smoke else 256
+    label = f"mixed nofe N=1..5 M=4..32 @{ndev}dev"
+    specs = _mixed_specs(rng, B, 5, 4, 32)
+
+    seconds, sols = {}, {}
+    for name in ("local", "sharded"):
+        eng = ENGINE.configured(executor=name)
+        eng.solve_batch(specs, frontend=False)          # warm compiles
+        best = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            sol = eng.solve_batch(specs, frontend=False)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        seconds[name], sols[name] = best, sol
+
+    speedup = seconds["local"] / seconds["sharded"]
+    bit = bool(
+        np.array_equal(sols["local"].finish_time, sols["sharded"].finish_time)
+        and np.array_equal(sols["local"].beta, sols["sharded"].beta)
+        and np.array_equal(sols["local"].status, sols["sharded"].status)
+        and np.array_equal(sols["local"].iterations,
+                           sols["sharded"].iterations))
+    cores = os.cpu_count() or 1
+    eff = min(ndev, cores)
+    table(["family", "batch", "local/s", "sharded/s", "speedup", "devices"],
+          [[label, B, round(B / seconds["local"], 1),
+            round(B / seconds["sharded"], 1), f"{speedup:.2f}x", ndev]],
+          fmt="{:>26}")
+    out["sharded"] = dict(
+        family=label, batch=B, device_count=ndev, cpu_count=cores,
+        local_per_s=B / seconds["local"],
+        sharded_per_s=B / seconds["sharded"], speedup=speedup,
+        bit_identical=bit,
+        fallbacks=sols["sharded"].fallback_count)
+    r.check("sharded results bit-identical to local executor", bit, True,
+            rtol=0)
+    if eff >= 4:
+        r.check("sharded >= 3x local scenarios/sec (>= 4 cores backing "
+                f"{ndev} devices)", bool(speedup >= 3.0), True, rtol=0)
+    else:
+        r.check(f"sharded executor no slower than local ({eff} core(s) "
+                f"oversubscribed by {ndev} virtual devices — full "
+                "scaling unmeasurable here)",
+                bool(speedup >= 0.8), True, rtol=0)
+    r.note("sharded lane-throughput scaling",
+           f"{speedup:.2f}x over local on {ndev} device(s), "
+           f"{cores} physical core(s)")
+
+
 def run(smoke=False):
     r = check("batched_solve_bench")
     rng = np.random.default_rng(0)
-    out = {"smoke": smoke, "uniform": [], "mixed": None, "banded": None,
-           "warm": None, "cache": None, "passed": None}
+    out = {"smoke": smoke, "topology": _topology(), "uniform": [],
+           "mixed": None, "banded": None, "warm": None, "sharded": None,
+           "counters": None, "cache": None, "passed": None}
     run_uniform(r, rng, smoke, out)
     run_mixed(r, rng, smoke, out)
     run_banded(r, rng, smoke, out)
     run_warm(r, rng, smoke, out)
+    run_sharded(r, rng, smoke, out)
 
     if smoke:
         # fast parity spot-check rides along with the smoke bench
@@ -331,6 +435,14 @@ def run(smoke=False):
     out["cache"] = {k: info[k] for k in
                     ("size", "maxsize", "hits", "misses",
                      "persist_dir", "persist_entries")}
+    st = ENGINE.stats
+    out["counters"] = dict(
+        banded_lanes=st.banded_lanes, pallas_lanes=st.pallas_lanes,
+        resolve_lanes=st.resolve_lanes, fallback_lanes=st.fallback_lanes,
+        kernel_fallbacks=st.kernel_fallbacks)
+    r.note("kernel lane counters",
+           f"banded {st.banded_lanes} / pallas {st.pallas_lanes} / "
+           f"resolves {st.resolve_lanes} / oracle {st.fallback_lanes}")
     out["passed"] = r.passed
 
     bench_out = os.environ.get("BENCH_OUT")

@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Measure the banded/structured kernel break-even on THIS backend.
+
+The batched IPM's ``kernel="auto"`` routes a family through the
+block-tridiagonal-arrowhead Cholesky once its constraint-row count
+reaches ``banded_min_rows``.  The hard-coded default (32) is a 2-core
+CPU measurement; the right number depends on the backend — GPU/TPU
+dense Cholesky is fast enough that the scan only wins later, while wide
+CPUs flip earlier.  This script times both kernels over a ladder of
+family sizes on the current backend and writes the measured break-even
+to a small JSON table::
+
+    {"cpu": {"banded_min_rows": 30,
+             "device_count": 1, "cpu_count": 2,
+             "measured": [{"m": 4, "rows": 19,
+                           "structured_s": ..., "banded_s": ...}, ...]},
+     ...}
+
+The engine consults the table whenever ``EngineConfig.banded_min_rows``
+is left ``None`` (the default): entry for ``jax.default_backend()``
+wins, the hard-coded 32 stays as fallback.  Location: ``--out`` here,
+``$DLT_KERNEL_AUTOTUNE`` (or ``./KERNEL_AUTOTUNE.json``) on the read
+side.  Entries for other backends in an existing table are preserved.
+
+Run:  PYTHONPATH=src python scripts/autotune_kernels.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.core.dlt import DLTEngine, SystemSpec  # noqa: E402
+from repro.core.dlt.engine import KERNEL_AUTOTUNE_PATH  # noqa: E402
+from repro.core.dlt.formulations import get_formulation  # noqa: E402
+
+#: Processor counts of the probe ladder (N=2 column-reduced no-front-end
+#: families) — spans ~13..105 constraint rows, bracketing every
+#: break-even we have observed.
+PROBE_M = (2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+
+def _family(rng, count, m):
+    return [
+        SystemSpec(
+            G=rng.uniform(0.1, 1.0, 2),
+            R=np.sort(rng.uniform(0.0, 2.0, 2)),
+            A=rng.uniform(0.5, 4.0, m),
+            J=float(rng.uniform(50.0, 200.0)),
+        )
+        for _ in range(count)
+    ]
+
+
+def _time_solve(eng, specs, repeats):
+    eng.solve_batch(specs, frontend=False)          # compile + warm
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        eng.solve_batch(specs, frontend=False)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measure(batch: int, repeats: int) -> list:
+    rng = np.random.default_rng(0)
+    fm = get_formulation("nofrontend_reduced")
+    # pure kernel timing: no verification / oracle passes, banded pinned
+    # from row 1 so the ladder itself decides nothing
+    base = dict(verify=False, oracle_fallback=False, warm_start=False)
+    eng_b = DLTEngine(kernel="banded", banded_min_rows=1, **base)
+    eng_s = DLTEngine(kernel="structured", **base)
+    out = []
+    for m in PROBE_M:
+        rows = fm.family_dims(2, m).n_rows
+        specs = _family(rng, batch, m)
+        tb = _time_solve(eng_b, specs, repeats)
+        ts = _time_solve(eng_s, specs, repeats)
+        out.append(dict(m=m, rows=rows, structured_s=ts, banded_s=tb))
+        print(f"  M={m:>3} rows={rows:>4}  structured {ts*1e3:8.1f} ms  "
+              f"banded {tb*1e3:8.1f} ms  ({ts/tb:4.1f}x)")
+    return out
+
+
+def break_even(measured: list) -> int:
+    """Smallest measured row count from which banded keeps winning.
+
+    Scans the ladder bottom-up for the first size where banded is at
+    least at parity AND never falls behind again above it (a single
+    noisy win below the true break-even must not drag the floor down).
+    Falls back to just past the largest measured size when the scans
+    never win (structured stays pinned on such backends).
+    """
+    for k, row in enumerate(measured):
+        if all(r["banded_s"] <= r["structured_s"] * 1.05
+               for r in measured[k:]):
+            return int(row["rows"])
+    return int(measured[-1]["rows"]) + 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        epilog="The engine reads the table when banded_min_rows=None "
+               "(env DLT_KERNEL_AUTOTUNE overrides the path).")
+    ap.add_argument("--out",
+                    default=os.path.join(os.path.dirname(__file__), "..",
+                                         KERNEL_AUTOTUNE_PATH),
+                    help="table path (default: repo root %(default)s)")
+    ap.add_argument("--batch", type=int, default=64,
+                    help="lanes per probe family (default: %(default)s)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats, best-of (default: %(default)s)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small batches / single repeat (CI smoke)")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.batch, args.repeats = 16, 1
+
+    backend = jax.default_backend()
+    print(f"== autotune banded_min_rows on backend {backend!r} "
+          f"({jax.device_count()} device(s), batch {args.batch}) ==")
+    measured = measure(args.batch, args.repeats)
+    rows = break_even(measured)
+    print(f"break-even: banded_min_rows = {rows}")
+
+    table = {}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                table = json.load(f)
+        except (OSError, ValueError):
+            print(f"warning: existing {args.out} unreadable, rewriting")
+            table = {}
+    table[backend] = dict(
+        banded_min_rows=rows,
+        device_count=jax.device_count(),
+        cpu_count=os.cpu_count(),
+        batch=args.batch,
+        measured=measured,
+        generated_by="scripts/autotune_kernels.py",
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    )
+    with open(args.out, "w") as f:
+        json.dump(table, f, indent=2, default=float)
+        f.write("\n")
+    print(f"table written to {args.out} — engines with banded_min_rows="
+          "None now consult it on this backend")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,6 +21,16 @@ family's baseline is rescaled by the ratio of the *reference* pass
 the baseline machine.  Ratio metrics (speedups, warm/cold) compare
 directly.  Families present on only one side are reported and skipped.
 
+Machine normalization assumes the two runs saw the SAME device
+topology: a 1-device baseline against an 8-virtual-device sharded run
+is not a regression signal in either direction.  Both JSONs carry a
+``topology`` stamp (backend, device count, executor) — when the stamps
+differ, every machine-normalized throughput floor is skipped (reported
+as such) and only topology-independent checks (fallback counts, warm
+>= cold, banded >= structured, the run's own self-checks) are
+enforced.  Rebaseline after changing topology on purpose
+(CONTRIBUTING.md).
+
 Rebaseline (after an intentional perf change, on a quiet machine)::
 
     BENCH_OUT=BENCH_engine.json bash scripts/check.sh
@@ -86,11 +96,34 @@ def _fallbacks(gate, label, cur, base):
                f"{cur} vs baseline {base} (any increase fails)")
 
 
+def _topology_match(gate: Gate, cur: dict, base: dict) -> bool:
+    """True when machine-normalized throughput floors are meaningful."""
+    ct, bt = cur.get("topology"), base.get("topology")
+    if not ct or not bt:
+        # legacy JSON without a stamp: keep the historical behavior
+        gate.skip("topology", "stamp missing on one side — assuming "
+                  "matching topologies (rebaseline to add it)")
+        return True
+    keys = ("backend", "device_count", "executor")
+    if all(ct.get(k) == bt.get(k) for k in keys):
+        return True
+    gate.skip(
+        "topology",
+        "mismatch — current "
+        + "/".join(str(ct.get(k)) for k in keys)
+        + " vs baseline "
+        + "/".join(str(bt.get(k)) for k in keys)
+        + "; machine-normalized throughput floors skipped "
+        "(rebaseline on this topology to re-arm them)")
+    return False
+
+
 def compare(cur: dict, base: dict, rtol: float) -> Gate:
     gate = Gate()
     if bool(cur.get("smoke")) != bool(base.get("smoke")):
         gate.skip("profile", "smoke/full mismatch vs baseline — "
                   "throughput families compared by label where shared")
+    topo_ok = _topology_match(gate, cur, base)
 
     base_uniform = {u["family"]: u for u in base.get("uniform") or []}
     for u in cur.get("uniform") or []:
@@ -99,8 +132,9 @@ def compare(cur: dict, base: dict, rtol: float) -> Gate:
         if b is None or b.get("batch") != u.get("batch"):
             gate.skip(label, "no matching baseline family")
             continue
-        _throughput(gate, label, u["batched_per_s"], b["batched_per_s"],
-                    rtol, u.get("scalar_per_s"), b.get("scalar_per_s"))
+        if topo_ok:
+            _throughput(gate, label, u["batched_per_s"], b["batched_per_s"],
+                        rtol, u.get("scalar_per_s"), b.get("scalar_per_s"))
         _fallbacks(gate, label, u.get("fallbacks", 0), b.get("fallbacks", 0))
 
     for key, ref in (("mixed", "pr1_per_s"), ("banded", "structured_per_s")):
@@ -111,12 +145,27 @@ def compare(cur: dict, base: dict, rtol: float) -> Gate:
         if not b:
             gate.skip(key, "no baseline section")
             continue
-        _throughput(gate, key, c["batched_per_s"] if key == "mixed"
-                    else c["banded_per_s"],
-                    b["batched_per_s"] if key == "mixed"
-                    else b["banded_per_s"],
-                    rtol, c.get(ref), b.get(ref))
+        if topo_ok:
+            _throughput(gate, key, c["batched_per_s"] if key == "mixed"
+                        else c["banded_per_s"],
+                        b["batched_per_s"] if key == "mixed"
+                        else b["banded_per_s"],
+                        rtol, c.get(ref), b.get(ref))
         _fallbacks(gate, key, c.get("fallbacks", 0), b.get("fallbacks", 0))
+
+    c, b = cur.get("sharded"), base.get("sharded")
+    if c:  # multi-device runs only; bit-identity self-checked per run
+        gate.check("sharded: bit-identical to local",
+                   bool(c.get("bit_identical")),
+                   f"speedup {c.get('speedup', 0):.2f}x on "
+                   f"{c.get('device_count')} device(s)")
+        if b:  # fallback counts compare whenever both runs have the section
+            _fallbacks(gate, "sharded", c.get("fallbacks", 0),
+                       b.get("fallbacks", 0))
+            if topo_ok:
+                _throughput(gate, "sharded", c["sharded_per_s"],
+                            b["sharded_per_s"], rtol,
+                            c.get("local_per_s"), b.get("local_per_s"))
     c = cur.get("banded")
     if c:
         gate.check("banded: beats structured", c["speedup"] >= 1.0,

@@ -21,9 +21,15 @@
 #    than cold fails the build.  Skip with PERF_GATE=0; rebaseline with
 #    `python scripts/bench_compare.py --write-baseline` (CONTRIBUTING.md).
 #
+# With ENGINE_EXECUTOR=sharded every bench pass runs through the
+# sharded executor (CI's multi-device job pairs it with
+# XLA_FLAGS=--xla_force_host_platform_device_count=8 so the lane mesh
+# has 8 virtual host devices to span).
+#
 # CI (.github/workflows/check.yml) runs this script on a bare profile
 # (numpy+jax+pytest only), a full-extras profile (+hypothesis +scipy),
-# and a minimum-supported-versions profile (oldest tested jax/numpy).
+# a multi-device profile (8 virtual devices + sharded executor), and a
+# minimum-supported-versions profile (oldest tested jax/numpy).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels.dlt_banded_chol import ops as _chol_kernels
 from .formulations import (
     BatchFields,
     FamilyDims,
@@ -615,7 +616,8 @@ def banded_dual_to_std(bfam: BandedFamilyLP, yb: np.ndarray) -> np.ndarray:
 
 
 def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
-                Fg, Hg, Ug, Bq):
+                Fg, Hg, Ug, Bq, impl: str = "scan",
+                interpret: bool = False):
     """Linear maps + block-tridiagonal-arrowhead normal solver (one lane).
 
     The normal matrix ``A D A'`` in the banded basis is block
@@ -624,6 +626,11 @@ def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
     cost is ``O(K s^2 w)`` via the per-block column supports and the
     factorization is a scan of ``s x s`` Cholesky steps — versus
     ``O(m^2 nv)`` build + ``O(m^3)`` factor on the dense paths.
+
+    The factor/substitution passes live in
+    :mod:`repro.kernels.dlt_banded_chol`; ``impl`` selects the pure-JAX
+    scans (``"scan"``) or the Pallas port (``"pallas"``, with
+    ``interpret`` running the kernel body uncompiled on any backend).
     """
     m, nv, K, s, p = geom.m, geom.nv, geom.K, geom.s, geom.p
     ext_prev = ext[geom.dprev_c]
@@ -665,46 +672,15 @@ def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
 
         Opad = jnp.concatenate([jnp.zeros((1, s, s)), Oblk[:-1]], axis=0)
 
-        def factor_step(carry, inp):
-            Cprev, Vprev, S = carry
-            Dk, Okp, Uk = inp
-            X = jax.scipy.linalg.solve_triangular(
-                Cprev, Okp.T, lower=True).T
-            Ck = jnp.linalg.cholesky(Dk - X @ X.T)
-            Vk = jax.scipy.linalg.solve_triangular(
-                Ck, (Uk - Vprev @ X.T).T, lower=True).T
-            return (Ck, Vk, S + Vk @ Vk.T), (Ck, X, Vk)
-
-        carry0 = (jnp.eye(s), jnp.zeros((p, s)), jnp.zeros((p, p)))
-        (_, _, S), (C, X, V) = jax.lax.scan(
-            factor_step, carry0, (Dblk, Opad, Ublk))
-        Cb = jnp.linalg.cholesky(Db - S)
-        Xnext = jnp.concatenate([X[1:], jnp.zeros((1, s, s))], axis=0)
+        C, X, V, Cb = _chol_kernels.factor(Dblk, Opad, Ublk, Db,
+                                           impl=impl, interpret=interpret)
 
         def solve_M(rhs):                                # rhs (m,)
             posc = jnp.where(geom.posmat >= 0, geom.posmat, 0)
             rband = rhs[posc] * (geom.posmat >= 0)       # (K, s)
             rb = rhs[geom.n_band:]
-
-            def fwd(u_prev, inp):
-                Ck, Xk, rk = inp
-                u = jax.scipy.linalg.solve_triangular(
-                    Ck, rk - Xk @ u_prev, lower=True)
-                return u, u
-
-            _, u = jax.lax.scan(fwd, jnp.zeros(s), (C, X, rband))
-            t = rb - jnp.einsum("kps,ks->p", V, u)
-            ub = jax.scipy.linalg.solve_triangular(Cb, t, lower=True)
-            wb = jax.scipy.linalg.solve_triangular(Cb.T, ub, lower=False)
-
-            def bwd(w_next, inp):
-                Ck, Xn, Vk, uk = inp
-                wk = jax.scipy.linalg.solve_triangular(
-                    Ck.T, uk - Xn.T @ w_next - Vk.T @ wb, lower=False)
-                return wk, wk
-
-            _, wband = jax.lax.scan(bwd, jnp.zeros(s), (C, Xnext, V, u),
-                                    reverse=True)
+            wband, wb = _chol_kernels.solve(C, X, V, Cb, rband, rb,
+                                            impl=impl, interpret=interpret)
             return jnp.concatenate(
                 [wband[geom.bkb, geom.slotb], wb])
 
@@ -714,19 +690,28 @@ def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
 
 
 def _hsde_ipm_banded(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
-                     max_iter: int, tol: float, geom=None, init=None):
-    """Banded instantiation of the HSDE kernel (one lane, vmapped)."""
+                     max_iter: int, tol: float, geom=None, init=None,
+                     impl: str = "scan", interpret: bool = False):
+    """Banded instantiation of the HSDE kernel (one lane, vmapped).
+
+    ``impl="pallas"`` swaps the factor/substitution scans for the
+    Pallas ``dlt_banded_chol`` kernel (``interpret`` runs it uncompiled
+    for backends without the native lowering).
+    """
     A_mul, AT_mul, make_solver = _banded_ops(
-        geom, F, ext, dcoef, colix, Fg, Hg, Ug, Bq)
+        geom, F, ext, dcoef, colix, Fg, Hg, Ug, Bq,
+        impl=impl, interpret=interpret)
     return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol,
                           init=init)
 
 
 def _hsde_ipm_banded_warm(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
-                          x0, y0, s0, max_iter: int, tol: float, geom=None):
+                          x0, y0, s0, max_iter: int, tol: float, geom=None,
+                          impl: str = "scan", interpret: bool = False):
     """Banded instantiation restarted from a banded-basis warm triple."""
     return _hsde_ipm_banded(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
-                            max_iter, tol, geom=geom, init=(x0, y0, s0))
+                            max_iter, tol, geom=geom, init=(x0, y0, s0),
+                            impl=impl, interpret=interpret)
 
 
 def _hsde_ipm_dense_warm(c, A, b, x0, y0, s0, max_iter: int, tol: float):

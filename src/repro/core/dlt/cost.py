@@ -53,30 +53,6 @@ class ProcessorSweep:
         return g
 
 
-def _coerce_solver_engine(solver: str, engine: str, caller: str):
-    """Legacy solver/engine coupling of the free-function shims.
-
-    A pinned ``solver`` (anything but "auto") used to silently imply the
-    scalar engine per a docstring note only.  The shims keep that
-    behavior for compatibility but now say so out loud; new code should
-    build a :class:`~repro.core.dlt.engine.DLTEngine` where the same
-    combination is a validated ``ValueError``.
-    """
-    if engine not in ("batched", "scalar"):
-        raise ValueError(f"unknown engine {engine!r}: use 'batched' or 'scalar'")
-    if solver != "auto" and engine == "batched":
-        import warnings
-
-        warnings.warn(
-            f"{caller}: solver={solver!r} is only honored by the scalar "
-            "engine — falling back to engine='scalar'. This implicit "
-            "downgrade is deprecated: pass engine='scalar' explicitly "
-            "(DLTEngine raises ValueError on this combination).",
-            DeprecationWarning, stacklevel=3)
-        engine = "scalar"
-    return solver, engine
-
-
 def sweep_processors(
     spec: SystemSpec,
     frontend: bool = True,
@@ -96,10 +72,12 @@ def sweep_processors(
     batched default is the column-reduced Sec 3.2 program when
     ``frontend=False``) and ``kernel`` the interior-point linear algebra
     (``"auto"`` routes large banded-structure families through the
-    block-tridiagonal Cholesky; ``"structured"``/``"banded"``/``"dense"``
-    pin a path).  A pinned ``solver`` (anything but "auto") implies
-    the scalar engine, which is the only path that honors it — deprecated;
-    pass ``engine="scalar"`` explicitly.
+    block-tridiagonal Cholesky; ``"structured"``/``"banded"``/
+    ``"pallas_banded"``/``"dense"`` pin a path).  A pinned ``solver``
+    (anything but "auto") requires ``engine="scalar"`` — the only path
+    that honors it — and raises ``ValueError`` otherwise.  (The PR-1-era
+    silent downgrade to the scalar engine, deprecated since the session
+    API landed, has been removed.)
 
     Compatibility shim over :meth:`repro.core.dlt.engine.DLTEngine.sweep`
     (shared default session — batched prefix sweeps are warm-started
@@ -107,7 +85,6 @@ def sweep_processors(
     """
     from .engine import get_default_engine
 
-    solver, engine = _coerce_solver_engine(solver, engine, "sweep_processors")
     return get_default_engine().configured(
         solver=solver, engine=engine, kernel=kernel).sweep(
             spec, frontend=frontend, m_max=m_max, formulation=formulation)

@@ -24,6 +24,11 @@ shares.  The session API keeps it:
   converge in a fraction of the cold iteration budget.  Results stay
   verified against the paper constraint sets and simplex-certified on
   fallback, exactly like cold solves.
+* **Pluggable executors** (:mod:`repro.core.dlt.executors`): the engine
+  resolves *what* to run (the kernel plan) and hands the compiled-lane
+  execution to the config's executor — single-device ``local`` or
+  ``shard_map``-over-a-lane-mesh ``sharded`` — with bit-identical
+  results either way; compile-cache keys carry the executor token.
 
 The free functions in :mod:`repro.core.dlt` remain as thin shims over a
 shared default engine (:func:`get_default_engine`), so repeat calls
@@ -34,6 +39,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import os
 from typing import Iterable, Iterator, Optional, Sequence, Tuple, Union
 
@@ -43,6 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ...kernels.dlt_banded_chol import ops as _chol_kernels
 from .batched import (
     COMPILE_CACHE_SIZE,
     DEFAULT_M_BUCKET_EDGES,
@@ -68,6 +75,7 @@ from .batched import (
     densify_family,
 )
 from .cost import ProcessorSweep
+from .executors import Executor, available_executors, resolve_executor
 from .formulations import BatchFields, Formulation, get_formulation
 from .single_source import single_source_intervals
 from .solve import solve as _scalar_solve
@@ -85,14 +93,61 @@ __all__ = [
 _ENGINES = ("batched", "scalar")
 _BUCKETS = ("size", "none")
 _SOLVERS = ("auto", "simplex", "highs")
-_KERNELS = ("auto", "banded", "structured", "dense")
+_KERNELS = ("auto", "banded", "pallas_banded", "structured", "dense")
 
 #: Row-count floor below which ``kernel="auto"`` keeps the structured
 #: path: the block-tridiagonal scan only amortizes its per-step overhead
 #: once the normal equations are big enough (measured break-even ~30
 #: rows on 2-core CPU; the win grows superlinearly past it — ~7x at 50
-#: rows, ~20x at 100).
+#: rows, ~20x at 100).  This is the FALLBACK when ``banded_min_rows``
+#: is left ``None`` and no autotune table covers the current backend —
+#: run ``scripts/autotune_kernels.py`` to measure the break-even on
+#: yours (see :func:`_autotuned_min_rows`).
 BANDED_MIN_ROWS = 32
+
+#: Environment variable overriding where the engine looks for the
+#: per-backend kernel autotune table written by
+#: ``scripts/autotune_kernels.py``.
+KERNEL_AUTOTUNE_ENV = "DLT_KERNEL_AUTOTUNE"
+
+#: Default autotune-table path (relative to the working directory —
+#: the autotune script writes to the repo root by default).
+KERNEL_AUTOTUNE_PATH = "KERNEL_AUTOTUNE.json"
+
+
+@functools.lru_cache(maxsize=16)
+def _read_autotune_table(path: str, mtime: float) -> Optional[dict]:
+    # mtime keys the cache so a rewritten table is picked up mid-process
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        return None
+    return table if isinstance(table, dict) else None
+
+
+def _autotuned_min_rows(backend: str) -> Optional[int]:
+    """Measured banded/structured break-even for ``backend``, if tabled.
+
+    Reads the JSON table written by ``scripts/autotune_kernels.py``
+    (``$DLT_KERNEL_AUTOTUNE`` or ``KERNEL_AUTOTUNE.json``), shaped
+    ``{backend: {"banded_min_rows": int, ...}, ...}``.  Returns ``None``
+    when no table or no entry for this backend exists — callers fall
+    back to the hard-coded :data:`BANDED_MIN_ROWS`.
+    """
+    path = os.environ.get(KERNEL_AUTOTUNE_ENV, KERNEL_AUTOTUNE_PATH)
+    try:
+        mtime = os.stat(path).st_mtime
+    except OSError:
+        return None
+    table = _read_autotune_table(path, mtime)
+    if table is None:
+        return None
+    try:
+        rows = int(table[backend]["banded_min_rows"])
+    except (KeyError, TypeError, ValueError):
+        return None
+    return rows if rows >= 1 else None
 
 FormulationLike = Union[Formulation, str, None]
 
@@ -126,13 +181,36 @@ class EngineConfig:
         ``"auto"`` picks the banded path whenever the formulation
         publishes a :class:`~repro.core.dlt.formulations.BandedStructure`
         and the family has at least ``banded_min_rows`` constraint rows
-        (falling back to ``"structured"`` otherwise); ``"banded"`` pins
-        the block-tridiagonal-arrowhead Cholesky (a ``ValueError`` at
-        solve time if the formulation has no structure); ``"structured"``
-        pins the ``[F | I]`` dense-Cholesky path; ``"dense"`` runs the
-        generic dense kernel (debug / apples-to-apples baselines).
+        (falling back to ``"structured"`` otherwise; on backends with
+        the Pallas ``dlt_banded_chol`` lowering it upgrades further to
+        the Pallas tier, recording ``stats.kernel_fallbacks`` when a
+        candidate backend turns out unsupported); ``"banded"`` pins
+        the block-tridiagonal-arrowhead Cholesky scans (a ``ValueError``
+        at solve time if the formulation has no structure);
+        ``"pallas_banded"`` pins the Pallas port of those scans (a
+        ``ValueError`` on backends without the lowering unless
+        ``pallas_interpret`` is set); ``"structured"`` pins the
+        ``[F | I]`` dense-Cholesky path; ``"dense"`` runs the generic
+        dense kernel (debug / apples-to-apples baselines).
       banded_min_rows: minimum constraint-row count for ``"auto"`` to
-        choose the banded kernel.
+        choose the banded kernel.  ``None`` (default) consults the
+        per-backend autotune table written by
+        ``scripts/autotune_kernels.py`` and falls back to the
+        hard-coded 32-row break-even (a 2-core CPU measurement) when
+        no table covers the current backend.
+      pallas_interpret: run the Pallas kernel in interpret mode (the
+        body executes as plain jnp ops on any backend) — the testing /
+        CI-parity knob; makes ``kernel="pallas_banded"`` legal on CPU.
+        It never changes ``"auto"`` routing: interpret mode is far
+        slower than the scan kernels, so it only runs when pinned.
+      executor: how compiled lane batches run — ``"local"`` (one
+        ``jit(vmap)`` on the default device, the classic path),
+        ``"sharded"`` (``shard_map`` over a 1-D lane mesh across the
+        visible devices; per-shard IPM loops exit independently), or an
+        :class:`~repro.core.dlt.executors.Executor` instance.
+      devices: cap on how many visible devices a multi-device executor
+        spreads lanes over (``None`` = all; must be ``None`` when
+        ``executor`` is an instance).
       warm_start: warm-start parametric families (``sweep`` / ``grid``):
         cold-solve every ``warm_stride``-th lane, restart the rest from
         the nearest anchor's shifted solution triple.
@@ -166,7 +244,10 @@ class EngineConfig:
     bucket: str = "size"
     m_bucket_edges: Tuple[int, ...] = DEFAULT_M_BUCKET_EDGES
     kernel: str = "auto"
-    banded_min_rows: int = BANDED_MIN_ROWS
+    banded_min_rows: Optional[int] = None
+    pallas_interpret: bool = False
+    executor: Union[str, Executor] = "local"
+    devices: Optional[int] = None
     warm_start: bool = True
     warm_stride: int = 8
     warm_shift: float = 1e-2
@@ -212,9 +293,26 @@ class EngineConfig:
         if self.kernel not in _KERNELS:
             raise ValueError(
                 f"unknown kernel {self.kernel!r}: use one of {_KERNELS}")
-        if self.banded_min_rows < 1:
+        if self.banded_min_rows is not None and self.banded_min_rows < 1:
             raise ValueError(
-                f"banded_min_rows must be >= 1, got {self.banded_min_rows}")
+                f"banded_min_rows must be >= 1 (or None to consult the "
+                f"autotune table), got {self.banded_min_rows}")
+        if isinstance(self.executor, str):
+            if self.executor not in available_executors():
+                raise ValueError(
+                    f"unknown executor {self.executor!r}: use one of "
+                    f"{available_executors()} or an Executor instance")
+        elif not isinstance(self.executor, Executor):
+            raise ValueError(
+                f"executor must be a registry name or an Executor "
+                f"instance, got {type(self.executor).__name__}")
+        if self.devices is not None:
+            if isinstance(self.executor, Executor):
+                raise ValueError(
+                    "devices= cannot be combined with an Executor "
+                    "instance — configure the instance itself")
+            if self.devices < 1:
+                raise ValueError(f"devices must be >= 1, got {self.devices}")
         if self.min_warm_iter < 1:
             raise ValueError(
                 f"min_warm_iter must be >= 1, got {self.min_warm_iter}")
@@ -244,7 +342,10 @@ class EngineStats:
     warm_lanes: int = 0         # lanes restarted from an anchor solution
     cold_iterations: int = 0    # IPM iterations spent on cold lanes
     warm_iterations: int = 0    # IPM iterations spent on warm lanes
-    banded_lanes: int = 0       # lanes routed through the banded kernel
+    banded_lanes: int = 0       # lanes routed through the banded scan kernel
+    pallas_lanes: int = 0       # lanes routed through the Pallas banded kernel
+    kernel_fallbacks: int = 0   # auto-routing downgrades (pallas->banded,
+                                # structureless->structured), per lane group
     resolve_lanes: int = 0      # warm lanes re-solved at the full budget
     fallback_lanes: int = 0     # lanes re-solved by the simplex oracle
     cache_hits: int = 0         # compiled-executable LRU hits
@@ -266,6 +367,7 @@ class _EngineState:
         self.counters = dict(
             batches=0, lanes=0, cold_lanes=0, warm_lanes=0,
             cold_iterations=0, warm_iterations=0, banded_lanes=0,
+            pallas_lanes=0, kernel_fallbacks=0,
             resolve_lanes=0, fallback_lanes=0,
             cache_hits=0, cache_misses=0)
 
@@ -354,6 +456,7 @@ class DLTEngine:
             config = config.replace(**overrides)
         self.config = config
         self._state = _EngineState()
+        self._executor: Optional[Executor] = None
         if config.compile_cache_dir is not None:
             _enable_persistent_cache(config.compile_cache_dir)
 
@@ -371,6 +474,7 @@ class DLTEngine:
         eng = object.__new__(DLTEngine)
         eng.config = self.config.replace(**overrides)
         eng._state = self._state
+        eng._executor = None
         if (eng.config.compile_cache_dir is not None
                 and eng.config.compile_cache_dir != self.config.compile_cache_dir):
             _enable_persistent_cache(eng.config.compile_cache_dir)
@@ -413,34 +517,92 @@ class DLTEngine:
 
     # ---- kernel routing + compiled executables ---------------------------
 
+    def _resolve_executor(self) -> Executor:
+        """The config's executor, instantiated once per engine view."""
+        if self._executor is None:
+            self._executor = resolve_executor(self.config.executor,
+                                              self.config.devices)
+        return self._executor
+
+    def _banded_min_rows(self) -> int:
+        """Effective ``auto`` break-even: pinned, autotuned, or default."""
+        if self.config.banded_min_rows is not None:
+            return self.config.banded_min_rows
+        tuned = _autotuned_min_rows(jax.default_backend())
+        return BANDED_MIN_ROWS if tuned is None else tuned
+
+    @staticmethod
+    def _pallas_candidate() -> bool:
+        """Should ``auto`` even consider the Pallas kernel tier here?
+
+        Only accelerator backends, where the native lowering plausibly
+        exists and pays.  ``pallas_interpret`` deliberately does NOT
+        make Pallas an auto candidate: interpret mode is a correctness
+        / parity tool orders of magnitude slower than the scans, so it
+        only runs when the kernel is PINNED (``kernel="pallas_banded"``)
+        — never routed to implicitly.
+        """
+        return jax.default_backend() in ("tpu", "gpu")
+
     def _kernel_plan(self, fm: Formulation, sub: BatchedSystemSpec,
                      fam: FamilyLP) -> _KernelPlan:
         """Resolve the config's ``kernel`` knob for one padded group.
 
         ``auto`` routes through the banded kernel whenever the
         formulation publishes a banded structure AND the family is big
-        enough to amortize the block scan (``banded_min_rows``); it
-        falls back to the structured dense-Cholesky path otherwise.
-        Pinning ``kernel="banded"`` on a structureless formulation is a
+        enough to amortize the block scan (``banded_min_rows``, which
+        consults the per-backend autotune table when left ``None``),
+        upgrading to the Pallas tier when the backend supports it —
+        a candidate backend without support falls back to the scans and
+        records ``stats.kernel_fallbacks``.  It falls back to the
+        structured dense-Cholesky path otherwise (also recorded).
+        Pinning ``kernel="banded"`` on a structureless formulation, or
+        ``kernel="pallas_banded"`` on an unsupported backend, is a
         ``ValueError`` rather than a silent downgrade.
         """
         cfg = self.config
         kind = cfg.kernel
-        if kind in ("auto", "banded"):
+        struct = None
+        if kind in ("auto", "banded", "pallas_banded"):
             struct = fm.banded_structure(sub.n_max, sub.m_max)
+        if kind == "pallas_banded":
+            if struct is None:
+                raise ValueError(
+                    f"kernel='pallas_banded' but formulation {fm.name!r} "
+                    "publishes no banded_structure — use kernel='auto' "
+                    "(structured fallback) or kernel='structured'")
+            if not _chol_kernels.pallas_supported(
+                    interpret=cfg.pallas_interpret):
+                raise ValueError(
+                    "kernel='pallas_banded' is not supported on the "
+                    f"{jax.default_backend()!r} backend — the Pallas "
+                    "dlt_banded_chol kernel lowers on TPU only; set "
+                    "pallas_interpret=True (parity testing) or use "
+                    "kernel='auto' / 'banded'")
+        elif kind in ("auto", "banded"):
             if struct is None:
                 if kind == "banded":
                     raise ValueError(
                         f"kernel='banded' but formulation {fm.name!r} "
                         "publishes no banded_structure — use kernel='auto' "
                         "(structured fallback) or kernel='structured'")
+                self._state.bump(kernel_fallbacks=1)
                 kind = "structured"
-            elif kind == "auto" and fam.dims.n_rows < cfg.banded_min_rows:
+            elif kind == "auto" and fam.dims.n_rows < self._banded_min_rows():
                 kind = "structured"
+            elif kind == "auto" and self._pallas_candidate():
+                if _chol_kernels.pallas_supported(
+                        interpret=cfg.pallas_interpret):
+                    kind = "pallas_banded"
+                else:
+                    # e.g. GPU: banded-capable family, Pallas candidate,
+                    # but no lowering — fall back to the scans, visibly
+                    self._state.bump(kernel_fallbacks=1)
+                    kind = "banded"
             else:
                 kind = "banded"
-        if kind == "banded":
-            return _KernelPlan(kind="banded", fm_name=fm.name, fam=fam,
+        if kind in ("banded", "pallas_banded"):
+            return _KernelPlan(kind=kind, fm_name=fm.name, fam=fam,
                                bfam=build_banded_family(fam, struct))
         if kind == "dense":
             return _KernelPlan(kind="dense", fm_name=fm.name, fam=fam,
@@ -449,19 +611,29 @@ class DLTEngine:
 
     def _executable(self, plan: _KernelPlan, B: int, warm: bool,
                     max_iter: int):
-        """AOT-compiled kernel for one (plan, batch, budget) shape (LRU'd)."""
+        """AOT-compiled kernel for one (plan, batch, budget) shape (LRU'd).
+
+        The compile itself is delegated to the config's executor (one
+        ``jit(vmap)`` locally, ``shard_map`` over the lane mesh when
+        sharded); the LRU key carries the executor's ``cache_token`` so
+        views with different placement never share an executable.
+        """
         cfg, st = self.config, self._state
+        executor = self._resolve_executor()
+        etok = executor.cache_token()
         tol = float(cfg.tol)
         dims = plan.fam.dims
-        if plan.kind == "banded":
+        if plan.kind in ("banded", "pallas_banded"):
             g = plan.bfam.geom
-            key = ("banded", plan.fm_name, B, g.m, g.nv, g.K, g.s, g.p,
-                   plan.bfam.w, max_iter, tol, warm)
+            key = (plan.kind, plan.fm_name, B, g.m, g.nv, g.K, g.s, g.p,
+                   plan.bfam.w, max_iter, tol, warm,
+                   cfg.pallas_interpret, etok)
         elif plan.kind == "dense":
-            key = ("dense", B, dims.n_rows, dims.n_std, max_iter, tol, warm)
+            key = ("dense", B, dims.n_rows, dims.n_std, max_iter, tol,
+                   warm, etok)
         else:
             key = ("structured", B, dims.n_rows, dims.nv, dims.n_eq,
-                   max_iter, tol, warm)
+                   max_iter, tol, warm, etok)
         exe = st.compiled.get(key)
         if exe is not None:
             st.compiled.move_to_end(key)
@@ -473,11 +645,14 @@ class DLTEngine:
         mrows, nv, n_std = dims.n_rows, dims.nv, dims.n_std
         winit = [sds((B, n_std), f8), sds((B, mrows), f8),
                  sds((B, n_std), f8)]
-        if plan.kind == "banded":
+        if plan.kind in ("banded", "pallas_banded"):
             g = plan.bfam.geom
             w = plan.bfam.w
             kern = _hsde_ipm_banded_warm if warm else _hsde_ipm_banded
-            fn = functools.partial(kern, max_iter=max_iter, tol=tol, geom=g)
+            kw = dict(max_iter=max_iter, tol=tol, geom=g)
+            if plan.kind == "pallas_banded":
+                kw.update(impl="pallas", interpret=cfg.pallas_interpret)
+            fn = functools.partial(kern, **kw)
             in_axes = ((0, 0, 0, 0, 0, None, 0, 0, 0, 0)
                        + ((0, 0, 0) if warm else ()))
             args = [sds((B, n_std), f8), sds((B, g.m, g.nv), f8),
@@ -485,22 +660,22 @@ class DLTEngine:
                     sds((g.K, w), np.dtype(np.int64)),
                     sds((B, g.K, g.s, w), f8), sds((B, g.K, g.s, w), f8),
                     sds((B, g.K, g.p, w), f8), sds((B, g.p, g.nv), f8)]
-            exe = (jax.jit(jax.vmap(fn, in_axes=in_axes))
-                   .lower(*(args + (winit if warm else []))).compile())
         elif plan.kind == "dense":
             kern = _hsde_ipm_dense_warm if warm else _hsde_ipm
             fn = functools.partial(kern, max_iter=max_iter, tol=tol)
+            in_axes = (0, 0, 0)
             args = [sds((B, n_std), f8), sds((B, mrows, n_std), f8),
                     sds((B, mrows), f8)]
-            exe = (jax.jit(jax.vmap(fn))
-                   .lower(*(args + (winit if warm else []))).compile())
         else:
             kern = _hsde_ipm_structured_warm if warm else _hsde_ipm_structured
             fn = functools.partial(kern, max_iter=max_iter, tol=tol)
+            in_axes = (0, 0, 0, 0)
             args = [sds((B, n_std), f8), sds((B, mrows, nv), f8),
                     sds((B, mrows), f8), sds((B, dims.n_eq), f8)]
-            exe = (jax.jit(jax.vmap(fn))
-                   .lower(*(args + (winit if warm else []))).compile())
+        if warm and plan.kind not in ("banded", "pallas_banded"):
+            in_axes = in_axes + (0, 0, 0)
+        exe = executor.compile(fn, in_axes,
+                               tuple(args + (winit if warm else [])))
         st.compiled[key] = exe
         while len(st.compiled) > cfg.compile_cache_size:
             st.compiled.popitem(last=False)
@@ -527,6 +702,7 @@ class DLTEngine:
         the config budget (the adaptive warm budget rides this).
         """
         cfg = self.config
+        executor = self._resolve_executor()
         fam = plan.fam
         B = fam.c.shape[0]
         warm = init is not None
@@ -536,11 +712,10 @@ class DLTEngine:
             for lo in range(0, B, cfg.chunk_size):
                 hi = min(lo + cfg.chunk_size, B)
                 Bk = hi - lo
-                Bp = (4 * ((Bk + 3) // 4) if warm
-                      else 1 << (Bk - 1).bit_length())
+                Bp = executor.pad_batch(Bk, warm)
                 chunk = np.arange(lo, hi)
                 bchunk = None
-                if plan.kind == "banded":
+                if plan.kind in ("banded", "pallas_banded"):
                     bchunk = _banded_take(plan.bfam, chunk)
                     parts = [bchunk.c, bchunk.F, bchunk.b, bchunk.ext,
                              bchunk.dcoef, bchunk.Fg, bchunk.Hg, bchunk.Ug,
@@ -563,7 +738,7 @@ class DLTEngine:
                         for p in parts]
                 exe = self._executable(plan, Bp, warm, mi)
                 jparts = [jnp.asarray(p, jnp.float64) for p in parts]
-                if plan.kind == "banded":
+                if plan.kind in ("banded", "pallas_banded"):
                     jparts.insert(5, jnp.asarray(plan.bfam.colix))
                 x, _, st, ni, y, s = exe(*jparts)
                 xs.append(np.asarray(x)[:Bk])
@@ -571,7 +746,7 @@ class DLTEngine:
                 nits.append(np.asarray(ni)[:Bk])
                 if want_state:
                     yk = np.asarray(y)[:Bk]
-                    if plan.kind == "banded":
+                    if plan.kind in ("banded", "pallas_banded"):
                         yk = banded_dual_to_std(bchunk, yk)
                     ys.append(yk)
                     ss.append(np.asarray(s)[:Bk])
@@ -710,6 +885,8 @@ class DLTEngine:
         plan = self._kernel_plan(fm, sub, fam)
         if plan.kind == "banded":
             st8.bump(banded_lanes=B)
+        elif plan.kind == "pallas_banded":
+            st8.bump(pallas_lanes=B)
         if not warm or B <= self.config.warm_stride:
             x, st, ni = self._solve_family(plan)
             st8.bump(lanes=B, cold_lanes=B, cold_iterations=ni.sum())

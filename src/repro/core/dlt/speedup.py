@@ -65,19 +65,19 @@ def speedup_grid(
     ``formulation`` pins a registry formulation for either engine (the
     batched default is the column-reduced Sec 3.2 program when
     ``frontend=False``) and ``kernel`` the interior-point linear algebra
-    (``"auto"`` / ``"banded"`` / ``"structured"`` / ``"dense"``).  Both
-    engines raise :class:`InfeasibleError` if any grid cell admits no
-    schedule.  A pinned ``solver`` (anything but "auto") implies the
-    scalar engine, which is the only path that honors it — deprecated;
-    pass ``engine="scalar"`` explicitly.
+    (``"auto"`` / ``"banded"`` / ``"pallas_banded"`` / ``"structured"``
+    / ``"dense"``).  Both engines raise :class:`InfeasibleError` if any
+    grid cell admits no schedule.  A pinned ``solver`` (anything but
+    "auto") requires ``engine="scalar"`` — the only path that honors it
+    — and raises ``ValueError`` otherwise.  (The PR-1-era silent
+    downgrade, deprecated since the session API landed, has been
+    removed.)
 
     Compatibility shim over :meth:`repro.core.dlt.engine.DLTEngine.grid`
     (shared default session — batched grid rows are warm-started).
     """
-    from .cost import _coerce_solver_engine
     from .engine import get_default_engine
 
-    solver, engine = _coerce_solver_engine(solver, engine, "speedup_grid")
     return get_default_engine().configured(
         solver=solver, engine=engine, kernel=kernel).grid(
             spec, source_counts, processor_counts, frontend=frontend,

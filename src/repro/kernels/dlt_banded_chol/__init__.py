@@ -1,0 +1,21 @@
+from . import kernel, ops, ref
+from .ops import (
+    banded_factor,
+    banded_solve_bwd,
+    banded_solve_fwd,
+    factor,
+    pallas_supported,
+    solve,
+)
+
+__all__ = [
+    "kernel",
+    "ops",
+    "ref",
+    "banded_factor",
+    "banded_solve_fwd",
+    "banded_solve_bwd",
+    "factor",
+    "solve",
+    "pallas_supported",
+]

@@ -1,0 +1,124 @@
+"""Pure-JAX scan oracle for the block-tridiagonal-arrowhead Cholesky.
+
+The batched DLT interior point reduces each iteration's normal equations
+to a block-tridiagonal system (diagonal blocks ``D_k``, sub-diagonal
+couplings ``O_k``) with a small dense border (``U_k`` rows, corner
+``D_b``) from the mass-conservation row:
+
+    [ D_0  O_1'              U_0' ]
+    [ O_1  D_1  O_2'         U_1' ]
+    [      O_2  D_2   ...    U_2' ]
+    [            ...   ...    ... ]
+    [ U_0  U_1  U_2   ...    D_b  ]
+
+``banded_factor`` runs the blocked Cholesky as a :func:`jax.lax.scan` of
+``s x s`` steps; ``banded_solve_fwd`` / ``banded_solve_bwd`` are the
+matching substitution scans.  This is both the production path on
+backends without the Pallas kernel and the parity oracle the Pallas
+implementation (:mod:`.kernel`) is tested against.
+
+Shapes (one lane — callers vmap): ``Dblk (K, s, s)``, ``Opad (K, s, s)``
+(``Opad[k] = O_k``, with ``Opad[0] = 0``), ``Ublk (K, p, s)``,
+``Db (p, p)``, rhs split into ``rband (K, s)`` and ``rb (p,)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "banded_factor",
+    "banded_solve_fwd",
+    "banded_solve_bwd",
+    "factor",
+    "solve",
+]
+
+
+def banded_factor(Dblk, Opad, Ublk):
+    """Blocked Cholesky of the band: ``(C, X, V, S)``.
+
+    ``C[k]`` is the Cholesky factor of the k-th pivot, ``X[k]`` the
+    eliminated sub-diagonal coupling (``X[k] = O_k C_{k-1}^-T``),
+    ``V[k]`` the eliminated border rows and ``S = sum_k V_k V_k'`` the
+    border Schur accumulation (the caller factors ``D_b - S``).
+    """
+    K, s, _ = Dblk.shape
+    p = Ublk.shape[1]
+    dt = Dblk.dtype
+
+    def factor_step(carry, inp):
+        Cprev, Vprev, S = carry
+        Dk, Okp, Uk = inp
+        X = jax.scipy.linalg.solve_triangular(Cprev, Okp.T, lower=True).T
+        Ck = jnp.linalg.cholesky(Dk - X @ X.T)
+        Vk = jax.scipy.linalg.solve_triangular(
+            Ck, (Uk - Vprev @ X.T).T, lower=True).T
+        return (Ck, Vk, S + Vk @ Vk.T), (Ck, X, Vk)
+
+    carry0 = (jnp.eye(s, dtype=dt), jnp.zeros((p, s), dt),
+              jnp.zeros((p, p), dt))
+    (_, _, S), (C, X, V) = jax.lax.scan(
+        factor_step, carry0, (Dblk, Opad, Ublk))
+    return C, X, V, S
+
+
+def banded_solve_fwd(C, X, rband):
+    """Forward substitution along the band: ``u (K, s)``."""
+    s = C.shape[1]
+
+    def fwd(u_prev, inp):
+        Ck, Xk, rk = inp
+        u = jax.scipy.linalg.solve_triangular(
+            Ck, rk - Xk @ u_prev, lower=True)
+        return u, u
+
+    _, u = jax.lax.scan(fwd, jnp.zeros(s, C.dtype), (C, X, rband))
+    return u
+
+
+def banded_solve_bwd(C, Xnext, V, u, wb):
+    """Backward substitution along the band given the border solve ``wb``.
+
+    ``Xnext[k] = X[k+1]`` (zero-padded at the end) so each step only
+    reads its own scan slice.  Returns ``wband (K, s)``.
+    """
+    s = C.shape[1]
+
+    def bwd(w_next, inp):
+        Ck, Xn, Vk, uk = inp
+        wk = jax.scipy.linalg.solve_triangular(
+            Ck.T, uk - Xn.T @ w_next - Vk.T @ wb, lower=False)
+        return wk, wk
+
+    _, wband = jax.lax.scan(bwd, jnp.zeros(s, C.dtype), (C, Xnext, V, u),
+                            reverse=True)
+    return wband
+
+
+# ---------------------------------------------------------------------------
+# One-shot convenience entry points (tests / standalone callers)
+# ---------------------------------------------------------------------------
+
+def factor(Dblk, Opad, Ublk, Db):
+    """Full factorization ``(C, X, V, Cb)`` including the border corner."""
+    C, X, V, S = banded_factor(Dblk, Opad, Ublk)
+    Cb = jnp.linalg.cholesky(Db - S)
+    return C, X, V, Cb
+
+
+def solve(C, X, V, Cb, rband, rb):
+    """Solve the full arrowhead system from a :func:`factor` result.
+
+    Returns ``(wband (K, s), wb (p,))`` in block layout; callers gather
+    the band part back to row positions.
+    """
+    u = banded_solve_fwd(C, X, rband)
+    t = rb - jnp.einsum("kps,ks->p", V, u)
+    ub = jax.scipy.linalg.solve_triangular(Cb, t, lower=True)
+    wb = jax.scipy.linalg.solve_triangular(Cb.T, ub, lower=False)
+    Xnext = jnp.concatenate(
+        [X[1:], jnp.zeros((1,) + X.shape[1:], X.dtype)], axis=0)
+    wband = banded_solve_bwd(C, Xnext, V, u, wb)
+    return wband, wb

@@ -17,3 +17,9 @@ if str(TESTS) not in sys.path:
     sys.path.insert(0, str(TESTS))
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Kernel-routing tests assume the hard-coded banded_min_rows default; an
+# ambient autotune table (scripts/autotune_kernels.py writes one to the
+# repo root) must not leak into them.  Tests that exercise the table set
+# DLT_KERNEL_AUTOTUNE themselves.
+os.environ.setdefault("DLT_KERNEL_AUTOTUNE", os.devnull)

@@ -257,6 +257,36 @@ def test_forced_early_exit_lane_recovers_via_full_budget_resolve(monkeypatch):
         assert sweep.finish_time[k] == pytest.approx(ref, rel=REL_TOL)
 
 
+def test_banded_min_rows_consults_autotune_table(monkeypatch, tmp_path):
+    """Satellite: banded_min_rows=None reads the per-backend table
+    written by scripts/autotune_kernels.py; a pinned value beats it and
+    the hard-coded 32 stays the fallback without a table."""
+    import json
+
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({"cpu": {"banded_min_rows": 10}}))
+    monkeypatch.setenv("DLT_KERNEL_AUTOTUNE", str(path))
+    specs = [_random_spec(k, 2, 4) for k in range(3)]   # 20 rows: 10 < 20 < 32
+    eng = DLTEngine(verify=False, oracle_fallback=False)
+    eng.solve_batch(specs, frontend=False)
+    assert eng.stats.banded_lanes == len(specs)         # tuned floor applies
+    pinned = DLTEngine(verify=False, oracle_fallback=False,
+                       banded_min_rows=25)
+    pinned.solve_batch(specs, frontend=False)
+    assert pinned.stats.banded_lanes == 0               # pin beats the table
+    monkeypatch.setenv("DLT_KERNEL_AUTOTUNE",
+                       str(tmp_path / "missing.json"))
+    fallback = DLTEngine(verify=False, oracle_fallback=False)
+    fallback.solve_batch(specs, frontend=False)
+    assert fallback.stats.banded_lanes == 0             # default 32 again
+    # malformed tables are ignored, never fatal
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    monkeypatch.setenv("DLT_KERNEL_AUTOTUNE", str(bad))
+    DLTEngine(verify=False, oracle_fallback=False).solve_batch(
+        specs, frontend=False)
+
+
 def test_adaptive_budget_keeps_warm_sweep_results_identical():
     spec = _prefix_spec(2, 16)
     eng = DLTEngine()

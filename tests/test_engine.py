@@ -292,14 +292,18 @@ def test_module_compile_cache_info_reports_default_engine():
     assert info == get_default_engine().compile_cache_info()
 
 
-def test_shims_deprecate_the_silent_solver_downgrade():
+def test_shims_reject_the_silent_solver_downgrade():
+    """The PR-1-era implicit solver->scalar-engine downgrade (deprecated
+    since the session API landed) is gone: pinning a solver with the
+    batched engine raises through EngineConfig on the shims too."""
     spec = _sec6_spec(n=2, m=4, cost=True)
-    with pytest.warns(DeprecationWarning, match="engine='scalar'"):
-        sw = sweep_processors(spec, frontend=True, solver="simplex")
+    with pytest.raises(ValueError, match="engine='scalar'"):
+        sweep_processors(spec, frontend=True, solver="simplex")
+    # the explicit combination keeps working
     ref = sweep_processors(spec, frontend=True, solver="simplex",
-                           engine="scalar")   # explicit: no warning path
-    np.testing.assert_allclose(sw.finish_time, ref.finish_time, rtol=REL_TOL)
-    with pytest.warns(DeprecationWarning, match="speedup_grid"):
+                           engine="scalar")
+    assert np.all(np.isfinite(ref.finish_time))
+    with pytest.raises(ValueError, match="engine='scalar'"):
         speedup_grid(SystemSpec(G=[0.5], R=[0.0], A=[2.0, 2.0], J=10),
                      source_counts=(1,), processor_counts=(1, 2),
                      frontend=True, solver="simplex")

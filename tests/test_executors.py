@@ -1,0 +1,227 @@
+"""Executor layer: registry, padding ladders, sharded bit-identity.
+
+The heavyweight case — 8 virtual host devices — must be pinned before
+JAX initializes, so it runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and reports back
+as JSON: sharded results must be BIT-identical to the local executor
+(including uneven batch-to-device remainders, where masked pad lanes
+fill the last shard), and a strict ``schedule()`` failure must surface
+the correct GLOBAL lane index through the sharded path.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.dlt import DLTEngine, EngineConfig, SystemSpec
+from repro.core.dlt.executors import (
+    LANE_MICROBATCH,
+    Executor,
+    LocalExecutor,
+    ShardedExecutor,
+    available_executors,
+    resolve_executor,
+)
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _random_specs(seed, count, n_hi=3, m_lo=4, m_hi=12):
+    rng = np.random.default_rng(seed)
+    return [
+        SystemSpec(
+            G=rng.uniform(0.1, 1.0, n),
+            R=np.sort(rng.uniform(0.0, 2.0, n)),
+            A=rng.uniform(0.5, 4.0, m),
+            J=float(rng.uniform(50.0, 200.0)),
+        )
+        for n, m in zip(rng.integers(1, n_hi + 1, count),
+                        rng.integers(m_lo, m_hi + 1, count))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# registry + config validation
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_both_executors():
+    assert available_executors() == ["local", "sharded"]
+    assert isinstance(resolve_executor("local"), LocalExecutor)
+    assert isinstance(resolve_executor("sharded"), ShardedExecutor)
+    inst = LocalExecutor()
+    assert resolve_executor(inst) is inst
+
+
+def test_resolution_and_validation_errors():
+    with pytest.raises(ValueError, match="unknown executor"):
+        resolve_executor("quantum")
+    with pytest.raises(ValueError, match="Executor instance"):
+        resolve_executor(LocalExecutor(), devices=2)
+    with pytest.raises(ValueError, match="one device"):
+        LocalExecutor(devices=2)
+    with pytest.raises(ValueError, match="devices must be >= 1"):
+        ShardedExecutor(devices=0)
+    import jax
+    with pytest.raises(ValueError, match="visible"):
+        ShardedExecutor(devices=len(jax.devices()) + 1)
+
+
+def test_engine_config_executor_knobs():
+    with pytest.raises(ValueError, match="unknown executor"):
+        EngineConfig(executor="quantum")
+    with pytest.raises(ValueError, match="Executor"):
+        EngineConfig(executor=42)
+    with pytest.raises(ValueError, match="devices"):
+        EngineConfig(devices=0)
+    with pytest.raises(ValueError, match="instance"):
+        EngineConfig(executor=LocalExecutor(), devices=2)
+    cfg = EngineConfig(executor="sharded", devices=1)
+    assert cfg.replace(executor="local", devices=None).executor == "local"
+
+
+def test_pad_batch_ladders():
+    assert LANE_MICROBATCH == 16      # ladder expectations below assume it
+    ex = LocalExecutor()
+    # cold: po2; chunks under one micro-batch KEEP their po2 size (a
+    # 1-lane bucket must not pay for 16 lanes of normal-equations work)
+    assert [ex.pad_batch(n, False) for n in (1, 3, 8, 9, 17, 33)] == \
+        [1, 4, 8, 16, 32, 64]
+    # warm: multiples of 4, micro-batch multiples from 16 up
+    assert [ex.pad_batch(n, True) for n in (1, 5, 13, 17, 29)] == \
+        [4, 8, 16, 32, 32]
+    # sharded shares the ladder exactly (padding never grows with the
+    # device count — small chunks use fewer devices instead)
+    sh = ShardedExecutor(devices=1)
+    for n in (1, 3, 9, 13, 17, 33):
+        for warm in (False, True):
+            assert sh.pad_batch(n, warm) == ex.pad_batch(n, warm)
+    assert all(ex.pad_batch(n, w) % LANE_MICROBATCH == 0
+               for n in range(16, 70) for w in (False, True))
+
+
+def test_sharded_mesh_width_divides_microbatch_groups():
+    M = LANE_MICROBATCH
+    sh = ShardedExecutor(devices=1)
+    sh._devices = list(range(8))      # fake 8 devices: pure arithmetic
+    # groups = lanes / M; width = largest divisor of groups <= devices
+    assert sh._mesh_width(1 * M) == 1
+    assert sh._mesh_width(2 * M) == 2
+    assert sh._mesh_width(8 * M) == 8
+    assert sh._mesh_width(10 * M) == 5  # 10 groups -> 5 devices, no padding
+    assert sh._mesh_width(16 * M) == 8
+    sh._devices = list(range(6))
+    assert sh._mesh_width(8 * M) == 4   # 8 groups over <= 6 devices
+
+
+# ---------------------------------------------------------------------------
+# single-device equivalence (the in-process half of the contract)
+# ---------------------------------------------------------------------------
+
+def test_sharded_on_one_device_bit_identical_to_local():
+    specs = _random_specs(11, 9)
+    kw = dict(verify=False, oracle_fallback=False)
+    a = DLTEngine(executor="local", **kw).solve_batch(specs, frontend=False)
+    b = DLTEngine(executor="sharded", **kw).solve_batch(specs, frontend=False)
+    assert np.array_equal(a.finish_time, b.finish_time)
+    assert np.array_equal(a.beta, b.beta)
+    assert np.array_equal(a.status, b.status)
+    assert np.array_equal(a.iterations, b.iterations)
+
+
+def test_executor_views_share_cache_with_distinct_keys():
+    eng = DLTEngine(verify=False, oracle_fallback=False)
+    specs = _random_specs(5, 4, n_hi=2, m_lo=5, m_hi=5)
+    eng.solve_batch(specs, frontend=False)
+    misses0 = eng.stats.cache_misses
+    eng.configured(executor="sharded").solve_batch(specs, frontend=False)
+    # same family shape, different executor -> a fresh compile under a
+    # key carrying the executor token, in the SAME shared LRU
+    assert eng.stats.cache_misses > misses0
+    keys = eng.compile_cache_info()["keys"]
+    tokens = {k[-1] for k in keys}
+    assert ("local", 1, LANE_MICROBATCH) in tokens
+    assert any(t[0] == "sharded" for t in tokens)
+    # and a repeat through the sharded view hits the cache
+    hits0 = eng.stats.cache_hits
+    eng.configured(executor="sharded").solve_batch(specs, frontend=False)
+    assert eng.stats.cache_hits > hits0
+
+
+# ---------------------------------------------------------------------------
+# 8 virtual host devices (subprocess: XLA_FLAGS must precede jax import)
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import json
+    import numpy as np
+    import jax
+    from repro.core.dlt import DLTEngine, SystemSpec
+    from repro.core.dlt.types import InfeasibleError
+
+    rng = np.random.default_rng(3)
+    def spec(n, m):
+        return SystemSpec(G=rng.uniform(0.1, 1.0, n),
+                          R=np.sort(rng.uniform(0.0, 2.0, n)),
+                          A=rng.uniform(0.5, 4.0, m),
+                          J=float(rng.uniform(50.0, 200.0)))
+
+    out = {"devices": jax.device_count()}
+    # 11 lanes over 8 devices: uneven remainder, pad lanes masked
+    specs = [spec(int(rng.integers(1, 3)), int(rng.integers(4, 9)))
+             for _ in range(11)]
+    kw = dict(verify=False, oracle_fallback=False)
+    a = DLTEngine(executor="local", **kw).solve_batch(specs, frontend=False)
+    b = DLTEngine(executor="sharded", **kw).solve_batch(specs, frontend=False)
+    out["bit"] = {
+        "finish": bool(np.array_equal(a.finish_time, b.finish_time)),
+        "beta": bool(np.array_equal(a.beta, b.beta)),
+        "status": bool(np.array_equal(a.status, b.status)),
+        "iterations": bool(np.array_equal(a.iterations, b.iterations)),
+    }
+    # full default pipeline (verify + oracle fallback) too
+    c = DLTEngine(executor="local").solve_batch(specs, frontend=False)
+    d = DLTEngine(executor="sharded").solve_batch(specs, frontend=False)
+    out["bit"]["full_pipeline"] = bool(
+        np.array_equal(c.finish_time, d.finish_time)
+        and np.array_equal(c.beta, d.beta))
+
+    # strict schedule() must name the GLOBAL lane index of a failed lane
+    bad = SystemSpec(G=[0.5, 0.5], R=[0.0, 100.0], A=[1.0], J=1.0)
+    mix = specs[:5] + [bad] + specs[5:]
+    sol = DLTEngine(executor="sharded").solve_batch(mix, frontend=False)
+    out["bad_status"] = int(sol.status[5])
+    try:
+        sol.schedule(5, strict=True)
+        out["strict_error"] = None
+    except InfeasibleError as e:
+        out["strict_error"] = str(e)
+    print("RESULT::" + json.dumps(out))
+""")
+
+
+def test_sharded_eight_virtual_devices_subprocess():
+    """Satellite: the sharded path on 8 virtual host devices — results
+    bit-identical to LocalExecutor for an uneven 11-lane batch, strict
+    schedule errors carrying the correct global lane index."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = (os.path.join(REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    lines = [ln for ln in proc.stdout.splitlines()
+             if ln.startswith("RESULT::")]
+    assert lines, proc.stdout[-2000:]
+    out = json.loads(lines[-1][len("RESULT::"):])
+    assert out["devices"] == 8
+    assert out["bit"] == {k: True for k in out["bit"]}, out["bit"]
+    assert out["bad_status"] == 2
+    assert out["strict_error"] is not None
+    assert "lane 5" in out["strict_error"]

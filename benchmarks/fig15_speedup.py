@@ -8,7 +8,6 @@ S(10)=2.49; plus the paper's derived claims (+19% for 3 vs 2 sources,
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.dlt import SystemSpec, get_default_engine
 from .common import check, table

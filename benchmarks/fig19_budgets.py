@@ -8,7 +8,6 @@ area; case 2: disjoint areas -> infeasible with an actionable reason.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.dlt import plan_with_both_budgets, plan_with_time_budget
 from .common import check

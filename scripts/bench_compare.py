@@ -44,7 +44,6 @@ from __future__ import annotations
 import argparse
 import json
 import shutil
-import sys
 
 DEFAULT_RTOL = 0.30
 

@@ -3,6 +3,9 @@
 #
 # Usage:  bash scripts/check.sh
 #
+# 0. static analysis: ruff (when installed) and the dltlint graph gate
+#    (scripts/lint_graphs.py — every formulation x kernel x executor
+#    combo traced and checked against rules DL001-DL006),
 # 1. the full offline test suite (works without hypothesis/scipy — the
 #    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
 # 2. a fast batched-vs-scalar parity + throughput smoke, including a
@@ -37,6 +40,18 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export BENCH_OUT="${BENCH_OUT:-BENCH_engine.json}"
 
+if command -v ruff >/dev/null 2>&1; then
+  echo "== lint: ruff =="
+  ruff check .
+else
+  echo "ruff not installed — style lint skipped (CI's lint job runs it)"
+fi
+
+echo
+echo "== lint: dltlint graph gate (DL001-DL006 over the registry) =="
+python scripts/lint_graphs.py
+
+echo
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 

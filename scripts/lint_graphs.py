@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Sweep the formulation x kernel x executor registry through dltlint.
+
+The CI graph-lint gate: traces every registered combination, runs the
+DL001-DL006 rule set, prints human or JSON output, and exits 1 when
+any ERROR-severity finding survives the waiver file.
+
+    python scripts/lint_graphs.py                 # human output
+    python scripts/lint_graphs.py --json          # machine output
+    python scripts/lint_graphs.py --hlo           # also lower to HLO
+    python scripts/lint_graphs.py --rules DL001 DL005
+    python scripts/lint_graphs.py --waivers LINT_WAIVERS.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static graph lint over the engine registry")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the JSON report instead of human output")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also lower each trace to HLO (slower; enables "
+                         "the HLO-backend checks)")
+    ap.add_argument("--rules", nargs="*", default=None,
+                    help="rule ids to run (default: all registered)")
+    ap.add_argument("--formulations", nargs="*", default=None)
+    ap.add_argument("--kernels", nargs="*", default=None)
+    ap.add_argument("--executors", nargs="*", default=None)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lane count to trace at (padded by the executor)")
+    ap.add_argument("--waivers", default=None,
+                    help="JSON waiver file downgrading known errors "
+                         "(see CONTRIBUTING)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="show INFO findings in human output")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.dltlint import lint_registry, load_waivers
+
+    report = lint_registry(
+        formulations=args.formulations, kernels=args.kernels,
+        executors=args.executors, rules=args.rules,
+        with_hlo=args.hlo, batch=args.batch)
+    if args.waivers:
+        report = report.apply_waivers(load_waivers(args.waivers))
+
+    if args.json:
+        print(report.to_json(indent=2))
+    else:
+        print(report.format(verbose=args.verbose))
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

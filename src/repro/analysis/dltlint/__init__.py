@@ -1,0 +1,63 @@
+"""dltlint — static analysis of the engine's compiled programs.
+
+The invariants the runtime only checks dynamically (oracle parity,
+1e-6 verification) are visible BEFORE execution: the jaxpr knows
+whether an IPM while-loop is budget-bounded, whether a formulation's
+declared banded structure matches its real normal-equations sparsity,
+whether a Pallas block fits VMEM.  This package traces every
+formulation x kernel x executor combination to a ClosedJaxpr (plus
+optionally lowered HLO through :mod:`repro.analysis.hlo_parse`) and
+runs a pluggable rule set over it.
+
+Shipped rules::
+
+    DL001  bounded loops          while trips must derive from max_iter
+    DL002  dtype drift            implicit f64->f32 truncation map
+    DL003  const bloat            captured constants per cache key
+    DL004  transfer purity        no device_put/callbacks in bodies
+    DL005  banded honesty         declared band == real sparsity
+    DL006  pallas VMEM            block working set within budget
+
+Entry points: :meth:`DLTEngine.lint` (one configured combo),
+:func:`lint_registry` / ``scripts/lint_graphs.py`` (the full sweep and
+the CI gate — fails on ERROR findings only, see
+:class:`~.diagnostics.Severity`).
+"""
+
+from .diagnostics import (
+    Finding,
+    LintReport,
+    Severity,
+    Waiver,
+    load_waivers,
+)
+from .rules import Rule, all_rules, get_rules, register_rule
+from .runner import (
+    LINT_EXECUTORS,
+    LINT_KERNELS,
+    lint_engine,
+    lint_registry,
+    trace_target,
+)
+from .trace import TraceArtifact, TraceTarget, demo_batch, iter_eqns
+
+__all__ = [
+    "Finding",
+    "LintReport",
+    "Severity",
+    "Waiver",
+    "load_waivers",
+    "Rule",
+    "all_rules",
+    "get_rules",
+    "register_rule",
+    "LINT_EXECUTORS",
+    "LINT_KERNELS",
+    "lint_engine",
+    "lint_registry",
+    "trace_target",
+    "TraceArtifact",
+    "TraceTarget",
+    "demo_batch",
+    "iter_eqns",
+]

@@ -1,0 +1,178 @@
+"""Structured diagnostics for the graph linter.
+
+A :class:`Finding` is one rule hit: rule id, severity, a human message,
+the trace target it was found on, and the eqn provenance path inside
+the jaxpr (``"while:body/pjit"`` style).  A :class:`LintReport` is the
+ordered collection a lint run returns, with JSON and human renderings
+and the waiver workflow (committed JSON entries that downgrade known,
+explained errors to warnings — see CONTRIBUTING).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+__all__ = [
+    "Severity",
+    "Finding",
+    "LintReport",
+    "Waiver",
+    "load_waivers",
+]
+
+
+class Severity(enum.IntEnum):
+    """Ordered severity ladder; the CI gate fails on ERROR only."""
+
+    INFO = 10
+    WARNING = 20
+    ERROR = 30
+
+    @classmethod
+    def parse(cls, which: "str | int | Severity") -> "Severity":
+        if isinstance(which, Severity):
+            return which
+        if isinstance(which, int):
+            return cls(which)
+        try:
+            return cls[which.upper()]
+        except KeyError:
+            raise ValueError(
+                f"unknown severity {which!r}: use one of "
+                f"{[s.name for s in cls]}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule hit on one trace target."""
+
+    rule: str                     # "DL001"
+    severity: Severity
+    message: str                  # what is wrong, one line
+    target: str                   # combo label, e.g. "frontend/banded/local"
+    provenance: str = ""          # eqn path inside the jaxpr, "" = whole graph
+    hint: str = ""                # how to fix it
+    data: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "rule": self.rule,
+            "severity": self.severity.name,
+            "message": self.message,
+            "target": self.target,
+            "provenance": self.provenance,
+            "hint": self.hint,
+            "data": self.data,
+        }
+
+    def format(self) -> str:
+        loc = f" @ {self.provenance}" if self.provenance else ""
+        out = (f"[{self.severity.name:7s}] {self.rule} {self.target}{loc}: "
+               f"{self.message}")
+        if self.hint:
+            out += f"\n          hint: {self.hint}"
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    """One committed exception: downgrade matching ERRORs to WARNING.
+
+    ``target`` matches by substring against the finding's target label
+    ("" matches every target), so one waiver can cover a whole kernel
+    or executor family.  ``reason`` is mandatory — a waiver without an
+    explanation is a silenced bug.
+    """
+
+    rule: str
+    target: str
+    reason: str
+
+    def matches(self, finding: Finding) -> bool:
+        return (self.rule == finding.rule
+                and self.target in finding.target)
+
+
+def load_waivers(path: str) -> List[Waiver]:
+    """Read a waiver file: a JSON list of {rule, target, reason} objects."""
+    with open(path) as f:
+        entries = json.load(f)
+    if not isinstance(entries, list):
+        raise ValueError(f"waiver file {path!r} must hold a JSON list")
+    waivers = []
+    for i, e in enumerate(entries):
+        try:
+            waivers.append(Waiver(rule=e["rule"], target=e.get("target", ""),
+                                  reason=e["reason"]))
+        except (TypeError, KeyError) as exc:
+            raise ValueError(
+                f"waiver file {path!r} entry {i}: needs 'rule' and "
+                "'reason' keys (optional 'target')") from exc
+    return waivers
+
+
+@dataclasses.dataclass
+class LintReport:
+    """The outcome of one lint run over one or more trace targets."""
+
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    targets: List[str] = dataclasses.field(default_factory=list)
+
+    def extend(self, findings: Iterable[Finding]) -> None:
+        self.findings.extend(findings)
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity >= Severity.ERROR]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings
+                if f.severity == Severity.WARNING]
+
+    @property
+    def ok(self) -> bool:
+        """True when no error-severity findings remain (the CI gate)."""
+        return not self.errors
+
+    def apply_waivers(self, waivers: Sequence[Waiver]) -> "LintReport":
+        """A copy with waived ERRORs downgraded to WARNING (annotated)."""
+        out = []
+        for f in self.findings:
+            if f.severity >= Severity.ERROR:
+                hit = next((w for w in waivers if w.matches(f)), None)
+                if hit is not None:
+                    f = dataclasses.replace(
+                        f, severity=Severity.WARNING,
+                        data={**f.data, "waived": True,
+                              "waiver_reason": hit.reason})
+            out.append(f)
+        return LintReport(findings=out, targets=list(self.targets))
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "targets": self.targets,
+            "counts": {
+                "error": len(self.errors),
+                "warning": len(self.warnings),
+                "info": len(self.findings) - len(self.errors)
+                - len(self.warnings),
+            },
+            "findings": [f.to_dict() for f in self.findings],
+        }, indent=indent)
+
+    def format(self, verbose: bool = False) -> str:
+        """Human rendering: errors + warnings, infos only when verbose."""
+        shown = [f for f in self.findings
+                 if verbose or f.severity >= Severity.WARNING]
+        lines = [f.format() for f in
+                 sorted(shown, key=lambda f: (-f.severity, f.rule, f.target))]
+        lines.append(
+            f"dltlint: {len(self.targets)} target(s), "
+            f"{len(self.errors)} error(s), {len(self.warnings)} warning(s), "
+            f"{len(self.findings)} finding(s) total")
+        return "\n".join(lines)

@@ -1,0 +1,140 @@
+"""Lint orchestration: one engine or the whole registry.
+
+:func:`lint_engine` lints exactly what a configured :class:`DLTEngine`
+would compile; :func:`lint_registry` sweeps every formulation x kernel
+x executor combination (the CI gate).  Each combination gets a FRESH
+engine — ``configured()`` views share the stats ledger, and tracing
+must not pollute a live session's counters.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+
+from ...core.dlt.batched import build_family_lp
+from ...core.dlt.engine import DLTEngine
+from ...core.dlt.formulations import available_formulations, get_formulation
+from .diagnostics import Finding, LintReport, Severity
+from .rules import get_rules
+from .trace import TraceArtifact, TraceTarget, demo_batch
+
+__all__ = [
+    "LINT_KERNELS",
+    "LINT_EXECUTORS",
+    "trace_target",
+    "lint_engine",
+    "lint_registry",
+]
+
+#: Kernel knobs the registry sweep pins (never "auto": the sweep wants
+#: every instantiation, not the router's pick for this host).
+LINT_KERNELS = ("structured", "dense", "banded", "pallas_banded")
+LINT_EXECUTORS = ("local", "sharded")
+
+
+def _engine_for(target: TraceTarget) -> DLTEngine:
+    overrides = dict(formulation=target.formulation, kernel=target.kernel,
+                     executor=target.executor)
+    if (target.kernel == "pallas_banded"
+            and jax.default_backend() != "tpu"):
+        # off-TPU the Pallas kernel only traces through interpret mode
+        overrides["pallas_interpret"] = True
+    return DLTEngine(**overrides)
+
+
+def trace_target(target: TraceTarget, *, with_hlo: bool = False,
+                 n: int = 2, m: int = 3) -> TraceArtifact:
+    """Trace one combination over a small masked demo family."""
+    eng = _engine_for(target)
+    fm = get_formulation(target.formulation)
+    bs = demo_batch(n=n, m=m, masked=True)
+    fam = build_family_lp(bs, fm)
+    plan = eng._kernel_plan(fm, bs, fam)
+    closed, lowered, key = eng.trace_plan(plan, batch=target.batch,
+                                          warm=target.warm, lower=with_hlo)
+    hlo_text = None
+    if lowered is not None:
+        hlo_text = lowered.compiler_ir("hlo").as_hlo_text()
+    return TraceArtifact(target=target, jaxpr=closed, cache_key=key,
+                         max_iter=eng.config.max_iter, plan=plan,
+                         config=eng.config, hlo_text=hlo_text)
+
+
+def _run_graph_rules(art: TraceArtifact, rules) -> List[Finding]:
+    out: List[Finding] = []
+    for rule in rules:
+        if rule.scope == "graph":
+            out.extend(rule.check(art))
+    return out
+
+
+def lint_engine(engine: DLTEngine, *,
+                rules: Optional[Sequence[str]] = None,
+                with_hlo: bool = False, batch: int = 4,
+                n: int = 2, m: int = 3) -> LintReport:
+    """Lint the one combination ``engine`` is configured for."""
+    ruleset = get_rules(rules)
+    fm = engine._formulation(True, None)
+    bs = demo_batch(n=n, m=m, masked=True)
+    fam = build_family_lp(bs, fm)
+    plan = engine._kernel_plan(fm, bs, fam)
+    executor = engine._resolve_executor()
+    target = TraceTarget(formulation=fm.name, kernel=plan.kind,
+                         executor=executor.name or "custom", batch=batch)
+    closed, lowered, key = engine.trace_plan(plan, batch=batch,
+                                             lower=with_hlo)
+    hlo_text = None
+    if lowered is not None:
+        hlo_text = lowered.compiler_ir("hlo").as_hlo_text()
+    art = TraceArtifact(target=target, jaxpr=closed, cache_key=key,
+                        max_iter=engine.config.max_iter, plan=plan,
+                        config=engine.config, hlo_text=hlo_text)
+    report = LintReport(targets=[target.label])
+    report.extend(_run_graph_rules(art, ruleset))
+    for rule in ruleset:
+        if rule.scope == "formulation":
+            report.extend(rule.check_formulation(fm))
+    return report
+
+
+def lint_registry(*, formulations: Optional[Sequence[str]] = None,
+                  kernels: Optional[Sequence[str]] = None,
+                  executors: Optional[Sequence[str]] = None,
+                  rules: Optional[Sequence[str]] = None,
+                  with_hlo: bool = False, batch: int = 4,
+                  shapes: Optional[Sequence[Tuple[int, int]]] = None,
+                  ) -> LintReport:
+    """Lint every formulation x kernel x executor combination.
+
+    Combinations a pinned kernel rejects by contract (e.g. ``banded``
+    on a structureless formulation) are skipped with an INFO finding
+    rather than failing the sweep — the ValueError IS the guardrail.
+    """
+    ruleset = get_rules(rules)
+    fms = list(formulations or available_formulations())
+    report = LintReport()
+    for fm_name in fms:
+        for rule in ruleset:
+            if rule.scope == "formulation":
+                report.extend(
+                    rule.check_formulation(get_formulation(fm_name),
+                                           shapes=shapes))
+    for fm_name in fms:
+        for kernel in (kernels or LINT_KERNELS):
+            for executor in (executors or LINT_EXECUTORS):
+                target = TraceTarget(formulation=fm_name, kernel=kernel,
+                                     executor=executor, batch=batch)
+                try:
+                    art = trace_target(target, with_hlo=with_hlo)
+                except ValueError as e:
+                    report.targets.append(f"{target.label} [skipped]")
+                    report.findings.append(Finding(
+                        rule="TRACE", severity=Severity.INFO,
+                        message=f"combination rejected by contract: {e}",
+                        target=target.label))
+                    continue
+                report.targets.append(target.label)
+                report.extend(_run_graph_rules(art, ruleset))
+    return report

@@ -1,0 +1,132 @@
+"""Tracing engine programs to inspectable artifacts.
+
+The linter never executes a solve: it asks the engine for the exact
+``(fn, in_axes, args)`` signature an executor would compile for a plan
+(see :meth:`DLTEngine.trace_plan`), traces it to a ClosedJaxpr inside
+the same ``enable_x64`` scope the runtime uses, and optionally lowers
+it to HLO text for the :mod:`repro.analysis.hlo_parse` backend.
+
+:func:`iter_eqns` is the shared jaxpr walker: it yields every equation
+of a closed jaxpr AND of every sub-jaxpr reachable through equation
+params (while cond/body, scan, pjit, pallas_call, custom derivatives),
+each tagged with a provenance path like ``"pjit/while:body/scan"`` so a
+finding can say where in the program it sits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ...core.dlt.stacking import BatchedSystemSpec
+from ...core.dlt.types import SystemSpec
+
+__all__ = [
+    "TraceTarget",
+    "TraceArtifact",
+    "iter_eqns",
+    "demo_batch",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceTarget:
+    """One formulation x kernel x executor combination to trace."""
+
+    formulation: str
+    kernel: str
+    executor: str
+    batch: int = 4
+    warm: bool = False
+
+    @property
+    def label(self) -> str:
+        tag = "/warm" if self.warm else ""
+        return f"{self.formulation}/{self.kernel}/{self.executor}{tag}"
+
+
+@dataclasses.dataclass
+class TraceArtifact:
+    """Everything a rule may inspect for one traced target.
+
+    ``jaxpr`` is the ClosedJaxpr of the executor-wrapped program;
+    ``hlo_text`` is the unoptimized HLO rendering when the trace ran
+    with ``with_hlo`` (rules degrade gracefully when it is ``None``).
+    ``plan`` is the engine's resolved :class:`_KernelPlan` — rules use
+    it for the banded geometry and the formulation name — and
+    ``cache_key`` is the compile-LRU key the executable would live
+    under (DL003 reports const bloat per cache key).
+    """
+
+    target: TraceTarget
+    jaxpr: Any                        # jax.core.ClosedJaxpr
+    cache_key: Tuple
+    max_iter: int
+    plan: Any = None                  # engine._KernelPlan
+    config: Any = None                # EngineConfig
+    hlo_text: Optional[str] = None
+
+    @property
+    def label(self) -> str:
+        return self.target.label
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[str, Any]]:
+    """(tag, jaxpr-like) pairs reachable through one equation's params."""
+    subs: List[Tuple[str, Any]] = []
+    for name, val in eqn.params.items():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+                prim = eqn.primitive.name
+                if prim == "while":
+                    tag = {"cond_jaxpr": "while:cond",
+                           "body_jaxpr": "while:body"}.get(name, prim)
+                elif prim == "cond":
+                    tag = "cond:branch"
+                else:
+                    tag = prim
+                subs.append((tag, v))
+    return subs
+
+
+def iter_eqns(closed_jaxpr, _path: str = "") -> Iterator[Tuple[Any, str]]:
+    """Yield ``(eqn, provenance_path)`` over a jaxpr and all sub-jaxprs."""
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn, _path
+        for tag, sub in _sub_jaxprs(eqn):
+            sub_path = f"{_path}/{tag}" if _path else tag
+            yield from iter_eqns(sub, sub_path)
+
+
+def _demo_specs(shapes, masked: bool) -> List[SystemSpec]:
+    """Deterministic small systems spanning the requested (n, m) shapes.
+
+    Values are fixed (no RNG): heterogeneous G/R/A so no row of the LP
+    degenerates, release times strictly increasing so the Sec 3 ordering
+    constraints are all active.  With ``masked`` the first shape is
+    repeated at a smaller (n, m), so the stacked family contains padded
+    sources, processors and rows — the masking path rules must survive.
+    """
+    specs = []
+    for (n, m) in shapes:
+        G = 0.2 + 0.1 * np.arange(n)
+        R = 0.5 * np.arange(n)
+        A = 1.0 + 0.25 * np.arange(m)
+        specs.append(SystemSpec(G=G, R=R, A=A, J=10.0 + n + m))
+    if masked and specs:
+        n0, m0 = shapes[0]
+        n1, m1 = max(1, n0 - 1), max(1, m0 - 1)
+        specs.append(SystemSpec(G=0.3 + 0.1 * np.arange(n1),
+                                R=0.25 * np.arange(n1),
+                                A=1.5 + 0.5 * np.arange(m1), J=5.0))
+    return specs
+
+
+def demo_batch(n: int = 2, m: int = 3,
+               masked: bool = True) -> BatchedSystemSpec:
+    """A small stacked family at (n, m), optionally with a masked lane."""
+    return BatchedSystemSpec.from_specs(_demo_specs([(n, m)], masked))

@@ -40,16 +40,21 @@ _DTYPE_BYTES = {
 
 _SHAPE_RE = re.compile(
     r"(pred|[suf]\d+|bf16|f8e4m3fn|f8e5m2|c64|c128)\[([0-9,]*)\]")
+# instruction/computation lines appear in two prints: the optimized
+# module text (``%name = f32[] op(...)``, headers ``%comp (args) -> ty {``)
+# and the unoptimized pre-SPMD text (no ``%``, headers ``comp.N {``)
 _INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
-_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_COMP_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\)\s*->[^{]*)?\{")
 _WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations|"
                        r"true_computation|false_computation)="
                        r"\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
 _GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _GROUPS_OLD_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
-_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+# x64 loop counters print as s64 — both widths bound trip counts
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
 
 COLLECTIVES = (
     "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -151,12 +156,21 @@ class HloStats:
     collective_link_seconds: float    # ring-model per-chip link time
     while_trips: dict                 # body comp -> trip count
     notes: list
+    #: body computations of while ops whose condition holds NO integer
+    #: constant — their trips fell back to ``default_trip`` and the
+    #: loop has no static bound (dltlint DL001 errors on these)
+    unbounded_whiles: list = dataclasses.field(default_factory=list)
 
 
 def analyze_hlo(text: str, link_bw: float = 50e9,
                 default_trip: int = 1) -> HloStats:
     comps = _parse(text)
     notes: list[str] = []
+    if not comps:
+        return HloStats(flops=0.0, hbm_traffic_bytes=0.0,
+                        collective_bytes={}, collective_link_seconds=0.0,
+                        while_trips={},
+                        notes=["no computations parsed from HLO text"])
 
     # symbol tables: per-comp name -> (bytes, dims); global fallback
     sym: dict[str, dict[str, tuple]] = {}
@@ -196,6 +210,7 @@ def analyze_hlo(text: str, link_bw: float = 50e9,
     mult: dict[str, float] = defaultdict(float)
     mult[entry] = 1.0
     while_trips: dict[str, int] = {}
+    unbounded: list[str] = []
     order = [entry]
     seen = {entry}
     idx = 0
@@ -207,8 +222,10 @@ def analyze_hlo(text: str, link_bw: float = 50e9,
             wm = _WHILE_RE.search(ins.attrs)
             if ins.opcode == "while" and wm:
                 cond, body = wm.groups()
-                trips = max(comp_consts.get(cond, [default_trip]) or
-                            [default_trip])
+                cond_consts = comp_consts.get(cond, [])
+                if not cond_consts and body not in unbounded:
+                    unbounded.append(body)
+                trips = max(cond_consts or [default_trip])
                 trips = max(trips, 1)
                 while_trips[body] = trips
                 for sub in (cond, body):
@@ -315,4 +332,5 @@ def analyze_hlo(text: str, link_bw: float = 50e9,
         collective_link_seconds=coll_secs,
         while_trips=while_trips,
         notes=notes,
+        unbounded_whiles=unbounded,
     )

@@ -100,11 +100,15 @@ class ClusterAdvisor:
         """Eq 18 over slice sizes."""
         return self.sweep.gradient()
 
-    def with_cost_budget(self, budget_dollars: float, gradient_threshold: float = 0.06) -> TradeoffPlan:
-        return plan_with_cost_budget(self.sweep, budget_dollars, gradient_threshold)
+    def with_cost_budget(self, budget_dollars: float,
+                         gradient_threshold: float = 0.06) -> TradeoffPlan:
+        return plan_with_cost_budget(self.sweep, budget_dollars,
+                                     gradient_threshold)
 
     def with_time_budget(self, budget_seconds: float) -> TradeoffPlan:
         return plan_with_time_budget(self.sweep, budget_seconds)
 
-    def with_both_budgets(self, budget_dollars: float, budget_seconds: float) -> TradeoffPlan:
-        return plan_with_both_budgets(self.sweep, budget_dollars, budget_seconds)
+    def with_both_budgets(self, budget_dollars: float,
+                          budget_seconds: float) -> TradeoffPlan:
+        return plan_with_both_budgets(self.sweep, budget_dollars,
+                                      budget_seconds)

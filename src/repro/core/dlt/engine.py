@@ -620,26 +620,51 @@ class DLTEngine:
         """
         cfg, st = self.config, self._state
         executor = self._resolve_executor()
-        etok = executor.cache_token()
-        tol = float(cfg.tol)
-        dims = plan.fam.dims
-        if plan.kind in ("banded", "pallas_banded"):
-            g = plan.bfam.geom
-            key = (plan.kind, plan.fm_name, B, g.m, g.nv, g.K, g.s, g.p,
-                   plan.bfam.w, max_iter, tol, warm,
-                   cfg.pallas_interpret, etok)
-        elif plan.kind == "dense":
-            key = ("dense", B, dims.n_rows, dims.n_std, max_iter, tol,
-                   warm, etok)
-        else:
-            key = ("structured", B, dims.n_rows, dims.nv, dims.n_eq,
-                   max_iter, tol, warm, etok)
+        key = self._cache_key(plan, B, warm, max_iter,
+                              executor.cache_token())
         exe = st.compiled.get(key)
         if exe is not None:
             st.compiled.move_to_end(key)
             st.bump(cache_hits=1)
             return exe
         st.bump(cache_misses=1)
+        fn, in_axes, args = self._kernel_signature(plan, B, warm, max_iter)
+        exe = executor.compile(fn, in_axes, args)
+        st.compiled[key] = exe
+        while len(st.compiled) > cfg.compile_cache_size:
+            st.compiled.popitem(last=False)
+        return exe
+
+    def _cache_key(self, plan: _KernelPlan, B: int, warm: bool,
+                   max_iter: int, etok: Tuple) -> Tuple:
+        """Compile-LRU key of one (plan, batch, budget, executor) shape."""
+        cfg = self.config
+        tol = float(cfg.tol)
+        dims = plan.fam.dims
+        if plan.kind in ("banded", "pallas_banded"):
+            g = plan.bfam.geom
+            return (plan.kind, plan.fm_name, B, g.m, g.nv, g.K, g.s, g.p,
+                    plan.bfam.w, max_iter, tol, warm,
+                    cfg.pallas_interpret, etok)
+        if plan.kind == "dense":
+            return ("dense", B, dims.n_rows, dims.n_std, max_iter, tol,
+                    warm, etok)
+        return ("structured", B, dims.n_rows, dims.nv, dims.n_eq,
+                max_iter, tol, warm, etok)
+
+    def _kernel_signature(self, plan: _KernelPlan, B: int, warm: bool,
+                          max_iter: int):
+        """``(fn, in_axes, args)`` the executor compiles for one shape.
+
+        ``fn`` is the per-lane IPM instantiation with the budget and
+        tolerance baked in, ``in_axes`` its vmap axes and ``args`` the
+        :class:`jax.ShapeDtypeStruct` stack of the padded operands —
+        the exact compile contract, shared by :meth:`_executable` and
+        the static tracer (:meth:`trace_plan`).
+        """
+        cfg = self.config
+        tol = float(cfg.tol)
+        dims = plan.fam.dims
         f8 = np.dtype(np.float64)
         sds = jax.ShapeDtypeStruct
         mrows, nv, n_std = dims.n_rows, dims.nv, dims.n_std
@@ -674,12 +699,46 @@ class DLTEngine:
                     sds((B, mrows), f8), sds((B, dims.n_eq), f8)]
         if warm and plan.kind not in ("banded", "pallas_banded"):
             in_axes = in_axes + (0, 0, 0)
-        exe = executor.compile(fn, in_axes,
-                               tuple(args + (winit if warm else [])))
-        st.compiled[key] = exe
-        while len(st.compiled) > cfg.compile_cache_size:
-            st.compiled.popitem(last=False)
-        return exe
+        return fn, in_axes, tuple(args + (winit if warm else []))
+
+    def trace_plan(self, plan: _KernelPlan, batch: int = 4,
+                   warm: bool = False, max_iter: Optional[int] = None, *,
+                   lower: bool = False):
+        """Statically trace one plan's compiled program (no execution).
+
+        Returns ``(closed_jaxpr, lowered, cache_key)`` for exactly the
+        program :meth:`_executable` would compile at this shape —
+        traced through the configured executor's
+        :meth:`~.executors.Executor.wrap` inside the same
+        ``enable_x64`` scope the runtime solve uses, so the jaxpr
+        dtypes match execution.  ``lowered`` is the jit Lowering when
+        ``lower`` is set (``None`` otherwise); nothing is compiled
+        either way.  This is the entry point the
+        :mod:`repro.analysis.dltlint` rules inspect.
+        """
+        executor = self._resolve_executor()
+        mi = int(self.config.max_iter if max_iter is None else max_iter)
+        Bp = executor.pad_batch(batch, warm)
+        fn, in_axes, args = self._kernel_signature(plan, Bp, warm, mi)
+        with jax.experimental.enable_x64():
+            closed, lowered = executor.trace(fn, in_axes, args, lower=lower)
+        key = self._cache_key(plan, Bp, warm, mi, executor.cache_token())
+        return closed, lowered, key
+
+    def lint(self, *, rules: Optional[Sequence[str]] = None,
+             with_hlo: bool = False, batch: int = 4):
+        """Run the static graph linter over THIS engine's configuration.
+
+        Traces the configured formulation x kernel x executor combo
+        (resolving ``kernel="auto"``) and applies the registered
+        dltlint rules; formulation-scope rules (DL005) run on the
+        configured formulation.  Returns a
+        :class:`repro.analysis.dltlint.LintReport`.  Use
+        ``scripts/lint_graphs.py`` to sweep the whole registry instead.
+        """
+        from ...analysis.dltlint import lint_engine
+        return lint_engine(self, rules=rules, with_hlo=with_hlo,
+                           batch=batch)
 
     def _solve_family(self, plan: _KernelPlan, init=None,
                       want_state: bool = False,

@@ -32,7 +32,7 @@ straggler lane gates only its micro-batch instead of the whole chunk.
 
 from __future__ import annotations
 
-from typing import Callable, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 
@@ -109,6 +109,33 @@ class Executor:
         """
         return (self.name, self.device_count())
 
+    def wrap(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+             args: Sequence[jax.ShapeDtypeStruct]) -> Callable:
+        """The traceable callable :meth:`compile` would jit.
+
+        This is the executor's whole program BEFORE XLA gets involved
+        (micro-batched vmap locally, ``shard_map`` over the lane mesh
+        when sharded) — the unit static analysis traces, so the linter
+        sees exactly what the compiled executable will contain.
+        """
+        raise NotImplementedError
+
+    def trace(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+              args: Sequence[jax.ShapeDtypeStruct], *,
+              lower: bool = False) -> Tuple[Any, Any]:
+        """Trace the wrapped program: ``(ClosedJaxpr, Lowered | None)``.
+
+        With ``lower`` the jaxpr is also lowered through jit (pre-
+        optimization HLO, retrievable as text via
+        ``lowered.compiler_ir("hlo")``).  Nothing is compiled or run.
+        Callers own the dtype scope: trace inside
+        ``jax.experimental.enable_x64()`` when the runtime does.
+        """
+        wrapped = self.wrap(fn, in_axes, args)
+        closed = jax.make_jaxpr(wrapped)(*args)
+        lowered = jax.jit(wrapped).lower(*args) if lower else None
+        return closed, lowered
+
     def pad_batch(self, n_lanes: int, warm: bool) -> int:
         """Padded lane count for a chunk of ``n_lanes``.
 
@@ -128,7 +155,8 @@ class Executor:
             return base
         return -(-base // LANE_MICROBATCH) * LANE_MICROBATCH
 
-    def compile(self, fn: Callable, in_axes: Tuple, args: Sequence) -> Callable:
+    def compile(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+                args: Sequence[jax.ShapeDtypeStruct]) -> Callable:
         """AOT-compile the per-lane kernel ``fn`` over stacked arguments.
 
         ``in_axes`` follows :func:`jax.vmap` semantics (0 = stacked
@@ -140,7 +168,7 @@ class Executor:
         raise NotImplementedError
 
 
-def available_executors() -> list:
+def available_executors() -> List[str]:
     return sorted(_REGISTRY)
 
 
@@ -168,4 +196,4 @@ def resolve_executor(which: Union[str, Executor],
 
 
 # populated at package import time (avoids base <-> impl import cycles)
-_REGISTRY: dict = {}
+_REGISTRY: Dict[str, type] = {}

@@ -39,7 +39,11 @@ class LocalExecutor(Executor):
     def cache_token(self) -> Tuple:
         return (self.name, 1, LANE_MICROBATCH)
 
-    def compile(self, fn: Callable, in_axes: Tuple,
-                args: Sequence) -> Callable:
-        return (jax.jit(microbatched(fn, in_axes))
+    def wrap(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+             args: Sequence[jax.ShapeDtypeStruct]) -> Callable:
+        return microbatched(fn, in_axes)
+
+    def compile(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+                args: Sequence[jax.ShapeDtypeStruct]) -> Callable:
+        return (jax.jit(self.wrap(fn, in_axes, args))
                 .lower(*args).compile())

@@ -78,9 +78,10 @@ class ShardedExecutor(Executor):
                 return d
         return 1
 
-    def compile(self, fn: Callable, in_axes: Tuple,
-                args: Sequence) -> Callable:
-        d_eff = self._mesh_width(args[0].shape[0])
+    def _mapped(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+                n_lanes: int):
+        """``(shard_mapped fn, in_shardings, out_sharding)`` for a chunk."""
+        d_eff = self._mesh_width(n_lanes)
         mesh = Mesh(np.array(self._devices[:d_eff]), (self.AXIS,))
         specs = tuple(P(self.AXIS) if ax == 0 else P() for ax in in_axes)
         mapped = shard_map(
@@ -91,7 +92,16 @@ class ShardedExecutor(Executor):
             **{_CHECK_KWARG: False},
         )
         shardings = tuple(NamedSharding(mesh, s) for s in specs)
-        out_sharding = NamedSharding(mesh, P(self.AXIS))
+        return mapped, shardings, NamedSharding(mesh, P(self.AXIS))
+
+    def wrap(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+             args: Sequence[jax.ShapeDtypeStruct]) -> Callable:
+        return self._mapped(fn, in_axes, args[0].shape[0])[0]
+
+    def compile(self, fn: Callable, in_axes: Tuple[Optional[int], ...],
+                args: Sequence[jax.ShapeDtypeStruct]) -> Callable:
+        mapped, shardings, out_sharding = self._mapped(
+            fn, in_axes, args[0].shape[0])
         exe = (jax.jit(mapped, in_shardings=shardings,
                        out_shardings=out_sharding)
                .lower(*args).compile())

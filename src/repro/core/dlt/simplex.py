@@ -123,7 +123,8 @@ def linprog_simplex(
         return LPResult(np.zeros(n), 0.0, 0, "trivial", 0)
 
     width = n + n_ub
-    A = np.vstack([np.hstack([r, np.zeros((r.shape[0], width - r.shape[1]))]) for r in rows])
+    A = np.vstack([np.hstack([r, np.zeros((r.shape[0], width - r.shape[1]))])
+                   for r in rows])
     b = np.concatenate(rhs)
     m = A.shape[0]
 

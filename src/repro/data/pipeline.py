@@ -133,7 +133,10 @@ class MultiSourcePipeline:
     @property
     def schedule(self) -> Schedule:
         self.plan()
-        assert self._schedule is not None
+        if self._schedule is None:
+            raise RuntimeError(
+                "pipeline planning finished without a schedule — "
+                "plan() must populate it before use")
         return self._schedule
 
     @property

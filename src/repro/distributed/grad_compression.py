@@ -28,7 +28,9 @@ def quantize(x, key, *, bits: int = 8):
 
     Returns (q int8/int16, scale f32 scalar) with E[dequantize(q)] == x.
     """
-    assert bits in (8, 16)
+    if bits not in (8, 16):
+        raise ValueError(f"unsupported quantization width bits={bits}; "
+                         "use 8 or 16")
     qmax = 127.0 if bits == 8 else 32767.0
     dtype = jnp.int8 if bits == 8 else jnp.int16
     xf = x.astype(jnp.float32)

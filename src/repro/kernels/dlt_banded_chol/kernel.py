@@ -41,7 +41,27 @@ __all__ = [
     "banded_factor_pallas",
     "banded_solve_fwd_pallas",
     "banded_solve_bwd_pallas",
+    "vmem_estimate",
 ]
+
+
+def vmem_estimate(s: int, p: int, itemsize: int = 8) -> int:
+    """Worst-case VMEM bytes of one grid step across the three kernels.
+
+    The factor pass dominates: per step it holds the ``(1, s, s)`` /
+    ``(1, p, s)`` input and output blocks (double-buffered by the
+    Pallas pipeline, hence the x2), the ``(p, p)`` Schur output block,
+    and the ``(s, s) + (p, s) + (p, p)`` carry scratch.  The estimate
+    is an upper bound the dltlint DL006 rule checks against the
+    per-backend VMEM budget; the authoritative per-trace number comes
+    from the BlockSpecs of the traced ``pallas_call`` equations (see
+    :func:`repro.analysis.dltlint.rules.pallas_call_vmem_bytes`) —
+    this closed form exists for shape planning without a trace.
+    """
+    blocks = 2 * (s * s) + (p * s)            # factor inputs D, O, U
+    blocks += 2 * (s * s) + (p * s) + (p * p)  # outputs C, X, V, S
+    scratch = (s * s) + (p * s) + (p * p)
+    return (2 * blocks + scratch) * itemsize
 
 
 def _iota2(shape, axis):

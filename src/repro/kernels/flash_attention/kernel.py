@@ -111,7 +111,9 @@ def flash_attention_fwd(
     """
     B, H, Sq, D = q.shape
     _, K, Sk, _ = k.shape
-    assert H % K == 0, (H, K)
+    if H % K != 0:
+        raise ValueError(
+            f"query heads ({H}) must be a multiple of kv heads ({K})")
     group = H // K
     nq = Sq // block_q
     nk = Sk // block_k

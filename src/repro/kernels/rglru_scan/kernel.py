@@ -65,7 +65,10 @@ def rglru_fwd(u, log_a, h0, *, chunk: int = 128, block_w: int = 512,
     Returns (h (B,S,W) f32, hT (B,W) f32).  S % chunk == 0, W % block_w == 0
     (ops.py pads)."""
     B, S, W = u.shape
-    assert S % chunk == 0 and W % block_w == 0, (S, W, chunk, block_w)
+    if S % chunk != 0 or W % block_w != 0:
+        raise ValueError(
+            f"shape (S={S}, W={W}) not divisible by (chunk={chunk}, "
+            f"block_w={block_w}); call through ops.rglru which pads")
     nchunks = S // chunk
     nwb = W // block_w
     kernel = functools.partial(_rglru_kernel, chunk=chunk, nchunks=nchunks)

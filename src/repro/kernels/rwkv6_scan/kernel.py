@@ -85,7 +85,10 @@ def wkv6_fwd(r, k, v, lw, u, s0, *, chunk: int = 64, interpret: bool = False):
     s0: (B, H, N, N) f32.  Returns (y (B,H,S,N) f32, sT (B,H,N,N) f32).
     S must be a multiple of ``chunk`` (ops.py pads with lw=0, k=0)."""
     B, H, S, N = r.shape
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(
+            f"sequence length {S} is not a multiple of chunk={chunk}; "
+            "call through ops.wkv6 which pads")
     nchunks = S // chunk
     kernel = functools.partial(_wkv6_kernel, chunk=chunk, nchunks=nchunks)
     seq_spec = pl.BlockSpec((1, 1, chunk, N), lambda b, h, ci: (b, h, ci, 0))

@@ -22,7 +22,8 @@ so a long sweep survives interruption and EXPERIMENTS.md is generated from
 the JSONs.
 
 Usage:
-  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
   PYTHONPATH=src python -m repro.launch.dryrun --list
 """
@@ -34,7 +35,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.roofline import roofline_from_hlo

@@ -7,13 +7,12 @@ declared here (in/out shardings), keeping the model code mesh-agnostic.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import ModelConfig, ShapeSuite
 from repro.distributed.sharding import logical_to_pspec, param_pspecs
 from repro.models import LM
 from repro.train import optimizer as opt
@@ -124,7 +123,10 @@ def make_train_step(model: LM, opt_cfg: opt.AdamWConfig,
         else:
             def split(x):
                 b = x.shape[0]
-                assert b % num_microbatches == 0, (b, num_microbatches)
+                if b % num_microbatches != 0:
+                    raise ValueError(
+                        f"global batch {b} is not divisible by "
+                        f"num_microbatches={num_microbatches}")
                 return jnp.moveaxis(
                     x.reshape((num_microbatches, b // num_microbatches)
                               + x.shape[1:]), 0, 0)

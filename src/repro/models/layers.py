@@ -36,7 +36,8 @@ __all__ = [
 
 def init_dense(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
     scale = (1.0 / np.sqrt(in_dim)) if scale is None else scale
-    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return w.astype(dtype)
 
 
 def init_norm(dim: int, dtype, bias: bool = False):

@@ -15,7 +15,6 @@ Channel-mix: r = sigmoid(xr Wr); out = r * (relu(xk Wk)^2 Wv).
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,6 @@ from . import rwkv6 as rwkv_mod
 from .layers import (
     dense,
     embed,
-    init_dense,
     init_norm,
     layernorm,
     mlp,

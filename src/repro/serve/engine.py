@@ -15,7 +15,7 @@ Two layers:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +53,10 @@ class ServeEngine:
         """Decode a batch of requests (padded to the engine batch)."""
         if len(requests) == 0:
             return []
-        assert len(requests) <= self.max_batch
+        if len(requests) > self.max_batch:
+            raise ValueError(
+                f"batch of {len(requests)} requests exceeds the engine's "
+                f"max_batch={self.max_batch}")
         B = len(requests)
         lens = [len(r.prompt) for r in requests]
         Sp = max(lens)

@@ -20,7 +20,6 @@ import jax
 import numpy as np
 
 from repro.configs import ModelConfig
-from repro.core.balancer import BatchPlan
 from repro.data.synthetic import SyntheticCorpus
 from repro.launch.steps import make_train_step
 from repro.models import LM

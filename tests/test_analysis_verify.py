@@ -2,11 +2,10 @@
 
 import dataclasses
 
-import numpy as np
 import pytest
 
 from repro.analysis.roofline import (
-    HBM_BW, PEAK_FLOPS_BF16, model_flops, roofline_from_hlo,
+    PEAK_FLOPS_BF16, model_flops, roofline_from_hlo,
 )
 from repro.core.dlt import SystemSpec, solve, verify_schedule
 

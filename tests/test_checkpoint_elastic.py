@@ -1,12 +1,9 @@
 """Fault tolerance: atomic checkpoints, restart, elastic fleet re-planning."""
 
-import json
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.train import checkpoint as ck
 from repro.train import optimizer as opt

@@ -1,7 +1,6 @@
 """Flash-style chunked attention (model hot path) vs reference + gradients."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 try:

@@ -2,7 +2,6 @@
 sweeps, strict schedule mode, streaming map, compiled-cache counters, and
 the free-function compatibility shims."""
 
-import warnings
 
 import numpy as np
 import pytest

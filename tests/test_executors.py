@@ -21,7 +21,6 @@ import pytest
 from repro.core.dlt import DLTEngine, EngineConfig, SystemSpec
 from repro.core.dlt.executors import (
     LANE_MICROBATCH,
-    Executor,
     LocalExecutor,
     ShardedExecutor,
     available_executors,

@@ -1,0 +1,131 @@
+"""hlo_parse edge cases: typed operands, missing names, both text formats.
+
+The compiled (scheduled-SPMD) print and the unoptimized pre-SPMD print
+differ in instruction/computation syntax; the analyzer must read both
+because dltlint feeds it ``lowered.compiler_ir("hlo")`` text while the
+perf model feeds it ``compiled.as_text()``.
+"""
+
+from repro.analysis.hlo_parse import HloStats, analyze_hlo
+from repro.analysis.hlo_parse import _split_operands
+
+
+OPTIMIZED_WHILE = """\
+HloModule m
+
+%cond (arg: (s64[], f64[4])) -> pred[] {
+  %arg = (s64[], f64[4]) parameter(0)
+  %i = s64[] get-tuple-element((s64[], f64[4]) %arg), index=0
+  %k = s64[] constant(25)
+  ROOT %lt = pred[] compare(s64[] %i, s64[] %k), direction=LT
+}
+
+%body (arg.1: (s64[], f64[4])) -> (s64[], f64[4]) {
+  %arg.1 = (s64[], f64[4]) parameter(0)
+  %i.1 = s64[] get-tuple-element((s64[], f64[4]) %arg.1), index=0
+  %one = s64[] constant(1)
+  %next = s64[] add(s64[] %i.1, s64[] %one)
+  %v = f64[4] get-tuple-element((s64[], f64[4]) %arg.1), index=1
+  ROOT %out = (s64[], f64[4]) tuple(s64[] %next, f64[4] %v)
+}
+
+ENTRY %main (p0: f64[4]) -> f64[4] {
+  %p0 = f64[4] parameter(0)
+  %zero = s64[] constant(0)
+  %init = (s64[], f64[4]) tuple(s64[] %zero, f64[4] %p0)
+  %w = (s64[], f64[4]) while((s64[], f64[4]) %init), condition=%cond, body=%body
+  ROOT %r = f64[4] get-tuple-element((s64[], f64[4]) %w), index=1
+}
+"""
+
+
+def test_s64_trip_count_extracted():
+    stats = analyze_hlo(OPTIMIZED_WHILE)
+    assert stats.while_trips == {"body": 25}
+    assert stats.unbounded_whiles == []
+
+
+def test_unbounded_while_reported():
+    # strip the s64 constant out of the condition: no static bound left
+    text = OPTIMIZED_WHILE.replace("  %k = s64[] constant(25)\n", "").replace(
+        "compare(s64[] %i, s64[] %k)", "compare(s64[] %i, s64[] %i)")
+    stats = analyze_hlo(text, default_trip=7)
+    assert stats.unbounded_whiles == ["body"]
+    assert stats.while_trips == {"body": 7}   # fell back to default_trip
+
+
+TYPED_DOT = """\
+HloModule m
+
+ENTRY %main (lhs: f32[4,16], rhs: f32[16,128]) -> f32[4,128] {
+  %lhs = f32[4,16]{1,0} parameter(0)
+  %rhs = f32[16,128]{1,0} parameter(1)
+  ROOT %d = f32[4,128]{1,0} dot(f32[4,16]{1,0} %lhs, f32[16,128]{1,0} %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_typed_operands_resolve_for_flops():
+    # scheduled modules print operands WITH their types; the contracting
+    # dim must come from the lhs symbol, not the type fragment
+    stats = analyze_hlo(TYPED_DOT)
+    assert stats.flops == 2.0 * 4 * 128 * 16
+
+
+def test_split_operands_typed_and_tuple():
+    ops, attrs = _split_operands(
+        "f32[4,16]{1,0} %lhs, f32[16,128]{1,0} %rhs), meta={x=1}")
+    assert ops == ["lhs", "rhs"]
+    assert attrs == ", meta={x=1}"
+    # tuple-typed operand: commas inside the type must not split names
+    ops, _ = _split_operands("(s64[], f64[4]) %carry, f64[] %eps)")
+    assert ops == ["carry", "eps"]
+
+
+def test_missing_operand_name_is_zero_not_crash():
+    text = """\
+HloModule m
+
+ENTRY %main (lhs: f32[4,16]) -> f32[4,128] {
+  %lhs = f32[4,16]{1,0} parameter(0)
+  ROOT %d = f32[4,128]{1,0} dot(f32[4,16]{1,0} %lhs, f32[16,128]{1,0} %ghost), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    stats = analyze_hlo(text)       # %ghost resolves to (0, []) silently
+    assert stats.flops == 2.0 * 4 * 128 * 16
+    assert stats.hbm_traffic_bytes > 0
+
+
+BARE_FORMAT = """\
+HloModule jit_f, entry_computation_layout={(f64[4,16])->f64[4,128]}
+
+ENTRY main.5 {
+  Arg_0.1 = f64[4,16] parameter(0)
+  constant.2 = f64[16,128] constant({...})
+  ROOT dot.3 = f64[4,128] dot(Arg_0.1, constant.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_bare_unoptimized_format_parses():
+    # lowered.compiler_ir("hlo") prints without % sigils or signatures
+    stats = analyze_hlo(BARE_FORMAT)
+    assert stats.flops == 2.0 * 4 * 128 * 16
+    assert "no computations" not in " ".join(stats.notes)
+
+
+def test_empty_text_yields_note_not_crash():
+    stats = analyze_hlo("")
+    assert isinstance(stats, HloStats)
+    assert stats.flops == 0.0
+    assert stats.while_trips == {}
+    assert any("no computations" in n for n in stats.notes)
+
+
+def test_module_header_is_not_a_computation():
+    # "HloModule jit_f, ..." must not be picked up as a computation header
+    stats = analyze_hlo(BARE_FORMAT)
+    assert stats.hbm_traffic_bytes > 0
+    header_only = "HloModule jit_f, entry_computation_layout={()->f64[]}\n"
+    assert analyze_hlo(header_only).notes == [
+        "no computations parsed from HLO text"]

@@ -1,7 +1,6 @@
 """Gradient-accumulation microbatching: same gradient as the full batch."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -110,7 +109,6 @@ def test_param_pspecs_rules():
 
 
 def test_sanitize_drops_nondivisible():
-    import jax.sharding as shd
     mesh = jax.make_mesh((1,), ("model",))
 
     class FakeMesh:

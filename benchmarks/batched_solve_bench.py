@@ -16,6 +16,17 @@ Sec 6 prefix family.  Measures:
 * the banded (block-tridiagonal-arrowhead) interior-point kernel against
   the structured dense-Cholesky path on the mixed-size family — same
   engine and bucketing, only ``kernel`` toggles,
+* the mixed-precision policy (fp32 factor + fp64 iterative refinement)
+  against the fp64 policy on the same banded family — same engine, same
+  kernel, only ``precision`` toggles.  Reports the honest throughput
+  ratio, the per-lane refinement-iteration histogram and the
+  full-fp64 fallback lane count; gates on 1e-6 parity and on every
+  fallback being explained (status identical to the fp64 leg).  On
+  dispatch-bound CPU hosts the fp32 factor saves little wall clock
+  (XLA CPU's small-batched-fp32 dots are no faster than fp64 — see
+  the precision-policy notes in README), so the throughput ratio is
+  tracked as a regression metric vs the committed baseline rather
+  than gated on an absolute speedup,
 * warm-started vs cold ``engine.sweep`` on the Sec 6 prefix family:
   total IPM iterations and scenarios/sec (the warm seed completes a
   neighboring prefix's solution and runs under the adaptive reduced
@@ -93,6 +104,7 @@ def _topology() -> dict:
         device_count=jax.device_count(),
         executor=ENGINE.config.executor if isinstance(
             ENGINE.config.executor, str) else ENGINE.config.executor.name,
+        precision=ENGINE._precision_policy(),
         cpu_count=os.cpu_count(),
     )
 
@@ -259,6 +271,83 @@ def run_banded(r, rng, smoke, out):
             bool(worst < 1e-6), True, rtol=0)
 
 
+def run_precision(r, rng, smoke, out):
+    """Mixed-precision vs fp64 policy on the banded acceptance family.
+
+    Same engine, same (pinned banded) kernel, same bucketing — only the
+    ``precision`` knob toggles, so the ratio isolates the fp32-factor +
+    fp64-refinement path.  Hard gates: 1e-6 parity against the fp64
+    leg, identical statuses (every full-fp64 fallback lane must have
+    recovered), and zero *unexplained* fallbacks.  Throughput is
+    reported honestly and regression-gated against the committed
+    baseline by scripts/bench_compare.py — not against an absolute
+    speedup, because on CPU the factor scan is dispatch-bound and XLA
+    routes small batched fp32 dots down a slow path (README:
+    "Precision policy" documents the measurements).
+    """
+    if smoke:
+        B, n_max, m_lo, m_hi = 64, 3, 4, 16
+    else:
+        B, n_max, m_lo, m_hi = 256, 5, 4, 32
+    label = f"mixed nofe N=1..{n_max} M={m_lo}..{m_hi} banded"
+    specs = _mixed_specs(rng, B, n_max, m_lo, m_hi)
+    kw = dict(kernel="banded")
+
+    # the legs are timed INTERLEAVED (64,mx,64,mx,...) so slow machine
+    # drift — CPU frequency, allocator state — hits both policies alike
+    # and the ratio stays stable even when absolute times wobble
+    runs = {}
+    for policy in ("fp64", "mixed"):
+        runs[policy] = [None, None]                           # best_t, sol
+        _time_batched(specs, False, precision=policy, **kw)   # warm compiles
+    for _ in range(4):
+        for policy in ("fp64", "mixed"):
+            t, s = _time_batched(specs, False, precision=policy, **kw)
+            if runs[policy][0] is None or t < runs[policy][0]:
+                runs[policy] = [t, s]
+    t64, sol64 = runs["fp64"]
+    tmx, solmx = runs["mixed"]
+    ratio = t64 / tmx
+
+    refits = np.asarray(solmx.refine_iterations)
+    pfb = np.asarray(solmx.precision_fallback_mask)
+    counts, edges = np.histogram(refits, bins=8)
+    statuses_equal = bool(np.array_equal(solmx.status, sol64.status))
+    # a fallback lane is *explained* when the fp64 re-solve certified it
+    # to the same status the pure-fp64 leg reaches
+    unexplained = int(np.sum(pfb & (solmx.status != sol64.status)))
+    worst = float(max(
+        abs(solmx.finish_time[k] - sol64.finish_time[k])
+        / max(1.0, abs(sol64.finish_time[k])) for k in range(B)))
+
+    table(["family", "batch", "fp64/s", "mixed/s", "ratio", "refine/lane",
+           "pfb"],
+          [[label, B, round(B / t64, 1), round(B / tmx, 1),
+            f"{ratio:.2f}x", f"{refits.mean():.1f}", int(pfb.sum())]],
+          fmt="{:>30}")
+    out["precision"] = dict(
+        family=label, batch=B, fp64_per_s=B / t64, mixed_per_s=B / tmx,
+        ratio=ratio, parity_worst=worst, statuses_equal=statuses_equal,
+        refine_total=int(refits.sum()),
+        refine_mean=float(refits.mean()),
+        refine_hist=dict(edges=[float(e) for e in edges],
+                         counts=[int(c) for c in counts]),
+        fallback_lanes=int(pfb.sum()), unexplained_fallbacks=unexplained)
+    r.check("mixed vs fp64 policy parity (rel err < 1e-6)",
+            bool(worst < 1e-6), True, rtol=0)
+    r.check("mixed policy statuses identical to fp64",
+            statuses_equal, True, rtol=0)
+    r.check("zero unexplained precision-fallback lanes",
+            bool(unexplained == 0), True, rtol=0)
+    r.note("mixed/fp64 banded throughput ratio",
+           f"{ratio:.2f}x ({B / tmx:.1f} vs {B / t64:.1f} scen/s; "
+           "regression-gated vs baseline, not an absolute target on CPU)")
+    r.note("refinement iterations",
+           f"total {int(refits.sum())}, mean {refits.mean():.1f}/lane, "
+           f"max {int(refits.max())}; "
+           f"{int(pfb.sum())}/{B} lanes re-solved full-fp64")
+
+
 def run_warm(r, rng, smoke, out):
     """Warm-started vs cold parametric sweep on the Sec 6 prefix family.
 
@@ -407,11 +496,12 @@ def run(smoke=False):
     r = check("batched_solve_bench")
     rng = np.random.default_rng(0)
     out = {"smoke": smoke, "topology": _topology(), "uniform": [],
-           "mixed": None, "banded": None, "warm": None, "sharded": None,
-           "counters": None, "cache": None, "passed": None}
+           "mixed": None, "banded": None, "precision": None, "warm": None,
+           "sharded": None, "counters": None, "cache": None, "passed": None}
     run_uniform(r, rng, smoke, out)
     run_mixed(r, rng, smoke, out)
     run_banded(r, rng, smoke, out)
+    run_precision(r, rng, smoke, out)
     run_warm(r, rng, smoke, out)
     run_sharded(r, rng, smoke, out)
 
@@ -439,10 +529,17 @@ def run(smoke=False):
     out["counters"] = dict(
         banded_lanes=st.banded_lanes, pallas_lanes=st.pallas_lanes,
         resolve_lanes=st.resolve_lanes, fallback_lanes=st.fallback_lanes,
-        kernel_fallbacks=st.kernel_fallbacks)
+        kernel_fallbacks=st.kernel_fallbacks,
+        refine_iterations=st.refine_iterations,
+        precision_fallback_lanes=st.precision_fallback_lanes,
+        transfer_lanes=st.transfer_lanes)
     r.note("kernel lane counters",
            f"banded {st.banded_lanes} / pallas {st.pallas_lanes} / "
            f"resolves {st.resolve_lanes} / oracle {st.fallback_lanes}")
+    r.note("precision counters",
+           f"refinements {st.refine_iterations} / fp64 fallbacks "
+           f"{st.precision_fallback_lanes} / transfer lanes "
+           f"{st.transfer_lanes}")
     out["passed"] = r.passed
 
     bench_out = os.environ.get("BENCH_OUT")

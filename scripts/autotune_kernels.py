@@ -11,10 +11,19 @@ family sizes on the current backend and writes the measured break-even
 to a small JSON table::
 
     {"cpu": {"banded_min_rows": 30,
+             "banded_min_rows_mixed": 30,
              "device_count": 1, "cpu_count": 2,
              "measured": [{"m": 4, "rows": 19,
-                           "structured_s": ..., "banded_s": ...}, ...]},
+                           "structured_s": ..., "banded_s": ...}, ...],
+             "measured_mixed": [...]},
      ...}
+
+Both numeric policies are probed: the fp32-factor path's different
+build/factor cost profile can shift the crossover (on dispatch-bound
+CPUs it barely moves; on arithmetic-bound accelerators the banded scan
+wins earlier under ``mixed``), so ``auto`` routing consults
+``banded_min_rows_mixed`` when the engine's precision policy is mixed
+and falls back to the fp64 entry when absent.
 
 The engine consults the table whenever ``EngineConfig.banded_min_rows``
 is left ``None`` (the default): entry for ``jax.default_backend()``
@@ -71,12 +80,13 @@ def _time_solve(eng, specs, repeats):
     return best
 
 
-def measure(batch: int, repeats: int) -> list:
+def measure(batch: int, repeats: int, precision: str = "fp64") -> list:
     rng = np.random.default_rng(0)
     fm = get_formulation("nofrontend_reduced")
     # pure kernel timing: no verification / oracle passes, banded pinned
     # from row 1 so the ladder itself decides nothing
-    base = dict(verify=False, oracle_fallback=False, warm_start=False)
+    base = dict(verify=False, oracle_fallback=False, warm_start=False,
+                precision=precision)
     eng_b = DLTEngine(kernel="banded", banded_min_rows=1, **base)
     eng_s = DLTEngine(kernel="structured", **base)
     out = []
@@ -127,11 +137,23 @@ def main(argv=None) -> int:
         args.batch, args.repeats = 16, 1
 
     backend = jax.default_backend()
-    print(f"== autotune banded_min_rows on backend {backend!r} "
-          f"({jax.device_count()} device(s), batch {args.batch}) ==")
-    measured = measure(args.batch, args.repeats)
-    rows = break_even(measured)
-    print(f"break-even: banded_min_rows = {rows}")
+    entry = dict(
+        device_count=jax.device_count(),
+        cpu_count=os.cpu_count(),
+        batch=args.batch,
+        generated_by="scripts/autotune_kernels.py",
+        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    )
+    for precision in ("fp64", "mixed"):
+        suffix = "" if precision == "fp64" else f"_{precision}"
+        print(f"== autotune banded_min_rows{suffix} on backend {backend!r} "
+              f"({jax.device_count()} device(s), batch {args.batch}, "
+              f"precision {precision}) ==")
+        measured = measure(args.batch, args.repeats, precision)
+        rows = break_even(measured)
+        print(f"break-even: banded_min_rows{suffix} = {rows}")
+        entry[f"banded_min_rows{suffix}"] = rows
+        entry[f"measured{suffix}"] = measured
 
     table = {}
     if os.path.exists(args.out):
@@ -141,15 +163,7 @@ def main(argv=None) -> int:
         except (OSError, ValueError):
             print(f"warning: existing {args.out} unreadable, rewriting")
             table = {}
-    table[backend] = dict(
-        banded_min_rows=rows,
-        device_count=jax.device_count(),
-        cpu_count=os.cpu_count(),
-        batch=args.batch,
-        measured=measured,
-        generated_by="scripts/autotune_kernels.py",
-        timestamp=time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-    )
+    table[backend] = entry
     with open(args.out, "w") as f:
         json.dump(table, f, indent=2, default=float)
         f.write("\n")

@@ -12,7 +12,12 @@ committed ``BENCH_baseline.json`` and fails on:
   regression even when throughput looks fine),
 * the warm-started sweep dropping below cold scenarios/sec, or its
   warm/cold iteration ratio regressing past the threshold,
-* the banded kernel falling behind the structured path.
+* the banded kernel falling behind the structured path,
+* the mixed-precision policy drifting from fp64 parity, leaving any
+  unexplained full-fp64 fallback lane, or its mixed/fp64 throughput
+  ratio regressing past the threshold (the ratio is a regression
+  metric, not an absolute floor: on dispatch-bound CPU hosts the fp32
+  factor is roughly fp64-speed — see README "Precision policy").
 
 Raw scenarios/sec are machine-dependent (laptop vs CI runner vs core
 count), so throughput comparisons are **machine-normalized**: each
@@ -103,7 +108,7 @@ def _topology_match(gate: Gate, cur: dict, base: dict) -> bool:
         gate.skip("topology", "stamp missing on one side — assuming "
                   "matching topologies (rebaseline to add it)")
         return True
-    keys = ("backend", "device_count", "executor")
+    keys = ("backend", "device_count", "executor", "precision")
     if all(ct.get(k) == bt.get(k) for k in keys):
         return True
     gate.skip(
@@ -169,6 +174,32 @@ def compare(cur: dict, base: dict, rtol: float) -> Gate:
     if c:
         gate.check("banded: beats structured", c["speedup"] >= 1.0,
                    f"speedup {c['speedup']:.1f}x")
+
+    c, b = cur.get("precision"), base.get("precision")
+    if not c:
+        gate.check("precision", False, "section missing from current run")
+    else:
+        gate.check("precision: mixed==fp64 parity",
+                   c.get("parity_worst", 1.0) < 1e-6
+                   and bool(c.get("statuses_equal")),
+                   f"worst rel err {c.get('parity_worst', 1.0):.2e}, "
+                   f"statuses_equal={c.get('statuses_equal')}")
+        gate.check("precision: zero unexplained fallbacks",
+                   c.get("unexplained_fallbacks", 1) == 0,
+                   f"{c.get('unexplained_fallbacks')} unexplained of "
+                   f"{c.get('fallback_lanes')} fallback lane(s)")
+        if b:
+            if topo_ok:
+                _throughput(gate, "precision[mixed]", c["mixed_per_s"],
+                            b["mixed_per_s"], rtol, c.get("fp64_per_s"),
+                            b.get("fp64_per_s"))
+            # the mixed/fp64 ratio is machine-normalized by construction
+            gate.check(
+                "precision: mixed/fp64 ratio vs baseline",
+                c["ratio"] >= b["ratio"] * (1.0 - rtol),
+                f"{c['ratio']:.2f}x vs baseline {b['ratio']:.2f}x")
+        else:
+            gate.skip("precision", "no baseline section")
 
     w, bw = cur.get("warm"), base.get("warm")
     if not w:

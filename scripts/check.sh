@@ -5,7 +5,7 @@
 #
 # 0. static analysis: ruff (when installed) and the dltlint graph gate
 #    (scripts/lint_graphs.py — every formulation x kernel x executor
-#    combo traced and checked against rules DL001-DL006),
+#    x precision combo traced and checked against rules DL001-DL007),
 # 1. the full offline test suite (works without hypothesis/scipy — the
 #    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
 # 2. a fast batched-vs-scalar parity + throughput smoke, including a
@@ -48,7 +48,7 @@ else
 fi
 
 echo
-echo "== lint: dltlint graph gate (DL001-DL006 over the registry) =="
+echo "== lint: dltlint graph gate (DL001-DL007 over the registry) =="
 python scripts/lint_graphs.py
 
 echo

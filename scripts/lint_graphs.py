@@ -1,9 +1,10 @@
 #!/usr/bin/env python
 """Sweep the formulation x kernel x executor registry through dltlint.
 
-The CI graph-lint gate: traces every registered combination, runs the
-DL001-DL006 rule set, prints human or JSON output, and exits 1 when
-any ERROR-severity finding survives the waiver file.
+The CI graph-lint gate: traces every registered combination (both
+numeric policies — mixed legs exercise DL007), runs the DL001-DL007
+rule set, prints human or JSON output, and exits 1 when any
+ERROR-severity finding survives the waiver file.
 
     python scripts/lint_graphs.py                 # human output
     python scripts/lint_graphs.py --json          # machine output
@@ -36,6 +37,8 @@ def main(argv=None) -> int:
     ap.add_argument("--formulations", nargs="*", default=None)
     ap.add_argument("--kernels", nargs="*", default=None)
     ap.add_argument("--executors", nargs="*", default=None)
+    ap.add_argument("--precisions", nargs="*", default=None,
+                    help="numeric policies to trace (default: fp64 mixed)")
     ap.add_argument("--batch", type=int, default=4,
                     help="lane count to trace at (padded by the executor)")
     ap.add_argument("--waivers", default=None,
@@ -49,8 +52,8 @@ def main(argv=None) -> int:
 
     report = lint_registry(
         formulations=args.formulations, kernels=args.kernels,
-        executors=args.executors, rules=args.rules,
-        with_hlo=args.hlo, batch=args.batch)
+        executors=args.executors, precisions=args.precisions,
+        rules=args.rules, with_hlo=args.hlo, batch=args.batch)
     if args.waivers:
         report = report.apply_waivers(load_waivers(args.waivers))
 

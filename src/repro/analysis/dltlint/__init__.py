@@ -13,10 +13,12 @@ Shipped rules::
 
     DL001  bounded loops          while trips must derive from max_iter
     DL002  dtype drift            implicit f64->f32 truncation map
+                                  (FP32_FACTOR_SCOPE casts allowlisted)
     DL003  const bloat            captured constants per cache key
     DL004  transfer purity        no device_put/callbacks in bodies
     DL005  banded honesty         declared band == real sparsity
     DL006  pallas VMEM            block working set within budget
+    DL007  refine residual        mixed-policy residual stays fp64
 
 Entry points: :meth:`DLTEngine.lint` (one configured combo),
 :func:`lint_registry` / ``scripts/lint_graphs.py`` (the full sweep and
@@ -35,11 +37,19 @@ from .rules import Rule, all_rules, get_rules, register_rule
 from .runner import (
     LINT_EXECUTORS,
     LINT_KERNELS,
+    LINT_PRECISIONS,
     lint_engine,
     lint_registry,
     trace_target,
 )
-from .trace import TraceArtifact, TraceTarget, demo_batch, iter_eqns
+from .trace import (
+    TraceArtifact,
+    TraceTarget,
+    demo_batch,
+    eqn_scopes,
+    iter_eqns,
+    iter_eqns_scoped,
+)
 
 __all__ = [
     "Finding",
@@ -53,11 +63,14 @@ __all__ = [
     "register_rule",
     "LINT_EXECUTORS",
     "LINT_KERNELS",
+    "LINT_PRECISIONS",
     "lint_engine",
     "lint_registry",
     "trace_target",
     "TraceArtifact",
     "TraceTarget",
     "demo_batch",
+    "eqn_scopes",
     "iter_eqns",
+    "iter_eqns_scoped",
 ]

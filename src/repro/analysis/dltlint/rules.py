@@ -1,4 +1,4 @@
-"""The pluggable rule set: DL001 - DL006.
+"""The pluggable rule set: DL001 - DL007.
 
 Graph-scope rules inspect one :class:`~.trace.TraceArtifact` (the
 ClosedJaxpr of an executor-wrapped engine program, plus optional HLO
@@ -21,10 +21,16 @@ except ImportError:  # pragma: no cover - exercised on min-versions CI
     from jax.core import Literal as _Literal  # type: ignore[attr-defined, no-redef]
 
 from ...core.dlt.batched import build_banded_family, build_family_lp
+from ...core.dlt.precision import FP32_FACTOR_SCOPE, REFINE_RESIDUAL_SCOPE
 from ...core.dlt.stacking import BatchedSystemSpec
 from ..hlo_parse import analyze_hlo
 from .diagnostics import Finding, Severity
-from .trace import TraceArtifact, _demo_specs, iter_eqns
+from .trace import (
+    TraceArtifact,
+    _demo_specs,
+    iter_eqns,
+    iter_eqns_scoped,
+)
 
 __all__ = [
     "Rule",
@@ -171,10 +177,13 @@ class DtypeDrift(Rule):
 
     The IPM hot path is fp64 end to end; a ``convert_element_type``
     that narrows a float (f64 -> f32) silently costs ~8 decimal digits
-    exactly where the normal equations are most ill-conditioned.
-    Widening conversions of weakly-typed operands are reported as INFO:
-    they are where a future mixed-precision pass would insert its
-    boundaries.
+    exactly where the normal equations are most ill-conditioned.  The
+    one sanctioned exception is the mixed-precision factor: narrowings
+    under the :data:`FP32_FACTOR_SCOPE` named scope are the policy's
+    intentional boundary and downgrade to INFO (DL007 separately
+    asserts the refinement residual stays out of fp32).  Widening
+    conversions of weakly-typed operands are reported as INFO: they are
+    where a mixed-precision pass inserts its boundaries.
     """
 
     id = "DL002"
@@ -182,7 +191,7 @@ class DtypeDrift(Rule):
 
     def check(self, art: TraceArtifact) -> List[Finding]:
         out = []
-        for eqn, path in iter_eqns(art.jaxpr):
+        for eqn, path, scopes in iter_eqns_scoped(art.jaxpr):
             if eqn.primitive.name != "convert_element_type":
                 continue
             src = eqn.invars[0].aval
@@ -193,13 +202,26 @@ class DtypeDrift(Rule):
                 continue
             prov = f"{path}/convert" if path else "convert"
             if dst.itemsize < sdt.itemsize:
+                if FP32_FACTOR_SCOPE in scopes:
+                    out.append(Finding(
+                        rule=self.id, severity=Severity.INFO,
+                        message=f"intentional truncation {sdt.name} -> "
+                                f"{dst.name} under the "
+                                f"{FP32_FACTOR_SCOPE!r} scope "
+                                "(mixed-precision factor boundary)",
+                        target=art.label, provenance=prov,
+                        data={"from": sdt.name, "to": dst.name,
+                              "scope": FP32_FACTOR_SCOPE}))
+                    continue
                 out.append(Finding(
                     rule=self.id, severity=Severity.WARNING,
                     message=f"implicit float truncation {sdt.name} -> "
                             f"{dst.name} on the solve path",
                     target=art.label, provenance=prov,
                     hint="make the narrowing explicit (astype at a module "
-                         "boundary) or keep the hot path in float64",
+                         "boundary, inside FP32_FACTOR_SCOPE if it is the "
+                         "mixed-precision factor) or keep the hot path in "
+                         "float64",
                     data={"from": sdt.name, "to": dst.name}))
             elif dst.itemsize > sdt.itemsize and getattr(
                     src, "weak_type", False):
@@ -528,4 +550,84 @@ class PallasVmem(Rule):
                         f"{budget / 2**20:.0f} MiB)",
                 target=art.label,
                 data={"estimate_bytes": worst, "budget_bytes": budget}))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# DL007 — refinement residual precision
+# ---------------------------------------------------------------------------
+
+@register_rule
+class RefineResidualPrecision(Rule):
+    """DL007: the iterative-refinement residual must be exact fp64.
+
+    Mixed precision is only honest if the residual ``r = rhs - M w``
+    that drives the refinement loop is evaluated with the exact fp64
+    operator — an fp32 residual caps the recoverable accuracy at fp32
+    eps and the "refined" solution silently inherits the factor's
+    error.  The residual lives under the
+    :data:`REFINE_RESIDUAL_SCOPE` named scope (see
+    :mod:`repro.core.dlt.precision`); this rule walks every equation
+    inside it and errors on any sub-fp64 float output or narrowing
+    convert.  A mixed-policy trace with NO residual-scope equations at
+    all is a warning: the refinement loop the policy promises never
+    made it into the compiled program.
+    """
+
+    id = "DL007"
+    title = "refinement residual precision"
+
+    def check(self, art: TraceArtifact) -> List[Finding]:
+        if getattr(art.target, "precision", "fp64") != "mixed":
+            return []
+        out = []
+        n_scope = 0
+        for eqn, path, scopes in iter_eqns_scoped(art.jaxpr):
+            if REFINE_RESIDUAL_SCOPE not in scopes:
+                continue
+            n_scope += 1
+            name = eqn.primitive.name
+            prov = f"{path}/{name}" if path else name
+            if name == "convert_element_type":
+                dst = np.dtype(eqn.params["new_dtype"])
+                if np.issubdtype(dst, np.floating) and dst.itemsize < 8:
+                    out.append(Finding(
+                        rule=self.id, severity=Severity.ERROR,
+                        message="refinement residual narrowed to "
+                                f"{dst.name} inside the "
+                                f"{REFINE_RESIDUAL_SCOPE!r} scope",
+                        target=art.label, provenance=prov,
+                        hint="the residual r = rhs - M w must use the "
+                             "exact fp64 operator; move fp32 work into "
+                             "FP32_FACTOR_SCOPE",
+                        data={"to": dst.name}))
+                    continue
+            for v in eqn.outvars:
+                dt = np.dtype(getattr(v.aval, "dtype", np.float64))
+                if np.issubdtype(dt, np.floating) and dt.itemsize < 8:
+                    out.append(Finding(
+                        rule=self.id, severity=Severity.ERROR,
+                        message=f"{name} inside the refine-residual scope "
+                                f"produces {dt.name}",
+                        target=art.label, provenance=prov,
+                        hint="everything under REFINE_RESIDUAL_SCOPE must "
+                             "stay float64",
+                        data={"primitive": name, "dtype": dt.name}))
+                    break
+        if n_scope == 0:
+            out.append(Finding(
+                rule=self.id, severity=Severity.WARNING,
+                message="mixed-precision trace contains no "
+                        f"{REFINE_RESIDUAL_SCOPE!r} equations — the "
+                        "refinement loop is missing from the compiled "
+                        "program",
+                target=art.label,
+                hint="check that the kernel passed make_fp32_solver "
+                     "through to _hsde_ipm_core and that refined_solver "
+                     "wraps the residual in REFINE_RESIDUAL_SCOPE"))
+        elif not out:
+            out.append(Finding(
+                rule=self.id, severity=Severity.INFO,
+                message=f"{n_scope} refine-residual equation(s), all fp64",
+                target=art.label, data={"eqns": n_scope}))
         return out

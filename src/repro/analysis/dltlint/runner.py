@@ -23,6 +23,7 @@ from .trace import TraceArtifact, TraceTarget, demo_batch
 __all__ = [
     "LINT_KERNELS",
     "LINT_EXECUTORS",
+    "LINT_PRECISIONS",
     "trace_target",
     "lint_engine",
     "lint_registry",
@@ -32,11 +33,14 @@ __all__ = [
 #: every instantiation, not the router's pick for this host).
 LINT_KERNELS = ("structured", "dense", "banded", "pallas_banded")
 LINT_EXECUTORS = ("local", "sharded")
+#: Both numeric policies: the mixed legs carry the fp32-factor /
+#: fp64-residual structure DL002's allowlist and DL007 inspect.
+LINT_PRECISIONS = ("fp64", "mixed")
 
 
 def _engine_for(target: TraceTarget) -> DLTEngine:
     overrides = dict(formulation=target.formulation, kernel=target.kernel,
-                     executor=target.executor)
+                     executor=target.executor, precision=target.precision)
     if (target.kernel == "pallas_banded"
             and jax.default_backend() != "tpu"):
         # off-TPU the Pallas kernel only traces through interpret mode
@@ -82,7 +86,8 @@ def lint_engine(engine: DLTEngine, *,
     plan = engine._kernel_plan(fm, bs, fam)
     executor = engine._resolve_executor()
     target = TraceTarget(formulation=fm.name, kernel=plan.kind,
-                         executor=executor.name or "custom", batch=batch)
+                         executor=executor.name or "custom", batch=batch,
+                         precision=engine._precision_policy())
     closed, lowered, key = engine.trace_plan(plan, batch=batch,
                                              lower=with_hlo)
     hlo_text = None
@@ -102,11 +107,12 @@ def lint_engine(engine: DLTEngine, *,
 def lint_registry(*, formulations: Optional[Sequence[str]] = None,
                   kernels: Optional[Sequence[str]] = None,
                   executors: Optional[Sequence[str]] = None,
+                  precisions: Optional[Sequence[str]] = None,
                   rules: Optional[Sequence[str]] = None,
                   with_hlo: bool = False, batch: int = 4,
                   shapes: Optional[Sequence[Tuple[int, int]]] = None,
                   ) -> LintReport:
-    """Lint every formulation x kernel x executor combination.
+    """Lint every formulation x kernel x executor x precision combo.
 
     Combinations a pinned kernel rejects by contract (e.g. ``banded``
     on a structureless formulation) are skipped with an INFO finding
@@ -124,17 +130,19 @@ def lint_registry(*, formulations: Optional[Sequence[str]] = None,
     for fm_name in fms:
         for kernel in (kernels or LINT_KERNELS):
             for executor in (executors or LINT_EXECUTORS):
-                target = TraceTarget(formulation=fm_name, kernel=kernel,
-                                     executor=executor, batch=batch)
-                try:
-                    art = trace_target(target, with_hlo=with_hlo)
-                except ValueError as e:
-                    report.targets.append(f"{target.label} [skipped]")
-                    report.findings.append(Finding(
-                        rule="TRACE", severity=Severity.INFO,
-                        message=f"combination rejected by contract: {e}",
-                        target=target.label))
-                    continue
-                report.targets.append(target.label)
-                report.extend(_run_graph_rules(art, ruleset))
+                for precision in (precisions or LINT_PRECISIONS):
+                    target = TraceTarget(formulation=fm_name, kernel=kernel,
+                                         executor=executor, batch=batch,
+                                         precision=precision)
+                    try:
+                        art = trace_target(target, with_hlo=with_hlo)
+                    except ValueError as e:
+                        report.targets.append(f"{target.label} [skipped]")
+                        report.findings.append(Finding(
+                            rule="TRACE", severity=Severity.INFO,
+                            message=f"combination rejected by contract: {e}",
+                            target=target.label))
+                        continue
+                    report.targets.append(target.label)
+                    report.extend(_run_graph_rules(art, ruleset))
     return report

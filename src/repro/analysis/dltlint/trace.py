@@ -27,24 +27,33 @@ __all__ = [
     "TraceTarget",
     "TraceArtifact",
     "iter_eqns",
+    "iter_eqns_scoped",
+    "eqn_scopes",
     "demo_batch",
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class TraceTarget:
-    """One formulation x kernel x executor combination to trace."""
+    """One formulation x kernel x executor x precision combination.
+
+    ``precision`` pins the engine's numeric policy for the trace
+    ("fp64" or "mixed") — never the env default, so lint results do not
+    depend on ``$DLT_PRECISION`` of the machine running the sweep.
+    """
 
     formulation: str
     kernel: str
     executor: str
     batch: int = 4
     warm: bool = False
+    precision: str = "fp64"
 
     @property
     def label(self) -> str:
+        ptag = f"/{self.precision}" if self.precision != "fp64" else ""
         tag = "/warm" if self.warm else ""
-        return f"{self.formulation}/{self.kernel}/{self.executor}{tag}"
+        return f"{self.formulation}/{self.kernel}/{self.executor}{ptag}{tag}"
 
 
 @dataclasses.dataclass
@@ -100,6 +109,45 @@ def iter_eqns(closed_jaxpr, _path: str = "") -> Iterator[Tuple[Any, str]]:
         for tag, sub in _sub_jaxprs(eqn):
             sub_path = f"{_path}/{tag}" if _path else tag
             yield from iter_eqns(sub, sub_path)
+
+
+def eqn_scopes(eqn) -> str:
+    """The ``jax.named_scope`` path recorded on one equation ("" if none).
+
+    jax stamps the user name stack onto each equation's source info; the
+    rendering is a "/"-joined path that survives into while/scan
+    sub-jaxprs, so intent markers like
+    :data:`~repro.core.dlt.precision.FP32_FACTOR_SCOPE` are visible to
+    rules through every transform the engine applies.  One caveat: an
+    internally-jitted helper (``jnp.clip`` etc.) traces its body OUTSIDE
+    the caller's dynamic scope, so its sub-jaxpr equations come back
+    with an empty stack even though the ``pjit`` equation itself is
+    scoped — scope-sensitive rules should walk with
+    :func:`iter_eqns_scoped`, which inherits the enclosing equation's
+    scope across that boundary.
+    """
+    si = getattr(eqn, "source_info", None)
+    ns = getattr(si, "name_stack", None)
+    return str(ns) if ns is not None else ""
+
+
+def iter_eqns_scoped(closed_jaxpr, _path: str = "", _scope: str = "",
+                     ) -> Iterator[Tuple[Any, str, str]]:
+    """Like :func:`iter_eqns` but yields ``(eqn, path, scopes)``.
+
+    ``scopes`` is the equation's own named-scope stack prefixed with the
+    stack of every enclosing equation — so equations inside a scoped
+    ``pjit``'s sub-jaxpr (whose own stacks are empty, see
+    :func:`eqn_scopes`) still report the caller's scope.
+    """
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    for eqn in jaxpr.eqns:
+        own = eqn_scopes(eqn)
+        full = "/".join(s for s in (_scope, own) if s)
+        yield eqn, _path, full
+        for tag, sub in _sub_jaxprs(eqn):
+            sub_path = f"{_path}/{tag}" if _path else tag
+            yield from iter_eqns_scoped(sub, sub_path, full)
 
 
 def _demo_specs(shapes, masked: bool) -> List[SystemSpec]:

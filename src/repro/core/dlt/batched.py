@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels.dlt_banded_chol import ops as _chol_kernels
+from . import precision as _precision
 from .formulations import (
     BatchFields,
     FamilyDims,
@@ -70,6 +71,7 @@ __all__ = [
     "BandedFamilyLP",
     "BandedGeometry",
     "build_banded_family",
+    "banded_row_transfer",
     "batched_solve",
     "solve_lp_batch",
     "build_family_lp",
@@ -185,7 +187,8 @@ def build_standard_form_batch(bs: BatchedSystemSpec,
 # ---------------------------------------------------------------------------
 
 def _hsde_ipm_core(c, b, A_mul, AT_mul, make_normal_solver,
-                   max_iter: int, tol: float, init=None):
+                   max_iter: int, tol: float, init=None,
+                   make_fp32_solver=None):
     """min c'x s.t. Ax=b, x>=0 via Mehrotra predictor-corrector on the HSDE.
 
     The constraint matrix enters only through three hooks — ``A_mul(x)``,
@@ -194,18 +197,27 @@ def _hsde_ipm_core(c, b, A_mul, AT_mul, make_normal_solver,
     the dense, structured ``[F | I]`` and block-banded instantiations
     share this body.  Shape-static: a while_loop capped at ``max_iter``
     iterations that (under vmap) exits once every lane is decided.
-    Returns (x, obj, status, iters, y, s) where x is the primal solution
-    (x/tau) and (y, s) the tau-scaled duals — the triple a warm start of
-    a nearby program feeds back in.  HSDE certificates make infeasibility
-    detection residual-based: the embedding is always feasible and
-    converges either to tau>0 (optimum) or tau->0 with kappa>0 (primal
-    or dual infeasible).
+    Returns (x, obj, status, iters, y, s, n_refine, stalled) where x is
+    the primal solution (x/tau), (y, s) the tau-scaled duals — the triple
+    a warm start of a nearby program feeds back in — and the last two the
+    mixed-precision telemetry (0/False under the fp64 policy).  HSDE
+    certificates make infeasibility detection residual-based: the
+    embedding is always feasible and converges either to tau>0 (optimum)
+    or tau->0 with kappa>0 (primal or dual infeasible).
 
     ``init`` (optional) is an interior ``(x0, y0, s0)`` starting triple —
     every entry of ``x0``/``s0`` must be strictly positive; the embedding
     restarts at ``tau=1`` with ``kappa`` matched to the average
     complementarity product, so a shifted previous solution of a nearby
     LP (same padded shape) enters the central path close to the optimum.
+
+    ``make_fp32_solver`` (optional) switches on the mixed policy: it maps
+    ``dinv`` to an iteratively-refined fp32-factor solver with the
+    ``(w, n_refine, stalled)`` contract (:mod:`..precision`).  The kernel
+    then runs two phases — the refined fp32 factor while
+    ``mu > SWITCH_MU * mu0`` (where cond(M) is benign and the arithmetic
+    win lives), then the plain fp64 loop to certification, so the
+    stopping test is bitwise the fp64 policy's.
     """
     n = c.shape[0]
     m = b.shape[0]
@@ -240,81 +252,121 @@ def _hsde_ipm_core(c, b, A_mul, AT_mul, make_normal_solver,
                                  jnp.inf))
 
     def cond(carry):
-        _, _, _, _, _, _, done, nit = carry
+        done, nit = carry[6], carry[7]
         return (~done) & (nit < max_iter)
 
-    def body(carry):
-        x, y, s, tau, kappa, status, done, nit = carry
-        mu = (x @ s + tau * kappa) / (n + 1)
-        rP = b * tau - A_mul(x)
-        rD = c * tau - AT_mul(y) - s
-        rG = c @ x - b @ y + kappa
+    def make_body(solver_of_dinv):
+        """Body factory: one Mehrotra step with the given normal solver.
 
-        # normal equations M = A diag(x/s) A' — built AND factored by the
-        # instantiation (dense/structured: Cholesky of the full matrix;
-        # banded: block-tridiagonal-arrowhead Cholesky)
-        dinv = x / s
-        solve_M = make_normal_solver(dinv)
+        ``solver_of_dinv(dinv)`` returns a solve with the
+        ``(w, n_refine, stalled)`` contract (fp64 solvers report 0/False).
+        """
 
-        def A_d_mul(r):  # A diag(dinv) r
-            return A_mul(dinv * r)
+        def body(carry):
+            x, y, s, tau, kappa, status, done, nit, nref, stall = carry
+            mu = (x @ s + tau * kappa) / (n + 1)
+            rP = b * tau - A_mul(x)
+            rD = c * tau - AT_mul(y) - s
+            rG = c @ x - b @ y + kappa
 
-        # tau-column system, shared by predictor and corrector
-        v = solve_M(b + A_d_mul(c))
-        xv = dinv * (AT_mul(v) - c)
-        denom_v = b @ v - c @ xv + kappa / tau
+            # normal equations M = A diag(x/s) A' — built AND factored by
+            # the instantiation (dense/structured: Cholesky of the full
+            # matrix; banded: block-tridiagonal-arrowhead Cholesky)
+            dinv = x / s
+            solve_M = solver_of_dinv(dinv)
 
-        def direction(eta, cc, ck):
-            w = -eta * rD + cc / x
-            u = solve_M(eta * rP - A_d_mul(w))
-            xu = dinv * (AT_mul(u) + w)
-            dtau = (eta * rG + ck / tau - b @ u + c @ xu) / denom_v
-            dy = u + dtau * v
-            dx = xu + dtau * xv
-            ds = (cc - s * dx) / x
-            dkappa = (ck - kappa * dtau) / tau
-            return dx, dy, ds, dtau, dkappa
+            def A_d_mul(r):  # A diag(dinv) r
+                return A_mul(dinv * r)
 
-        def step_len(dx, ds, dtau, dkappa):
-            a = jnp.minimum(max_step(x, dx), max_step(s, ds))
-            a = jnp.minimum(a, jnp.where(dtau < 0, -tau / dtau, jnp.inf))
-            a = jnp.minimum(a, jnp.where(dkappa < 0, -kappa / dkappa, jnp.inf))
-            return a
+            # tau-column system, shared by predictor and corrector
+            v, nr_v, st_v = solve_M(b + A_d_mul(c))
+            xv = dinv * (AT_mul(v) - c)
+            denom_v = b @ v - c @ xv + kappa / tau
 
-        # predictor (affine scaling)
-        dxa, dya, dsa, dta, dka = direction(1.0, -x * s, -tau * kappa)
-        alpha_a = jnp.minimum(1.0, step_len(dxa, dsa, dta, dka))
-        mu_aff = (((x + alpha_a * dxa) @ (s + alpha_a * dsa)
-                   + (tau + alpha_a * dta) * (kappa + alpha_a * dka))
-                  / (n + 1))
-        sigma = jnp.clip((mu_aff / mu) ** 3, 0.0, 1.0)
+            def direction(eta, cc, ck):
+                w = -eta * rD + cc / x
+                u, nr_u, st_u = solve_M(eta * rP - A_d_mul(w))
+                xu = dinv * (AT_mul(u) + w)
+                dtau = (eta * rG + ck / tau - b @ u + c @ xu) / denom_v
+                dy = u + dtau * v
+                dx = xu + dtau * xv
+                ds = (cc - s * dx) / x
+                dkappa = (ck - kappa * dtau) / tau
+                return dx, dy, ds, dtau, dkappa, nr_u, st_u
 
-        # corrector (combined direction, same factorization)
-        cc = sigma * mu - x * s - dxa * dsa
-        ck = sigma * mu - tau * kappa - dta * dka
-        dx, dy, ds, dtau, dkappa = direction(1.0 - sigma, cc, ck)
-        alpha = jnp.minimum(1.0, 0.99995 * step_len(dx, ds, dtau, dkappa))
-        finite = (jnp.all(jnp.isfinite(dx)) & jnp.all(jnp.isfinite(dy))
-                  & jnp.all(jnp.isfinite(ds)) & jnp.isfinite(dtau)
-                  & jnp.isfinite(dkappa) & jnp.isfinite(alpha))
-        alpha = jnp.where(finite & ~done, alpha, 0.0)
+            def step_len(dx, ds, dtau, dkappa):
+                a = jnp.minimum(max_step(x, dx), max_step(s, ds))
+                a = jnp.minimum(a, jnp.where(dtau < 0, -tau / dtau, jnp.inf))
+                a = jnp.minimum(
+                    a, jnp.where(dkappa < 0, -kappa / dkappa, jnp.inf))
+                return a
 
-        x = x + alpha * dx
-        y = y + alpha * dy
-        s = s + alpha * ds
-        tau = tau + alpha * dtau
-        kappa = kappa + alpha * dkappa
-        status, done_now = classify(x, y, s, tau, kappa)
-        return (x, y, s, tau, kappa, status, done | done_now,
-                nit + 1)
+            # predictor (affine scaling)
+            dxa, dya, dsa, dta, dka, nr_a, st_a = direction(
+                1.0, -x * s, -tau * kappa)
+            alpha_a = jnp.minimum(1.0, step_len(dxa, dsa, dta, dka))
+            mu_aff = (((x + alpha_a * dxa) @ (s + alpha_a * dsa)
+                       + (tau + alpha_a * dta) * (kappa + alpha_a * dka))
+                      / (n + 1))
+            sigma = jnp.clip((mu_aff / mu) ** 3, 0.0, 1.0)
+
+            # corrector (combined direction, same factorization)
+            cc = sigma * mu - x * s - dxa * dsa
+            ck = sigma * mu - tau * kappa - dta * dka
+            dx, dy, ds, dtau, dkappa, nr_c, st_c = direction(
+                1.0 - sigma, cc, ck)
+            alpha = jnp.minimum(1.0, 0.99995 * step_len(dx, ds, dtau, dkappa))
+            finite = (jnp.all(jnp.isfinite(dx)) & jnp.all(jnp.isfinite(dy))
+                      & jnp.all(jnp.isfinite(ds)) & jnp.isfinite(dtau)
+                      & jnp.isfinite(dkappa) & jnp.isfinite(alpha))
+            alpha = jnp.where(finite & ~done, alpha, 0.0)
+
+            x = x + alpha * dx
+            y = y + alpha * dy
+            s = s + alpha * ds
+            tau = tau + alpha * dtau
+            kappa = kappa + alpha * dkappa
+            status, done_now = classify(x, y, s, tau, kappa)
+            return (x, y, s, tau, kappa, status, done | done_now,
+                    nit + 1, nref + nr_v + nr_a + nr_c,
+                    stall | st_v | st_a | st_c)
+
+        return body
 
     status0, done0 = classify(x0, y0, s0, tau0, kappa0)
-    carry0 = (x0, y0, s0, tau0, kappa0, status0, done0, jnp.asarray(0))
-    x, y, s, tau, kappa, status, done, nit = jax.lax.while_loop(
-        cond, body, carry0)
+    carry0 = (x0, y0, s0, tau0, kappa0, status0, done0, jnp.asarray(0),
+              jnp.asarray(0), jnp.asarray(False))
+    if make_fp32_solver is None:
+        carry = jax.lax.while_loop(
+            cond, make_body(lambda d: _count0(make_normal_solver(d))),
+            carry0)
+    else:
+        # phase 1: fp32 factor + fp64-residual refinement while the
+        # iterates are far from the boundary (cond(M) ~ 1/mu fits fp32)
+        def cond1(carry):
+            x, _, s, tau, kappa, _, done, nit = carry[:8]
+            mu = (x @ s + tau * kappa) / (n + 1)
+            return ((~done) & (nit < max_iter)
+                    & (mu > _precision.SWITCH_MU * mu0))
+
+        carry = jax.lax.while_loop(
+            cond1, make_body(make_fp32_solver), carry0)
+        # phase 2: plain fp64 finish — certification is exactly fp64's
+        carry = jax.lax.while_loop(
+            cond, make_body(lambda d: _count0(make_normal_solver(d))),
+            carry)
+    x, y, s, tau, kappa, status, done, nit, nref, stall = carry
     inv_tau = 1.0 / jnp.maximum(tau, 1e-300)
     xsol = x * inv_tau
-    return xsol, c @ xsol, status, nit, y * inv_tau, s * inv_tau
+    return (xsol, c @ xsol, status, nit, y * inv_tau, s * inv_tau,
+            nref, stall)
+
+
+def _count0(solve):
+    """Adapt a plain fp64 solve to the (w, n_refine, stalled) contract."""
+    def solve_M(rhs):
+        return solve(rhs), jnp.asarray(0), jnp.asarray(False)
+    return solve_M
 
 
 def _chol_solver(Mmat):
@@ -330,7 +382,10 @@ def _chol_solver(Mmat):
     return solve_M
 
 
-def _hsde_ipm(c, A, b, max_iter: int, tol: float, init=None):
+def _hsde_ipm(c, A, b, max_iter: int, tol: float, init=None,
+              precision: str = "fp64",
+              refine_max: int = _precision.DEFAULT_REFINE_MAX,
+              refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Dense instantiation (generic ``A``) of the HSDE kernel."""
 
     def A_mul(z):
@@ -342,17 +397,32 @@ def _hsde_ipm(c, A, b, max_iter: int, tol: float, init=None):
     def make_normal_solver(dinv):
         return _chol_solver((A * dinv[None, :]) @ A.T)
 
+    make_fp32 = None
+    if precision == "mixed":
+        def make_fp32(dinv):
+            M64 = (A * dinv[None, :]) @ A.T
+            return _precision.refined_solver(
+                _precision.fp32_cholesky(M64), lambda w: M64 @ w,
+                refine_max, refine_tol)
+
     return _hsde_ipm_core(c, b, A_mul, AT_mul, make_normal_solver,
-                          max_iter, tol, init=init)
+                          max_iter, tol, init=init,
+                          make_fp32_solver=make_fp32)
 
 
-def _structured_ops(F, art):
+def _structured_ops(F, art, precision: str = "fp64",
+                    refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                    refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Linear maps of ``A = [[F_ub, I, 0], [F_eq, 0, diag(art)]]``.
 
     Slack and artificial columns touch exactly one row each, so they add
     only a diagonal to the normal equations — each iteration builds
     ``F D_v F' + diag(extra)`` (cost ``m^2 nv``) instead of the dense
     ``A D A'`` (cost ``m^2 (nv+m)``).
+
+    Returns ``(A_mul, AT_mul, make_normal_solver, make_fp32_solver)``;
+    the last is None under the fp64 policy and otherwise the refined
+    fp32-factor solver factory for the core's mixed phase.
     """
     m, nv = F.shape
     n_eq = art.shape[0]
@@ -368,22 +438,42 @@ def _structured_ops(F, art):
     def AT_mul(y):
         return jnp.concatenate([F.T @ y, y[:n_ub], art * y[n_ub:]])
 
-    def make_normal_solver(dinv):
+    def normal_matrix(dinv):
         dv, dsl, dar = split(dinv)
         extra = jnp.concatenate([dsl, art * art * dar])
-        return _chol_solver((F * dv[None, :]) @ F.T + jnp.diag(extra))
+        return (F * dv[None, :]) @ F.T + jnp.diag(extra)
 
-    return A_mul, AT_mul, make_normal_solver
+    def make_normal_solver(dinv):
+        return _chol_solver(normal_matrix(dinv))
+
+    make_fp32 = None
+    if precision == "mixed":
+        def make_fp32(dinv):
+            M64 = normal_matrix(dinv)
+            return _precision.refined_solver(
+                _precision.fp32_cholesky(M64), lambda w: M64 @ w,
+                refine_max, refine_tol)
+
+    return A_mul, AT_mul, make_normal_solver, make_fp32
 
 
-def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float):
+def _hsde_ipm_structured(c, F, b, art, max_iter: int, tol: float,
+                         precision: str = "fp64",
+                         refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                         refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Structured (cold-start) instantiation of the HSDE kernel."""
-    A_mul, AT_mul, make_solver = _structured_ops(F, art)
-    return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol)
+    A_mul, AT_mul, make_solver, make_fp32 = _structured_ops(
+        F, art, precision, refine_max, refine_tol)
+    return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol,
+                          make_fp32_solver=make_fp32)
 
 
 def _hsde_ipm_structured_warm(c, F, b, art, x0, y0, s0,
-                              max_iter: int, tol: float):
+                              max_iter: int, tol: float,
+                              precision: str = "fp64",
+                              refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                              refine_tol: float =
+                              _precision.DEFAULT_REFINE_TOL):
     """Structured instantiation restarted from an interior ``(x0, y0, s0)``.
 
     Used by the engine's warm-started parametric sweeps: the previous
@@ -391,9 +481,10 @@ def _hsde_ipm_structured_warm(c, F, b, art, x0, y0, s0,
     ``tau=1``, so nearby programs converge in a fraction of the cold
     iteration count.
     """
-    A_mul, AT_mul, make_solver = _structured_ops(F, art)
+    A_mul, AT_mul, make_solver, make_fp32 = _structured_ops(
+        F, art, precision, refine_max, refine_tol)
     return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol,
-                          init=(x0, y0, s0))
+                          init=(x0, y0, s0), make_fp32_solver=make_fp32)
 
 
 # ---------------------------------------------------------------------------
@@ -615,9 +706,41 @@ def banded_dual_to_std(bfam: BandedFamilyLP, yb: np.ndarray) -> np.ndarray:
     return y
 
 
+def banded_row_transfer(geom_src: BandedGeometry, geom_dst: BandedGeometry):
+    """Original-row correspondence between two banded geometries.
+
+    Two padded ``(N, M_bucket)`` buckets of the same formulation family
+    share their ``(block, slot)`` coordinate system: block ``k`` is the
+    k-th chain segment and the per-block row-kind order is fixed by the
+    formulation's :class:`BandedStructure`, so a row present in both
+    geometries sits at the same coordinate in both ``posmat``s.  Border
+    (mass/arrowhead) rows are matched by index.  This is the row map
+    that generalizes :func:`banded_warm_convert`'s within-bucket
+    identity: it lets an anchor dual from one bucket seed a neighboring
+    bucket of the same prefix family (rows only the larger bucket has
+    start at zero and are interior-shifted by the warm-start machinery).
+
+    Returns ``(src_rows, dst_rows)`` — equal-length original-row index
+    arrays such that ``y_dst[:, dst_rows] = y_src[:, src_rows]``.
+    """
+    K = min(geom_src.K, geom_dst.K)
+    s = min(geom_src.s, geom_dst.s)
+    pa = geom_src.posmat[:K, :s]
+    pb = geom_dst.posmat[:K, :s]
+    both = (pa >= 0) & (pb >= 0)
+    p = min(geom_src.p, geom_dst.p)
+    src_pos = np.concatenate(
+        [pa[both], geom_src.n_band + np.arange(p, dtype=np.int64)])
+    dst_pos = np.concatenate(
+        [pb[both], geom_dst.n_band + np.arange(p, dtype=np.int64)])
+    return geom_src.perm[src_pos], geom_dst.perm[dst_pos]
+
+
 def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
                 Fg, Hg, Ug, Bq, impl: str = "scan",
-                interpret: bool = False):
+                interpret: bool = False, precision: str = "fp64",
+                refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Linear maps + block-tridiagonal-arrowhead normal solver (one lane).
 
     The normal matrix ``A D A'`` in the banded basis is block
@@ -631,6 +754,12 @@ def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
     :mod:`repro.kernels.dlt_banded_chol`; ``impl`` selects the pure-JAX
     scans (``"scan"``) or the Pallas port (``"pallas"``, with
     ``interpret`` running the kernel body uncompiled on any backend).
+    Both passes are dtype-generic: under ``precision="mixed"`` the same
+    kernels factor Jacobi-equilibrated fp32 blocks and the returned
+    fp32 solver is wrapped in fp64 iterative refinement.
+
+    Returns ``(A_mul, AT_mul, make_normal_solver, make_fp32_solver)``
+    (the last is None under the fp64 policy).
     """
     m, nv, K, s, p = geom.m, geom.nv, geom.K, geom.s, geom.p
     ext_prev = ext[geom.dprev_c]
@@ -643,18 +772,25 @@ def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
     def AT_mul(y):
         return jnp.concatenate([F.T @ y, ext * (y - dsucc * y[geom.succ_c])])
 
-    def make_normal_solver(dinv):
+    def _blocks(dinv, dtype):
+        """Build the four normal-equation blocks in ``dtype`` (no ridge)."""
+        def cast(a):
+            return a.astype(dtype)
+
         dv, dz = dinv[:nv], dinv[nv:]
-        Dg = dv[colix]                                   # (K, w)
-        Dblk = jnp.einsum("ksw,kw,ktw->kst", Fg, Dg, Fg)
-        Oblk = jnp.einsum("ksw,kw,ktw->kst", Hg, Dg, Fg)
-        Ublk = jnp.einsum("kpw,kw,ksw->kps", Ug, Dg, Fg)
-        Db = (Bq * dv[None, :]) @ Bq.T
+        dvc = cast(dv)
+        Dg = dvc[colix]                                  # (K, w)
+        Fgc, Hgc, Ugc, Bqc = cast(Fg), cast(Hg), cast(Ug), cast(Bq)
+        Dblk = jnp.einsum("ksw,kw,ktw->kst", Fgc, Dg, Fgc)
+        Oblk = jnp.einsum("ksw,kw,ktw->kst", Hgc, Dg, Fgc)
+        Ublk = jnp.einsum("kpw,kw,ksw->kps", Ugc, Dg, Fgc)
+        Db = (Bqc * dvc[None, :]) @ Bqc.T
 
         # slack/artificial tridiagonal (position space)
         dz_p = dz[geom.dprev_c]
-        diagv = ext * ext * dz + dcoef * dcoef * ext_prev * ext_prev * dz_p
-        offv = -dcoef * ext_prev * ext_prev * dz_p
+        diagv = cast(ext * ext * dz
+                     + dcoef * dcoef * ext_prev * ext_prev * dz_p)
+        offv = cast(-dcoef * ext_prev * ext_prev * dz_p)
         nb = geom.n_band
         Dblk = Dblk.at[geom.bkb, geom.slotb, geom.slotb].add(diagv[:nb])
         Db = Db + jnp.diag(diagv[nb:])
@@ -662,61 +798,159 @@ def _banded_ops(geom: BandedGeometry, F, ext, dcoef, colix,
         Dblk = Dblk.at[ps[0], ps[1], ps[2]].add(offv[geom.pair_st])
         Dblk = Dblk.at[ps[0], ps[2], ps[1]].add(offv[geom.pair_st])
         Oblk = Oblk.at[pc[0], pc[1], pc[2]].add(offv[geom.pair_ct])
+        return Dblk, Oblk, Ublk, Db
+
+    posc = jnp.where(geom.posmat >= 0, geom.posmat, 0)
+
+    def _band_solve(C, X, V, Cb, rhs, scale=None):
+        """Scatter rhs into band layout, run the substitutions, gather."""
+        rs = rhs if scale is None else rhs * scale
+        rband = (rs[posc] * (geom.posmat >= 0)).astype(C.dtype)  # (K, s)
+        rb = rs[geom.n_band:].astype(C.dtype)
+        wband, wb = _chol_kernels.solve(C, X, V, Cb, rband, rb,
+                                        impl=impl, interpret=interpret)
+        w = jnp.concatenate([wband[geom.bkb, geom.slotb], wb])
+        w = w.astype(rhs.dtype)
+        return w if scale is None else w * scale
+
+    def make_normal_solver(dinv):
+        rhs_dtype = F.dtype
+        Dblk, Oblk, Ublk, Db = _blocks(dinv, rhs_dtype)
 
         # tiny relative ridge (also keeps padded slots factorizable)
         tr = (jnp.sum(jnp.diagonal(Dblk, axis1=1, axis2=2))
               + jnp.trace(Db))
         ridge = 1e-13 * (tr / m + 1.0)
-        Dblk = Dblk + ridge * jnp.eye(s)[None]
-        Db = Db + ridge * jnp.eye(p)
+        Dblk = Dblk + ridge * jnp.eye(s, dtype=rhs_dtype)[None]
+        Db = Db + ridge * jnp.eye(p, dtype=rhs_dtype)
 
-        Opad = jnp.concatenate([jnp.zeros((1, s, s)), Oblk[:-1]], axis=0)
+        Opad = jnp.concatenate(
+            [jnp.zeros((1, s, s), dtype=rhs_dtype), Oblk[:-1]], axis=0)
 
         C, X, V, Cb = _chol_kernels.factor(Dblk, Opad, Ublk, Db,
                                            impl=impl, interpret=interpret)
+        return lambda rhs: _band_solve(C, X, V, Cb, rhs)
 
-        def solve_M(rhs):                                # rhs (m,)
-            posc = jnp.where(geom.posmat >= 0, geom.posmat, 0)
-            rband = rhs[posc] * (geom.posmat >= 0)       # (K, s)
-            rb = rhs[geom.n_band:]
-            wband, wb = _chol_kernels.solve(C, X, V, Cb, rband, rb,
-                                            impl=impl, interpret=interpret)
-            return jnp.concatenate(
-                [wband[geom.bkb, geom.slotb], wb])
+    def _band_mul(D64, O64, U64, Db64):
+        """fp64 normal-equations matvec from the assembled blocks.
 
-        return solve_M
+        The exact refinement operator: the blocks ARE ``A D A'`` in the
+        banded basis (no ridge), and a block-tridiagonal matvec is
+        ``O(K s^2)`` versus the dense ``F`` matvec a generic
+        ``A_mul(dinv * AT_mul(w))`` would pay twice per residual.
+        """
+        Opad = jnp.concatenate(
+            [jnp.zeros((1, s, s), dtype=D64.dtype), O64[:-1]], axis=0)
+        Onext = jnp.concatenate(
+            [O64[:-1], jnp.zeros((1, s, s), dtype=D64.dtype)], axis=0)
 
-    return A_mul, AT_mul, make_normal_solver
+        def M_mul(w):
+            u = w[posc] * (geom.posmat >= 0)            # (K, s)
+            ub = w[geom.n_band:]                        # (p,)
+            u_prev = jnp.concatenate([jnp.zeros((1, s), u.dtype), u[:-1]])
+            u_next = jnp.concatenate([u[1:], jnp.zeros((1, s), u.dtype)])
+            band = (jnp.einsum("kst,kt->ks", D64, u)
+                    + jnp.einsum("kst,kt->ks", Opad, u_prev)
+                    + jnp.einsum("kts,kt->ks", Onext, u_next)
+                    + jnp.einsum("kps,p->ks", U64, ub))
+            border = jnp.einsum("kps,ks->p", U64, u) + Db64 @ ub
+            return jnp.concatenate([band[geom.bkb, geom.slotb], border])
+
+        return M_mul
+
+    make_fp32 = None
+    if precision == "mixed":
+        def make_fp32(dinv):
+            f32 = jnp.float32
+            # one exact fp64 build: the refinement operator, and (cast)
+            # the fp32 factor input — rebuilding in fp32 would route the
+            # einsums through XLA's slow small-fp32-dot path anyway
+            D64, O64, U64, Db64 = _blocks(dinv, F.dtype)
+            M_mul = _band_mul(D64, O64, U64, Db64)
+            with jax.named_scope(_precision.FP32_FACTOR_SCOPE):
+                Dblk, Oblk, Ublk, Db = (a.astype(f32) for a in
+                                        (D64, O64, U64, Db64))
+
+                # Jacobi equilibration: unit block diagonals so the
+                # relative FP32_RIDGE keeps padded/degenerate slots
+                # factorizable and cond() fits fp32's range longer.
+                dd = jnp.diagonal(Dblk, axis1=1, axis2=2)    # (K, s)
+                sb = jnp.where(dd > 0, jax.lax.rsqrt(jnp.clip(dd, 1e-30)),
+                               jnp.ones((), f32))
+                db = jnp.diagonal(Db)
+                scb = jnp.where(db > 0, jax.lax.rsqrt(jnp.clip(db, 1e-30)),
+                                jnp.ones((), f32))
+                sb_next = jnp.concatenate([sb[1:], jnp.ones((1, s), f32)])
+                Dblk = sb[:, :, None] * Dblk * sb[:, None, :]
+                # Oblk[k] couples block k+1 rows to block k columns
+                Oblk = sb_next[:, :, None] * Oblk * sb[:, None, :]
+                Ublk = scb[None, :, None] * Ublk * sb[:, None, :]
+                Db = scb[:, None] * Db * scb[None, :]
+                Dblk = Dblk + _precision.FP32_RIDGE * jnp.eye(s, dtype=f32)
+                Db = Db + _precision.FP32_RIDGE * jnp.eye(p, dtype=f32)
+
+                Opad = jnp.concatenate(
+                    [jnp.zeros((1, s, s), dtype=f32), Oblk[:-1]], axis=0)
+                C, X, V, Cb = _chol_kernels.factor(
+                    Dblk, Opad, Ublk, Db, impl=impl, interpret=interpret)
+
+                # position-space row scale S: solve M w = r via the
+                # factored S M S with w = S solve(S r)
+                scale = jnp.concatenate(
+                    [sb[geom.bkb, geom.slotb], scb]).astype(F.dtype)
+
+            def solve32(rhs):
+                with jax.named_scope(_precision.FP32_FACTOR_SCOPE):
+                    return _band_solve(C, X, V, Cb, rhs, scale=scale)
+
+            return _precision.refined_solver(
+                solve32, M_mul, refine_max, refine_tol)
+
+    return A_mul, AT_mul, make_normal_solver, make_fp32
 
 
 def _hsde_ipm_banded(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
                      max_iter: int, tol: float, geom=None, init=None,
-                     impl: str = "scan", interpret: bool = False):
+                     impl: str = "scan", interpret: bool = False,
+                     precision: str = "fp64",
+                     refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                     refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Banded instantiation of the HSDE kernel (one lane, vmapped).
 
     ``impl="pallas"`` swaps the factor/substitution scans for the
     Pallas ``dlt_banded_chol`` kernel (``interpret`` runs it uncompiled
     for backends without the native lowering).
     """
-    A_mul, AT_mul, make_solver = _banded_ops(
+    A_mul, AT_mul, make_solver, make_fp32 = _banded_ops(
         geom, F, ext, dcoef, colix, Fg, Hg, Ug, Bq,
-        impl=impl, interpret=interpret)
+        impl=impl, interpret=interpret, precision=precision,
+        refine_max=refine_max, refine_tol=refine_tol)
     return _hsde_ipm_core(c, b, A_mul, AT_mul, make_solver, max_iter, tol,
-                          init=init)
+                          init=init, make_fp32_solver=make_fp32)
 
 
 def _hsde_ipm_banded_warm(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
                           x0, y0, s0, max_iter: int, tol: float, geom=None,
-                          impl: str = "scan", interpret: bool = False):
+                          impl: str = "scan", interpret: bool = False,
+                          precision: str = "fp64",
+                          refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                          refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Banded instantiation restarted from a banded-basis warm triple."""
     return _hsde_ipm_banded(c, F, b, ext, dcoef, colix, Fg, Hg, Ug, Bq,
                             max_iter, tol, geom=geom, init=(x0, y0, s0),
-                            impl=impl, interpret=interpret)
+                            impl=impl, interpret=interpret,
+                            precision=precision, refine_max=refine_max,
+                            refine_tol=refine_tol)
 
 
-def _hsde_ipm_dense_warm(c, A, b, x0, y0, s0, max_iter: int, tol: float):
+def _hsde_ipm_dense_warm(c, A, b, x0, y0, s0, max_iter: int, tol: float,
+                         precision: str = "fp64",
+                         refine_max: int = _precision.DEFAULT_REFINE_MAX,
+                         refine_tol: float = _precision.DEFAULT_REFINE_TOL):
     """Dense instantiation restarted from an interior ``(x0, y0, s0)``."""
-    return _hsde_ipm(c, A, b, max_iter, tol, init=(x0, y0, s0))
+    return _hsde_ipm(c, A, b, max_iter, tol, init=(x0, y0, s0),
+                     precision=precision, refine_max=refine_max,
+                     refine_tol=refine_tol)
 
 
 @functools.lru_cache(maxsize=None)
@@ -832,6 +1066,12 @@ class BatchedSolution:
     carry NaN finish times.  ``fallback_mask[k]`` is True where the IPM
     could not certify the lane and the scalar simplex oracle was (or would
     have been) consulted; ``fallback_count`` totals them.
+
+    ``precision`` records the engine policy that produced the batch;
+    under ``"mixed"``, ``refine_iterations[k]`` counts the lane's
+    iterative-refinement corrections and ``precision_fallback_mask[k]``
+    marks lanes the fp32-factor path could not certify and that were
+    re-solved with the full-fp64 executable.
     """
 
     spec: BatchedSystemSpec
@@ -844,6 +1084,9 @@ class BatchedSolution:
     TF: Optional[np.ndarray] = None
     formulation: str = ""
     fallback_mask: Optional[np.ndarray] = None  # (B,) bool
+    precision: str = "fp64"
+    refine_iterations: Optional[np.ndarray] = None  # (B,) mixed only
+    precision_fallback_mask: Optional[np.ndarray] = None  # (B,) bool
 
     @property
     def batch(self) -> int:
@@ -896,7 +1139,20 @@ class BatchedSolution:
                        "fallback was disabled (oracle_fallback=False)"
                        if fb else "no oracle fallback ran")
             msg = (f"lane {k} has no schedule: status={st} "
-                   f"({names.get(st, 'unknown')}); {how}")
+                   f"({names.get(st, 'unknown')}); {how}; "
+                   f"precision={self.precision}")
+            if self.precision == "mixed":
+                # name the refinement state so mixed-path failures are
+                # diagnosable without re-running the batch in fp64
+                nref = (int(self.refine_iterations[k])
+                        if self.refine_iterations is not None else 0)
+                pfb = (self.precision_fallback_mask is not None
+                       and bool(self.precision_fallback_mask[k]))
+                state = ("lane failed again after the full-fp64 "
+                         "re-factor fallback" if pfb
+                         else "fp32+refinement path, no fp64 re-factor "
+                         "fallback ran")
+                msg += f" ({nref} refinement corrections; {state})"
             if st == STATUS_INFEASIBLE:
                 raise InfeasibleError(msg)
             raise RuntimeError(msg)

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...kernels.dlt_banded_chol import ops as _chol_kernels
+from . import precision as _precision
 from .batched import (
     COMPILE_CACHE_SIZE,
     DEFAULT_M_BUCKET_EDGES,
@@ -60,6 +61,7 @@ from .batched import (
     BandedFamilyLP,
     BatchedSolution,
     FamilyLP,
+    _banded_geometry,
     _banded_take,
     _group_lanes,
     _hsde_ipm,
@@ -69,6 +71,7 @@ from .batched import (
     _hsde_ipm_structured_warm,
     _hsde_ipm_dense_warm,
     banded_dual_to_std,
+    banded_row_transfer,
     banded_warm_convert,
     build_banded_family,
     build_family_lp,
@@ -126,14 +129,20 @@ def _read_autotune_table(path: str, mtime: float) -> Optional[dict]:
     return table if isinstance(table, dict) else None
 
 
-def _autotuned_min_rows(backend: str) -> Optional[int]:
+def _autotuned_min_rows(backend: str,
+                        precision: str = "fp64") -> Optional[int]:
     """Measured banded/structured break-even for ``backend``, if tabled.
 
     Reads the JSON table written by ``scripts/autotune_kernels.py``
     (``$DLT_KERNEL_AUTOTUNE`` or ``KERNEL_AUTOTUNE.json``), shaped
-    ``{backend: {"banded_min_rows": int, ...}, ...}``.  Returns ``None``
-    when no table or no entry for this backend exists — callers fall
-    back to the hard-coded :data:`BANDED_MIN_ROWS`.
+    ``{backend: {"banded_min_rows": int, ...}, ...}``.  The autotune
+    script records one break-even per precision policy —
+    ``"banded_min_rows"`` for fp64 and ``"banded_min_rows_mixed"`` for
+    the fp32-factor path (whose different build/factor cost profile can
+    shift the crossover); a missing per-precision entry falls back to
+    the fp64 one.  Returns ``None`` when no table or no entry for this
+    backend exists — callers fall back to the hard-coded
+    :data:`BANDED_MIN_ROWS`.
     """
     path = os.environ.get(KERNEL_AUTOTUNE_ENV, KERNEL_AUTOTUNE_PATH)
     try:
@@ -143,11 +152,16 @@ def _autotuned_min_rows(backend: str) -> Optional[int]:
     table = _read_autotune_table(path, mtime)
     if table is None:
         return None
-    try:
-        rows = int(table[backend]["banded_min_rows"])
-    except (KeyError, TypeError, ValueError):
-        return None
-    return rows if rows >= 1 else None
+    keys = ["banded_min_rows"]
+    if precision != "fp64":
+        keys.insert(0, f"banded_min_rows_{precision}")
+    for key in keys:
+        try:
+            rows = int(table[backend][key])
+        except (KeyError, TypeError, ValueError):
+            continue
+        return rows if rows >= 1 else None
+    return None
 
 FormulationLike = Union[Formulation, str, None]
 
@@ -225,6 +239,27 @@ class EngineConfig:
         (counted in ``stats.resolve_lanes``) before any oracle fallback,
         so results are unchanged — only the straggler wall-clock is.
       min_warm_iter: floor of the adaptive warm budget.
+      precision: numeric policy of the batched IPM — ``"fp64"`` factors
+        the normal equations in double precision everywhere; ``"mixed"``
+        builds and factors them in fp32 (both the scan and Pallas banded
+        kernels plus the structured/dense Cholesky) while iterates are
+        far from the boundary, polishing every solve with a bounded
+        fp64-residual iterative-refinement loop, then finishes with the
+        plain fp64 loop so certification is identical.  Lanes the mixed
+        path still cannot certify are transparently re-solved with a
+        full-fp64 executable (``stats.precision_fallback_lanes``).
+        ``None`` (default) defers to ``$DLT_PRECISION``, falling back
+        to ``"fp64"``.  The policy keys the AOT compile cache.
+      refine_max: iterative-refinement correction cap per normal solve
+        under ``precision="mixed"`` (0 disables refinement — every fp32
+        solve is then flagged stalled unless it is already accurate).
+      refine_tol: relative fp64-residual target of the refinement loop.
+      warm_transfer: allow warm sweeps to seed a bucket's anchors from a
+        neighboring ``(N, M-bucket)`` bucket's completed anchors via the
+        formulation's banded row maps (cross-bucket dual transfer;
+        ``stats.transfer_lanes``).  Only buckets with the same source
+        count and a published ``BandedStructure`` transfer; anything
+        else cold-starts exactly as before.
       compile_cache_size: entries kept in the engine's AOT-compiled
         family-shape LRU.
       compile_cache_dir: when set, also persist compiled executables via
@@ -253,6 +288,10 @@ class EngineConfig:
     warm_shift: float = 1e-2
     adaptive_budget: bool = True
     min_warm_iter: int = 4
+    precision: Optional[str] = None
+    refine_max: int = _precision.DEFAULT_REFINE_MAX
+    refine_tol: float = _precision.DEFAULT_REFINE_TOL
+    warm_transfer: bool = True
     compile_cache_size: int = COMPILE_CACHE_SIZE
     compile_cache_dir: Optional[str] = None
 
@@ -323,6 +362,14 @@ class EngineConfig:
         if not (0.0 < self.warm_shift <= 1.0):
             raise ValueError(
                 f"warm_shift must be in (0, 1], got {self.warm_shift}")
+        if self.precision is not None:
+            _precision.resolve_precision(self.precision)  # raises on junk
+        if self.refine_max < 0:
+            raise ValueError(
+                f"refine_max must be >= 0, got {self.refine_max}")
+        if not (0.0 < self.refine_tol < 1.0):
+            raise ValueError(
+                f"refine_tol must be in (0, 1), got {self.refine_tol}")
         if self.compile_cache_size < 1:
             raise ValueError(
                 f"compile_cache_size must be >= 1, got {self.compile_cache_size}")
@@ -350,6 +397,12 @@ class EngineStats:
     fallback_lanes: int = 0     # lanes re-solved by the simplex oracle
     cache_hits: int = 0         # compiled-executable LRU hits
     cache_misses: int = 0       # compiled-executable LRU misses (compiles)
+    refine_iterations: int = 0  # fp64-residual refinement corrections
+                                # spent by mixed-precision solves
+    precision_fallback_lanes: int = 0  # mixed lanes re-solved with the
+                                # full-fp64 executable
+    transfer_lanes: int = 0     # anchors warm-seeded from a neighboring
+                                # bucket via cross-bucket dual transfer
 
     @property
     def ipm_iterations(self) -> int:
@@ -369,7 +422,9 @@ class _EngineState:
             cold_iterations=0, warm_iterations=0, banded_lanes=0,
             pallas_lanes=0, kernel_fallbacks=0,
             resolve_lanes=0, fallback_lanes=0,
-            cache_hits=0, cache_misses=0)
+            cache_hits=0, cache_misses=0,
+            refine_iterations=0, precision_fallback_lanes=0,
+            transfer_lanes=0)
 
     def bump(self, **by):
         for k, v in by.items():
@@ -524,11 +579,16 @@ class DLTEngine:
                                               self.config.devices)
         return self._executor
 
+    def _precision_policy(self) -> str:
+        """The resolved numeric policy (config value or $DLT_PRECISION)."""
+        return _precision.resolve_precision(self.config.precision)
+
     def _banded_min_rows(self) -> int:
         """Effective ``auto`` break-even: pinned, autotuned, or default."""
         if self.config.banded_min_rows is not None:
             return self.config.banded_min_rows
-        tuned = _autotuned_min_rows(jax.default_backend())
+        tuned = _autotuned_min_rows(jax.default_backend(),
+                                    self._precision_policy())
         return BANDED_MIN_ROWS if tuned is None else tuned
 
     @staticmethod
@@ -637,20 +697,28 @@ class DLTEngine:
 
     def _cache_key(self, plan: _KernelPlan, B: int, warm: bool,
                    max_iter: int, etok: Tuple) -> Tuple:
-        """Compile-LRU key of one (plan, batch, budget, executor) shape."""
+        """Compile-LRU key of one (plan, batch, budget, executor) shape.
+
+        The precision policy (and, under ``"mixed"``, the refinement
+        knobs) key every entry: an fp64 and a mixed executable of the
+        same family shape are different compiled programs.
+        """
         cfg = self.config
         tol = float(cfg.tol)
         dims = plan.fam.dims
+        prec = self._precision_policy()
+        ptok = (prec if prec == "fp64"
+                else (prec, int(cfg.refine_max), float(cfg.refine_tol)))
         if plan.kind in ("banded", "pallas_banded"):
             g = plan.bfam.geom
             return (plan.kind, plan.fm_name, B, g.m, g.nv, g.K, g.s, g.p,
                     plan.bfam.w, max_iter, tol, warm,
-                    cfg.pallas_interpret, etok)
+                    cfg.pallas_interpret, ptok, etok)
         if plan.kind == "dense":
             return ("dense", B, dims.n_rows, dims.n_std, max_iter, tol,
-                    warm, etok)
+                    warm, ptok, etok)
         return ("structured", B, dims.n_rows, dims.nv, dims.n_eq,
-                max_iter, tol, warm, etok)
+                max_iter, tol, warm, ptok, etok)
 
     def _kernel_signature(self, plan: _KernelPlan, B: int, warm: bool,
                           max_iter: int):
@@ -668,13 +736,17 @@ class DLTEngine:
         f8 = np.dtype(np.float64)
         sds = jax.ShapeDtypeStruct
         mrows, nv, n_std = dims.n_rows, dims.nv, dims.n_std
+        pkw = {}
+        if self._precision_policy() == "mixed":
+            pkw = dict(precision="mixed", refine_max=int(cfg.refine_max),
+                       refine_tol=float(cfg.refine_tol))
         winit = [sds((B, n_std), f8), sds((B, mrows), f8),
                  sds((B, n_std), f8)]
         if plan.kind in ("banded", "pallas_banded"):
             g = plan.bfam.geom
             w = plan.bfam.w
             kern = _hsde_ipm_banded_warm if warm else _hsde_ipm_banded
-            kw = dict(max_iter=max_iter, tol=tol, geom=g)
+            kw = dict(max_iter=max_iter, tol=tol, geom=g, **pkw)
             if plan.kind == "pallas_banded":
                 kw.update(impl="pallas", interpret=cfg.pallas_interpret)
             fn = functools.partial(kern, **kw)
@@ -687,13 +759,13 @@ class DLTEngine:
                     sds((B, g.K, g.p, w), f8), sds((B, g.p, g.nv), f8)]
         elif plan.kind == "dense":
             kern = _hsde_ipm_dense_warm if warm else _hsde_ipm
-            fn = functools.partial(kern, max_iter=max_iter, tol=tol)
+            fn = functools.partial(kern, max_iter=max_iter, tol=tol, **pkw)
             in_axes = (0, 0, 0)
             args = [sds((B, n_std), f8), sds((B, mrows, n_std), f8),
                     sds((B, mrows), f8)]
         else:
             kern = _hsde_ipm_structured_warm if warm else _hsde_ipm_structured
-            fn = functools.partial(kern, max_iter=max_iter, tol=tol)
+            fn = functools.partial(kern, max_iter=max_iter, tol=tol, **pkw)
             in_axes = (0, 0, 0, 0)
             args = [sds((B, n_std), f8), sds((B, mrows, nv), f8),
                     sds((B, mrows), f8), sds((B, dims.n_eq), f8)]
@@ -759,6 +831,10 @@ class DLTEngine:
         solution triples are returned (y back in the standard row
         order) for seeding further warm starts.  ``max_iter`` overrides
         the config budget (the adaptive warm budget rides this).
+
+        Returns ``(x, status, iters, n_refine, stalled[, y, s])`` —
+        the last two per-lane mixed-precision telemetry (zeros/False
+        under the fp64 policy).
         """
         cfg = self.config
         executor = self._resolve_executor()
@@ -766,7 +842,7 @@ class DLTEngine:
         B = fam.c.shape[0]
         warm = init is not None
         mi = int(cfg.max_iter if max_iter is None else max_iter)
-        xs, sts, nits, ys, ss = [], [], [], [], []
+        xs, sts, nits, nrefs, stalls, ys, ss = [], [], [], [], [], [], []
         with jax.experimental.enable_x64():
             for lo in range(0, B, cfg.chunk_size):
                 hi = min(lo + cfg.chunk_size, B)
@@ -799,17 +875,20 @@ class DLTEngine:
                 jparts = [jnp.asarray(p, jnp.float64) for p in parts]
                 if plan.kind in ("banded", "pallas_banded"):
                     jparts.insert(5, jnp.asarray(plan.bfam.colix))
-                x, _, st, ni, y, s = exe(*jparts)
+                x, _, st, ni, y, s, nref, stall = exe(*jparts)
                 xs.append(np.asarray(x)[:Bk])
                 sts.append(np.asarray(st)[:Bk])
                 nits.append(np.asarray(ni)[:Bk])
+                nrefs.append(np.asarray(nref)[:Bk])
+                stalls.append(np.asarray(stall)[:Bk])
                 if want_state:
                     yk = np.asarray(y)[:Bk]
                     if plan.kind in ("banded", "pallas_banded"):
                         yk = banded_dual_to_std(bchunk, yk)
                     ys.append(yk)
                     ss.append(np.asarray(s)[:Bk])
-        out = (np.concatenate(xs), np.concatenate(sts), np.concatenate(nits))
+        out = (np.concatenate(xs), np.concatenate(sts), np.concatenate(nits),
+               np.concatenate(nrefs), np.concatenate(stalls))
         if want_state:
             return out + (np.concatenate(ys), np.concatenate(ss))
         return out
@@ -840,16 +919,38 @@ class DLTEngine:
         interior.  Lanes whose anchor was not certified optimal are
         seeded with the cold HSDE point instead.
         """
-        cfg = self.config
-        nv, n_ub = fam.dims.nv, fam.dims.n_ub
-        nR = rest.size
         sub_a = sub.take(anchor)
         fields = fm.unpack_batch(sub_a, xa)
-        bsr = sub.take(rest)
-        cell = bsr.cell_mask
-        cell_a = sub_a.cell_mask[src]
+        fields_src = BatchFields(
+            beta=fields.beta[src], finish=fields.finish[src],
+            TS=None if fields.TS is None else fields.TS[src],
+            TF=None if fields.TF is None else fields.TF[src])
+        return self._warm_init_from(fm, sub, fam, rest, fields_src,
+                                    sub_a.cell_mask[src], ya[src].copy(),
+                                    sta[src])
 
-        beta = fields.beta[src].copy()
+    def _warm_init_from(self, fm: Formulation, sub: BatchedSystemSpec,
+                        fam: FamilyLP, dest: np.ndarray,
+                        fields_src: BatchFields, cell_src: np.ndarray,
+                        y0: np.ndarray, st_src: np.ndarray):
+        """Seed lanes ``dest`` from per-lane source fields + mapped dual.
+
+        The source side is already selected per destination lane and
+        padded to the destination ``(N, M)`` shape: ``fields_src`` /
+        ``cell_src`` from any bucket of the same family (cross-bucket
+        callers pad the M axis and map the dual through
+        :func:`banded_row_transfer`; the within-bucket caller passes the
+        anchor rows through unchanged).  ``y0`` is in the destination's
+        standard row order.
+        """
+        cfg = self.config
+        nv, n_ub = fam.dims.nv, fam.dims.n_ub
+        nR = dest.size
+        bsr = sub.take(dest)
+        cell = bsr.cell_mask
+        cell_a = cell_src
+
+        beta = fields_src.beta.copy()
         beta[~cell] = 0.0
         tot = beta.sum(axis=(1, 2))
         beta *= np.where(tot > 0, bsr.J / np.where(tot > 0, tot, 1.0),
@@ -857,7 +958,7 @@ class DLTEngine:
         TS = TF = None
         if fm.has_intervals:
             N, M = bsr.n_max, bsr.m_max
-            TF = fields.TF[src].copy()
+            TF = fields_src.TF.copy()
             activated = cell & ~cell_a
             for j in range(M):
                 prev_j = TF[:, :, j - 1] if j else np.zeros((nR, N))
@@ -872,10 +973,10 @@ class DLTEngine:
             TS = np.clip(TF - beta * bsr.G[:, :, None], 0.0, None)
             TS[~cell] = 0.0
         v = fm.pack_batch(bsr, BatchFields(
-            beta=beta, finish=fields.finish[src].copy(), TS=TS, TF=TF))
+            beta=beta, finish=fields_src.finish.copy(), TS=TS, TF=TF))
 
-        Fr, br = fam.F[rest], fam.b[rest]
-        cr, artr = fam.c[rest], fam.art[rest]
+        Fr, br = fam.F[dest], fam.b[dest]
+        cr, artr = fam.c[dest], fam.art[dest]
         eps_x = cfg.warm_shift * (1.0 + np.abs(v).max(axis=1, keepdims=True))
         v = np.maximum(v, eps_x)
         Fv = np.einsum("brv,bv->br", Fr, v)
@@ -884,7 +985,6 @@ class DLTEngine:
                       np.clip(br[:, n_ub:] - Fv[:, n_ub:], eps_x, None),
                       eps_x)
         x0 = np.concatenate([v, sl, ar], axis=1)
-        y0 = ya[src].copy()
         FTy = np.einsum("brv,br->bv", Fr, y0)
         s_cat = np.concatenate(
             [cr[:, :nv] - FTy,
@@ -893,9 +993,57 @@ class DLTEngine:
         eps_s = cfg.warm_shift * (1.0 + np.abs(s_cat).max(axis=1,
                                                           keepdims=True))
         s0 = np.maximum(s_cat, eps_s)
-        bad = sta[src] != STATUS_OPTIMAL    # junk anchors seed nothing
+        bad = st_src != STATUS_OPTIMAL      # junk anchors seed nothing
         x0[bad], y0[bad], s0[bad] = 1.0, 0.0, 1.0
         return x0, y0, s0
+
+    def _transfer_init(self, fm: Formulation, sub: BatchedSystemSpec,
+                       fam: FamilyLP, anchor: np.ndarray, transfer: dict):
+        """Cross-bucket warm seed for this group's anchor lanes.
+
+        ``transfer`` carries a neighboring (same source count, smaller
+        M-bucket) group's completed anchors: solution fields, cell
+        masks, standard-layout duals and the bucket's banded geometry.
+        Each destination anchor is seeded from the carried anchor with
+        the nearest processor count; formulation fields are padded on
+        the M axis (newly activated cells are chain-filled by
+        :meth:`_warm_init_from`) and the dual transfers through the
+        :func:`banded_row_transfer` row maps.  Returns ``None`` when
+        either bucket lacks a banded geometry (no row correspondence
+        to transfer through).
+        """
+        geom_src = transfer.get("geom")
+        if geom_src is None:
+            return None
+        struct = fm.banded_structure(sub.n_max, sub.m_max)
+        if struct is None:
+            return None
+        geom_dst = _banded_geometry(struct, fam.dims)
+        src_rows, dst_rows = banded_row_transfer(geom_src, geom_dst)
+
+        mp_dst = np.asarray(sub.n_procs)[anchor]
+        mp_src = np.asarray(transfer["n_procs"])
+        src = np.argmin(np.abs(mp_src[None, :] - mp_dst[:, None]), axis=1)
+
+        f = transfer["fields"]
+        pad_n = sub.n_max - f.beta.shape[1]
+        pad_m = sub.m_max - f.beta.shape[2]
+        if pad_n < 0 or pad_m < 0:
+            return None     # only grow into a larger bucket
+
+        def pad(a):
+            return (None if a is None else
+                    np.pad(a[src], ((0, 0), (0, pad_n), (0, pad_m))))
+
+        fields_src = BatchFields(beta=pad(f.beta),
+                                 finish=f.finish[src].copy(),
+                                 TS=pad(f.TS), TF=pad(f.TF))
+        cell_src = np.pad(transfer["cell"][src],
+                          ((0, 0), (0, pad_n), (0, pad_m)))
+        y0 = np.zeros((anchor.size, fam.dims.n_rows))
+        y0[:, dst_rows] = transfer["y"][src][:, src_rows]
+        return self._warm_init_from(fm, sub, fam, anchor, fields_src,
+                                    cell_src, y0, transfer["st"][src])
 
     def _warm_budget(self, nia: np.ndarray, sta: np.ndarray) -> int:
         """Reduced iteration budget for warm-seeded lanes.
@@ -926,8 +1074,52 @@ class DLTEngine:
         budget = max(budget, cfg.min_warm_iter)
         return int(min(cfg.max_iter, 2 * ((budget + 1) // 2)))
 
+    def _make_carry(self, fm: Formulation, sub: BatchedSystemSpec,
+                    fam: FamilyLP, plan: _KernelPlan, anchor: np.ndarray,
+                    xa: np.ndarray, ya: np.ndarray, sta: np.ndarray,
+                    nia: np.ndarray) -> Optional[dict]:
+        """Package this group's anchors for cross-bucket transfer."""
+        struct = fm.banded_structure(sub.n_max, sub.m_max)
+        if struct is None:
+            return None
+        geom = (plan.bfam.geom if plan.kind in ("banded", "pallas_banded")
+                else _banded_geometry(struct, fam.dims))
+        sub_a = sub.take(anchor)
+        return dict(fields=fm.unpack_batch(sub_a, xa),
+                    cell=sub_a.cell_mask, y=ya, st=sta, ni=nia,
+                    n_procs=np.asarray(sub.n_procs)[anchor], geom=geom)
+
+    def _precision_fallback(self, plan: _KernelPlan, x: np.ndarray,
+                            st: np.ndarray, ni: np.ndarray,
+                            nref: np.ndarray):
+        """Full-fp64 re-factor of lanes the mixed path could not certify.
+
+        The mixed policy's safety net: any budget-exhausted lane (a
+        stalled refinement shows up here as non-convergence) re-runs
+        cold through the fp64 executable of the same plan — surfaced in
+        ``stats.precision_fallback_lanes``, never silent.  Infeasibility
+        verdicts are not re-run: the mixed kernel's certification phase
+        is already pure fp64 (and the oracle fallback re-checks every
+        non-optimal lane anyway).
+        """
+        pfb = np.zeros(st.shape[0], dtype=bool)
+        self._state.bump(refine_iterations=nref.sum())
+        if self._precision_policy() != "mixed":
+            return x, st, ni, nref, pfb
+        failed = np.flatnonzero(st == STATUS_MAXITER)
+        if failed.size:
+            xf, stf, nif, _, _ = self.configured(
+                precision="fp64")._solve_family(_plan_take(plan, failed))
+            x[failed], st[failed] = xf, stf
+            ni[failed] += nif
+            pfb[failed] = True
+            self._state.bump(precision_fallback_lanes=failed.size,
+                             cold_iterations=nif.sum())
+        return x, st, ni, nref, pfb
+
     def _solve_group(self, fm: Formulation, sub: BatchedSystemSpec,
-                     fam: FamilyLP, warm: bool):
+                     fam: FamilyLP, warm: bool,
+                     transfer: Optional[dict] = None):
         """Solve one padded family, warm two-phase when asked & worthwhile.
 
         Warm plan: lanes are already ordered by processor count, so every
@@ -938,22 +1130,66 @@ class DLTEngine:
         failing it are automatically re-solved cold at the full budget.
         The padded LP shape is shared group-wide, so seeds transfer with
         no reshaping.
+
+        ``transfer`` (a neighboring bucket's anchor carry) upgrades the
+        anchor pass itself to a warm start (see :meth:`_transfer_init`);
+        anchors the transferred seed cannot certify re-run cold, so a
+        bad transfer costs a re-solve, never a result.
+
+        Returns ``(x, st, ni, nref, pfb, carry)``: per-lane solutions,
+        statuses, iterations, refinement counts, the mixed-precision
+        fallback mask and (in warm sweeps with a banded-structure
+        formulation) the anchor carry for the next bucket.
         """
         st8 = self._state
+        cfg = self.config
         B = fam.c.shape[0]
         plan = self._kernel_plan(fm, sub, fam)
         if plan.kind == "banded":
             st8.bump(banded_lanes=B)
         elif plan.kind == "pallas_banded":
             st8.bump(pallas_lanes=B)
-        if not warm or B <= self.config.warm_stride:
-            x, st, ni = self._solve_family(plan)
+        want_carry = warm and cfg.warm_transfer
+
+        if not warm or B <= cfg.warm_stride:
+            out = self._solve_family(plan, want_state=want_carry)
+            x, st, ni, nref = out[0], out[1], out[2], out[3]
+            carry = None
+            if want_carry:
+                carry = self._make_carry(fm, sub, fam, plan, np.arange(B),
+                                         x, out[5], st, ni)
             st8.bump(lanes=B, cold_lanes=B, cold_iterations=ni.sum())
-            return x, st, ni
-        anchor = np.arange(0, B, self.config.warm_stride)
+            return self._precision_fallback(plan, x, st, ni, nref) + (carry,)
+
+        anchor = np.arange(0, B, cfg.warm_stride)
         rest = np.setdiff1d(np.arange(B), anchor)
-        xa, sta, nia, ya, sa = self._solve_family(
-            _plan_take(plan, anchor), want_state=True)
+        anchor_plan = _plan_take(plan, anchor)
+        init_a = (None if transfer is None
+                  else self._transfer_init(fm, sub, fam, anchor, transfer))
+        xa, sta, nia, nra, _, ya, sa = self._solve_family(
+            anchor_plan, init=init_a, want_state=True)
+        if init_a is not None:
+            st8.bump(transfer_lanes=anchor.size, warm_lanes=anchor.size,
+                     warm_iterations=nia.sum())
+            # anchors must be trustworthy — they enter the results AND
+            # seed the rest pass — so transferred-seed failures re-run
+            # cold at the full budget
+            failed = np.flatnonzero(sta != STATUS_OPTIMAL)
+            if failed.size:
+                xf, stf, nif, nrf, _, yf, sf = self._solve_family(
+                    _plan_take(anchor_plan, failed), want_state=True)
+                xa[failed], sta[failed] = xf, stf
+                ya[failed], sa[failed] = yf, sf
+                nia[failed] += nif
+                nra[failed] += nrf
+                st8.bump(resolve_lanes=failed.size,
+                         cold_iterations=nif.sum())
+        else:
+            st8.bump(cold_lanes=anchor.size, cold_iterations=nia.sum())
+        carry = None
+        if want_carry:
+            carry = self._make_carry(fm, sub, fam, plan, anchor,
+                                     xa, ya, sta, nia)
         # nearest anchor (either side) seeds each remaining lane
         hi = np.clip(np.searchsorted(anchor, rest), 0, anchor.size - 1)
         lo = np.clip(hi - 1, 0, anchor.size - 1)
@@ -962,29 +1198,30 @@ class DLTEngine:
         init = self._warm_init(fm, sub, fam, rest, anchor, src, xa, ya, sta)
         budget = self._warm_budget(nia, sta)
         rest_plan = _plan_take(plan, rest)
-        xr, str_, nir = self._solve_family(rest_plan, init=init,
-                                           max_iter=budget)
+        xr, str_, nir, nrr, _ = self._solve_family(rest_plan, init=init,
+                                                   max_iter=budget)
         st8.bump(warm_iterations=nir.sum())
-        if budget < self.config.max_iter:
+        if budget < cfg.max_iter:
             # adaptive-budget safety net: lanes the reduced budget could
             # not certify re-run cold at the full budget (still cheaper
             # than letting every straggler gate the whole warm chunk)
             failed = np.flatnonzero(str_ == STATUS_MAXITER)
             if failed.size:
-                xf, stf, nif = self._solve_family(
+                xf, stf, nif, nrf, _ = self._solve_family(
                     _plan_take(rest_plan, failed))
                 xr[failed], str_[failed] = xf, stf
                 nir[failed] += nif
+                nrr[failed] += nrf
                 st8.bump(resolve_lanes=failed.size,
                          cold_iterations=nif.sum())
         x = np.empty_like(fam.c)
         st = np.empty(B, dtype=sta.dtype)
         ni = np.empty(B, dtype=nia.dtype)
-        x[anchor], st[anchor], ni[anchor] = xa, sta, nia
-        x[rest], st[rest], ni[rest] = xr, str_, nir
-        st8.bump(lanes=B, cold_lanes=anchor.size, warm_lanes=rest.size,
-                 cold_iterations=nia.sum())
-        return x, st, ni
+        nref = np.empty(B, dtype=nra.dtype)
+        x[anchor], st[anchor], ni[anchor], nref[anchor] = xa, sta, nia, nra
+        x[rest], st[rest], ni[rest], nref[rest] = xr, str_, nir, nrr
+        st8.bump(lanes=B, warm_lanes=rest.size)
+        return self._precision_fallback(plan, x, st, ni, nref) + (carry,)
 
     def _solve_batch_scalar(self, bspec: BatchedSystemSpec, frontend: bool,
                             formulation: FormulationLike) -> BatchedSolution:
@@ -1079,10 +1316,19 @@ class DLTEngine:
             TF = np.zeros((B, Nmax, Mmax))
         status = np.full(B, STATUS_MAXITER, dtype=np.int64)
         iters = np.zeros(B, dtype=np.int64)
+        prec = self._precision_policy()
+        refits = np.zeros(B, dtype=np.int64)
+        pfb_all = np.zeros(B, dtype=bool)
 
         m_edges = WARM_M_BUCKET_EDGES if warm else cfg.m_bucket_edges
-        for (nb, mb), idx in _group_lanes(
-                bspec, cfg.bucket, m_edges).items():
+        groups = list(_group_lanes(bspec, cfg.bucket, m_edges).items())
+        if warm:
+            # visit buckets of one source count in ascending M-edge order
+            # so each bucket's anchors can seed the next (cross-bucket
+            # warm transfer keyed on nb)
+            groups.sort(key=lambda kv: kv[0])
+        carry_by_nb: dict = {}
+        for (nb, mb), idx in groups:
             # never pad past the group's true max — a group's padded shape
             # then depends only on its own lanes, so solving it inside a
             # ragged batch or alone is the same computation
@@ -1091,7 +1337,12 @@ class DLTEngine:
                 idx = idx[np.argsort(bspec.n_procs[idx], kind="stable")]
             sub = bspec.take(idx, n_pad=nb, m_pad=mb)
             fam = build_family_lp(sub, fm)
-            x, st, ni = self._solve_group(fm, sub, fam, warm)
+            transfer = (carry_by_nb.get(nb)
+                        if warm and cfg.warm_transfer else None)
+            x, st, ni, nref, pfb, carry = self._solve_group(
+                fm, sub, fam, warm, transfer=transfer)
+            if carry is not None:
+                carry_by_nb[nb] = carry
             fields = fm.unpack_batch(sub, x)
             sl = np.ix_(idx, np.arange(nb), np.arange(mb))
             beta[sl] = fields.beta
@@ -1101,6 +1352,8 @@ class DLTEngine:
                 TF[sl] = fields.TF
             status[idx] = st
             iters[idx] = ni
+            refits[idx] = nref
+            pfb_all[idx] = pfb
 
         # exact zeros on padding (IPM leaves ~tol-level dust on masked vars)
         cell = bspec.cell_mask
@@ -1161,6 +1414,9 @@ class DLTEngine:
             spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
             status=status, iterations=iters, TS=TS, TF=TF,
             formulation=fm.name, fallback_mask=fallback_mask,
+            precision=prec,
+            refine_iterations=refits if prec == "mixed" else None,
+            precision_fallback_mask=pfb_all if prec == "mixed" else None,
         )
 
     def sweep(self, spec: SystemSpec, frontend: bool = True,

@@ -36,6 +36,38 @@ __all__ = [
 ]
 
 
+#: contraction width at or below which the fp32 broadcast-sum matmul
+#: beats XLA's batched dot (measured CPU crossover between s=6 and
+#: s=13: at 6 the explicit form wins ~2.7x, at 13 it loses ~7x).
+_MM_BSUM_MAX = 8
+
+
+def _mm(a, b):
+    """Tiny-block matmul, routed by dtype and block size.
+
+    XLA CPU sends *small* batched fp32 dots (the vmapped ``(s, s)`` /
+    ``(p, s)`` products here) down a path measured ~2.5x SLOWER than the
+    same fp64 dot; an explicit broadcast-multiply + sum stays in the
+    elementwise vectorizer and beats the fp32 dot ~2.7x — but its
+    ``O(s^3)`` intermediate loses badly once blocks grow, so it only
+    fires for fp32 at width <= ``_MM_BSUM_MAX``.  fp64 keeps
+    ``dot_general`` (where it always wins).
+    """
+    if a.dtype == jnp.float32 and a.shape[-1] <= _MM_BSUM_MAX:
+        return (a[..., :, :, None] * b[..., None, :, :]).sum(axis=-2)
+    return a @ b
+
+
+def _mv(a, v):
+    """Tiny matrix-vector product, same dtype routing as :func:`_mm`.
+
+    The broadcast form is ``O(s^2)`` like the dot, so no size cutoff.
+    """
+    if a.dtype == jnp.float32:
+        return (a * v[..., None, :]).sum(axis=-1)
+    return a @ v
+
+
 def banded_factor(Dblk, Opad, Ublk):
     """Blocked Cholesky of the band: ``(C, X, V, S)``.
 
@@ -52,10 +84,10 @@ def banded_factor(Dblk, Opad, Ublk):
         Cprev, Vprev, S = carry
         Dk, Okp, Uk = inp
         X = jax.scipy.linalg.solve_triangular(Cprev, Okp.T, lower=True).T
-        Ck = jnp.linalg.cholesky(Dk - X @ X.T)
+        Ck = jnp.linalg.cholesky(Dk - _mm(X, X.T))
         Vk = jax.scipy.linalg.solve_triangular(
-            Ck, (Uk - Vprev @ X.T).T, lower=True).T
-        return (Ck, Vk, S + Vk @ Vk.T), (Ck, X, Vk)
+            Ck, (Uk - _mm(Vprev, X.T)).T, lower=True).T
+        return (Ck, Vk, S + _mm(Vk, Vk.T)), (Ck, X, Vk)
 
     carry0 = (jnp.eye(s, dtype=dt), jnp.zeros((p, s), dt),
               jnp.zeros((p, p), dt))
@@ -71,7 +103,7 @@ def banded_solve_fwd(C, X, rband):
     def fwd(u_prev, inp):
         Ck, Xk, rk = inp
         u = jax.scipy.linalg.solve_triangular(
-            Ck, rk - Xk @ u_prev, lower=True)
+            Ck, rk - _mv(Xk, u_prev), lower=True)
         return u, u
 
     _, u = jax.lax.scan(fwd, jnp.zeros(s, C.dtype), (C, X, rband))
@@ -89,7 +121,7 @@ def banded_solve_bwd(C, Xnext, V, u, wb):
     def bwd(w_next, inp):
         Ck, Xn, Vk, uk = inp
         wk = jax.scipy.linalg.solve_triangular(
-            Ck.T, uk - Xn.T @ w_next - Vk.T @ wb, lower=False)
+            Ck.T, uk - _mv(Xn.T, w_next) - _mv(Vk.T, wb), lower=False)
         return wk, wk
 
     _, wband = jax.lax.scan(bwd, jnp.zeros(s, C.dtype), (C, Xnext, V, u),
@@ -115,7 +147,10 @@ def solve(C, X, V, Cb, rband, rb):
     the band part back to row positions.
     """
     u = banded_solve_fwd(C, X, rband)
-    t = rb - jnp.einsum("kps,ks->p", V, u)
+    if V.dtype == jnp.float32:
+        t = rb - (V * u[:, None, :]).sum(axis=(0, 2))
+    else:
+        t = rb - jnp.einsum("kps,ks->p", V, u)
     ub = jax.scipy.linalg.solve_triangular(Cb, t, lower=True)
     wb = jax.scipy.linalg.solve_triangular(Cb.T, ub, lower=False)
     Xnext = jnp.concatenate(

@@ -27,10 +27,15 @@ from repro.analysis.dltlint.rules import (
     ConstBloat,
     DtypeDrift,
     PallasVmem,
+    RefineResidualPrecision,
     TransferPurity,
 )
 from repro.core.dlt.engine import DLTEngine
 from repro.core.dlt.formulations import get_formulation
+from repro.core.dlt.precision import (
+    FP32_FACTOR_SCOPE,
+    REFINE_RESIDUAL_SCOPE,
+)
 from repro.kernels.dlt_banded_chol.kernel import (
     banded_factor_pallas,
     vmem_estimate,
@@ -38,14 +43,15 @@ from repro.kernels.dlt_banded_chol.kernel import (
 
 
 def _artifact(fn, *args, executor="local", max_iter=25, hlo_text=None,
-              x64=True):
+              x64=True, precision="fp64"):
     """TraceArtifact for a hand-written function (seeded-defect harness)."""
     import contextlib
     ctx = jax.experimental.enable_x64() if x64 else contextlib.nullcontext()
     with ctx:
         closed = jax.make_jaxpr(fn)(*args)
     return TraceArtifact(
-        target=TraceTarget("seeded", "structured", executor),
+        target=TraceTarget("seeded", "structured", executor,
+                           precision=precision),
         jaxpr=closed, cache_key=("seeded",), max_iter=max_iter,
         hlo_text=hlo_text)
 
@@ -124,6 +130,83 @@ def test_dl002_clean_on_pure_f64():
         return jnp.sqrt(x) + x
 
     art = _artifact(pure, jax.ShapeDtypeStruct((4,), jnp.float64))
+    assert not _hits(DtypeDrift().check(art), "DL002", Severity.WARNING)
+
+
+def test_dl002_allowlists_scoped_fp32_factor_cast():
+    def scoped(x):
+        with jax.named_scope(FP32_FACTOR_SCOPE):
+            y = x.astype(jnp.float32) * 2.0
+        return y.astype(jnp.float64)
+
+    art = _artifact(scoped, jax.ShapeDtypeStruct((4,), jnp.float64))
+    findings = DtypeDrift().check(art)
+    assert not _hits(findings, "DL002", Severity.WARNING)
+    notes = [f for f in findings if f.data.get("scope") == FP32_FACTOR_SCOPE]
+    assert notes and notes[0].severity == Severity.INFO
+
+
+# ---------------------------------------------------------------------------
+# DL007 — refinement residual precision
+# ---------------------------------------------------------------------------
+
+def test_dl007_catches_f32_residual():
+    def bad(rhs, M):
+        with jax.named_scope(REFINE_RESIDUAL_SCOPE):
+            r = rhs.astype(jnp.float32) - M @ rhs.astype(jnp.float32)
+        return r.astype(jnp.float64)
+
+    art = _artifact(bad, jax.ShapeDtypeStruct((4,), jnp.float64),
+                    jax.ShapeDtypeStruct((4, 4), jnp.float32),
+                    precision="mixed")
+    errs = _hits(RefineResidualPrecision().check(art), "DL007")
+    assert errs and REFINE_RESIDUAL_SCOPE in errs[0].message
+
+
+def test_dl007_warns_when_refinement_missing():
+    def no_scope(x):
+        return jnp.sqrt(x) + x
+
+    art = _artifact(no_scope, jax.ShapeDtypeStruct((4,), jnp.float64),
+                    precision="mixed")
+    warns = _hits(RefineResidualPrecision().check(art), "DL007",
+                  Severity.WARNING)
+    assert warns and "missing" in warns[0].message
+
+
+def test_dl007_silent_under_fp64_policy():
+    def no_scope(x):
+        return jnp.sqrt(x) + x
+
+    art = _artifact(no_scope, jax.ShapeDtypeStruct((4,), jnp.float64))
+    assert not RefineResidualPrecision().check(art)
+
+
+def test_dl007_accepts_fp64_residual():
+    def good(rhs, M):
+        with jax.named_scope(REFINE_RESIDUAL_SCOPE):
+            r = rhs - M @ rhs
+        return r
+
+    art = _artifact(good, jax.ShapeDtypeStruct((4,), jnp.float64),
+                    jax.ShapeDtypeStruct((4, 4), jnp.float64),
+                    precision="mixed")
+    findings = RefineResidualPrecision().check(art)
+    assert not _hits(findings, "DL007", Severity.WARNING)
+    assert any(f.severity == Severity.INFO and f.data.get("eqns", 0) > 0
+               for f in findings)
+
+
+def test_dl007_real_mixed_trace_is_clean():
+    """The engine's actual mixed banded program: scoped casts only, fp64
+    residual — both precision rules must pass on the real graph."""
+    art = trace_target(TraceTarget("nofrontend_reduced", "banded", "local",
+                                   precision="mixed"))
+    assert art.target.label.endswith("/mixed")
+    d7 = RefineResidualPrecision().check(art)
+    assert not _hits(d7, "DL007", Severity.WARNING)
+    assert any(f.severity == Severity.INFO and f.data.get("eqns", 0) > 0
+               for f in d7)
     assert not _hits(DtypeDrift().check(art), "DL002", Severity.WARNING)
 
 
@@ -270,7 +353,9 @@ def test_registry_sweep_is_clean():
                            kernels=["structured", "banded"],
                            executors=["local"])
     assert report.ok, report.format()
-    assert len(report.targets) == 2
+    # both precision legs per combination
+    assert len(report.targets) == 4
+    assert sum(t.endswith("/mixed") for t in report.targets) == 2
 
 
 def test_engine_lint_surface():

@@ -1,0 +1,255 @@
+"""Always-on routing service under Poisson load: the SLO latency bench.
+
+The batched-engine bench answers "scenarios/second"; a continuously
+running router is judged by its latency *distribution*.  This bench
+drives :class:`repro.serve.service.RouterService` — the async admission
+queue + deadline-batching + drift-re-solve loop in front of the shared
+DLT session — and measures what the service layer adds on top of the
+solver:
+
+* **Window/one-shot bit-identity.**  A batched admission window's
+  decisions must be bit-identical to one-shot ``route_requests`` on the
+  same stats: every routing solve pads onto the executor micro-batch
+  ladder (``LANE_MICROBATCH`` lanes), so the per-lane program — and
+  therefore each decision's bits — never depends on how many queries
+  shared the window.  Checked here and asserted in
+  tests/test_router_service.py.
+* **Drift-triggered warm re-solves.**  Replica rates are drifted past
+  the EWMA threshold; the next window must re-solve against the new
+  estimate warm-seeded from the previous window's solution via the
+  engine's ``warm_transfer`` carry (``transfer_lanes > 0``), and its
+  makespan must match the scalar simplex oracle to 1e-6.
+* **SLO under Poisson load.**  A real-time arrival process (exponential
+  inter-arrival gaps) submits route queries against the service running
+  on its background thread, with a mid-run rate drift to exercise warm
+  re-solves under load.  Reports p50/p99/p999 admission-to-decision
+  latency and sustained decisions/sec.
+
+Run:  PYTHONPATH=src python -m benchmarks.service_bench
+      PYTHONPATH=src python -m benchmarks.service_bench --smoke
+
+With ``BENCH_OUT=<path>`` the results MERGE into the perf-trajectory
+JSON as a ``"service"`` section (scripts/check.sh runs the batched bench
+first, so the file already exists and this bench updates it in place,
+AND-ing its pass flag).  ``scripts/bench_compare.py`` gates the
+booleans unconditionally and the p99 latency / decisions/sec floors
+under the usual topology-stamp skip rules; rebaseline per
+CONTRIBUTING.md after an intentional service change.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+
+from repro.core.dlt import DLTEngine, SystemSpec, solve
+from repro.core.dlt.executors import LANE_MICROBATCH
+from repro.serve import RouterStats, RouterService, ServiceConfig
+from repro.serve.engine import route_requests_batch
+from .common import check, table
+
+#: The bench session — every service window and every one-shot reference
+#: solve shares this engine's compiled-shape LRU, exactly as a deployed
+#: router would share the process-wide default session.
+ENGINE = DLTEngine(
+    executor=os.environ.get("ENGINE_EXECUTOR", "local"),
+    compile_cache_dir=os.environ.get("ENGINE_COMPILE_CACHE") or None)
+
+#: One fleet shape for the whole bench (2 frontends, 4 replicas): every
+#: window lands in the same engine size bucket, so the SLO phase runs
+#: entirely on executables compiled during the correctness phases.
+FLEET_G = [0.001, 0.002]
+FLEET_R = [0.0, 0.0]
+FLEET_A = [0.05, 0.10, 0.20, 0.08]
+
+
+def _topology() -> dict:
+    return dict(
+        backend=jax.default_backend(),
+        device_count=jax.device_count(),
+        executor=ENGINE.config.executor if isinstance(
+            ENGINE.config.executor, str) else ENGINE.config.executor.name,
+        precision=ENGINE._precision_policy(),
+        cpu_count=os.cpu_count(),
+    )
+
+
+def _fleet() -> RouterStats:
+    return RouterStats(FLEET_G, FLEET_R, FLEET_A)
+
+
+def run_identity(r, out):
+    """Batched admission window vs one-shot routing: bit-identity."""
+    stats = _fleet()
+    counts = [40, 17, 8, 3, 64]
+    svc = RouterService(stats, ServiceConfig(admit_window_ms=1.0),
+                       engine=ENGINE)
+    futs = [svc.submit(c) for c in counts]
+    svc.step()
+    ones = [route_requests_batch(stats, [c], engine=ENGINE)[0]
+            for c in counts]
+    bit = all(
+        np.array_equal(f.result().shares, o["shares"])
+        and np.array_equal(f.result().schedule.beta, o["schedule"].beta)
+        and f.result().makespan == o["makespan"]
+        for f, o in zip(futs, ones))
+    r.check("admission-window decisions bit-identical to one-shot "
+            "route_requests", bool(bit), True, rtol=0)
+    out["bit_identical_to_oneshot"] = bool(bit)
+
+
+def run_drift(r, out):
+    """Drift past the EWMA threshold -> warm re-solve + oracle parity."""
+    stats = _fleet()
+    svc = RouterService(
+        stats, ServiceConfig(admit_window_ms=1.0, drift_threshold=0.15,
+                             ewma_alpha=0.5), engine=ENGINE)
+    f0 = svc.submit(40)
+    svc.step()                                     # cold anchor window
+    f0.result()
+    drifted_A = np.asarray(FLEET_A) * 1.5
+    for _ in range(4):
+        svc.observe(drifted_A)                     # EWMA crosses 15%
+    before = ENGINE.stats
+    f1 = svc.submit(40)
+    svc.step()                                     # warm drift window
+    dec = f1.result()
+    transferred = ENGINE.stats.transfer_lanes - before.transfer_lanes
+    resolves = ENGINE.stats.resolve_lanes - before.resolve_lanes
+
+    # oracle parity: the warm decision's makespan vs the scalar simplex
+    # on the drifted fleet (the EWMA converged to exactly 1.5x A here)
+    oracle = solve(SystemSpec(G=FLEET_G, R=FLEET_R, A=drifted_A, J=40.0),
+                   frontend=True, solver="simplex")
+    parity = abs(dec.makespan - oracle.finish_time) / max(
+        1.0, oracle.finish_time)
+
+    s = svc.stats
+    table(["phase", "warm", "transfer", "resolves", "makespan", "parity"],
+          [["drift re-solve", dec.warm, int(transferred), int(resolves),
+            round(dec.makespan, 6), f"{parity:.1e}"]], fmt="{:>14}")
+    r.check("drift window was warm-seeded (transfer_lanes > 0)",
+            bool(dec.warm and transferred > 0), True, rtol=0)
+    r.check("drift re-solve makespan parity vs scalar simplex oracle "
+            "(rel err < 1e-6)", bool(parity < 1e-6), True, rtol=0)
+    out["drift"] = dict(
+        transfer_lanes=int(transferred), resolve_lanes=int(resolves),
+        warm_windows=s.warm_windows, drift_events=s.drift_events,
+        parity=float(parity))
+
+
+def run_slo(r, smoke, out):
+    """Poisson arrival load against the background-thread service."""
+    if smoke:
+        rate, duration, window_ms = 120.0, 2.0, 10.0
+    else:
+        rate, duration, window_ms = 250.0, 8.0, 5.0
+    rng = np.random.default_rng(7)
+    stats = _fleet()
+    # max_window pins every solve to the LANE_MICROBATCH-lane executable
+    # compiled during the correctness phases: a backlog drains as several
+    # full windows instead of padding up the lane ladder and paying a
+    # mid-run compile (the latency cliff this bench exists to catch)
+    svc = RouterService(
+        stats, ServiceConfig(admit_window_ms=window_ms, drift_threshold=0.2,
+                             ewma_alpha=0.5, max_window=LANE_MICROBATCH),
+        engine=ENGINE)
+    futs = []
+    drift_at = duration / 2.0
+    drift_injected = threading.Event()
+    t_start = time.perf_counter()
+    with svc:
+        # absolute-time Poisson schedule: each arrival targets
+        # t_start + sum(exponential gaps), so Python submit overhead
+        # shifts no later arrivals and the effective rate stays nominal
+        t_next = 0.0
+        while True:
+            t_next += float(rng.exponential(1.0 / rate))
+            if t_next >= duration:
+                break
+            now = time.perf_counter() - t_start
+            if now >= drift_at and not drift_injected.is_set():
+                # a fleet-wide 30% slowdown mid-run: the next window must
+                # re-solve warm without stalling admission
+                for _ in range(4):
+                    svc.observe(np.asarray(FLEET_A) * 1.3)
+                drift_injected.set()
+            delay = t_next - (time.perf_counter() - t_start)
+            if delay > 0:
+                time.sleep(delay)
+            futs.append(svc.submit(int(rng.integers(1, 48))))
+    # context exit stops the loop and flushes the queue
+    t_total = time.perf_counter() - t_start
+
+    decs = [f.result(timeout=60) for f in futs]
+    lat_ms = np.asarray([d.latency_seconds for d in decs]) * 1e3
+    p50, p99, p999 = (float(np.quantile(lat_ms, q))
+                      for q in (0.50, 0.99, 0.999))
+    dps = len(decs) / t_total
+    s = svc.stats
+    mean_window = len(decs) / max(s.windows, 1)
+
+    table(["arrivals/s", "decisions", "windows", "win size", "p50 ms",
+           "p99 ms", "p999 ms", "dec/s"],
+          [[round(rate, 1), len(decs), s.windows, round(mean_window, 1),
+            round(p50, 2), round(p99, 2), round(p999, 2),
+            round(dps, 1)]], fmt="{:>11}")
+    r.check("all admitted queries decided (zero failed decisions)",
+            bool(s.failed_decisions == 0 and s.queue_depth == 0), True,
+            rtol=0)
+    r.check("mid-run drift produced a warm window under load",
+            bool(s.warm_windows >= 1 and s.drift_events >= 1), True, rtol=0)
+    r.note("admission-to-decision latency",
+           f"p50 {p50:.2f} ms / p99 {p99:.2f} ms / p999 {p999:.2f} ms "
+           f"over {len(decs)} decisions")
+    r.note("sustained decisions/sec",
+           f"{dps:.1f} (arrival rate {rate:.0f}/s, window {window_ms} ms, "
+           f"mean window size {mean_window:.1f})")
+    r.note("service counters",
+           f"windows {s.windows} (warm {s.warm_windows}) / transfer lanes "
+           f"{s.transfer_lanes} / engine solve time "
+           f"{s.solve_seconds_total:.2f}s")
+    out["slo"] = dict(
+        arrival_rate_per_s=rate, duration_s=duration,
+        admit_window_ms=window_ms, decisions=len(decs),
+        windows=s.windows, warm_windows=s.warm_windows,
+        mean_window_size=mean_window,
+        p50_ms=p50, p99_ms=p99, p999_ms=p999,
+        decisions_per_s=dps, failed=s.failed_decisions,
+        transfer_lanes=s.transfer_lanes,
+        solve_seconds_total=s.solve_seconds_total)
+
+
+def run(smoke=False):
+    r = check("service_bench")
+    out = {}
+    run_identity(r, out)
+    run_drift(r, out)
+    run_slo(r, smoke, out)
+
+    bench_out = os.environ.get("BENCH_OUT")
+    if bench_out:
+        # merge into the batched bench's trajectory JSON (check.sh runs
+        # that bench first); standalone runs start a fresh file
+        try:
+            with open(bench_out) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            data = {"smoke": smoke, "topology": _topology(), "passed": True}
+        data["service"] = out
+        data["passed"] = bool(data.get("passed", True)) and r.passed
+        with open(bench_out, "w") as f:
+            json.dump(data, f, indent=2, default=float)
+        r.note("service section merged into", bench_out)
+    return r
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    raise SystemExit(0 if run(smoke=smoke).passed else 1)

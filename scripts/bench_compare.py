@@ -17,7 +17,14 @@ committed ``BENCH_baseline.json`` and fails on:
   unexplained full-fp64 fallback lane, or its mixed/fp64 throughput
   ratio regressing past the threshold (the ratio is a regression
   metric, not an absolute floor: on dispatch-bound CPU hosts the fp32
-  factor is roughly fp64-speed — see README "Precision policy").
+  factor is roughly fp64-speed — see README "Precision policy"),
+* the routing service (``benchmarks/service_bench.py``) losing
+  window/one-shot bit-identity, a drift re-solve arriving without
+  warm-transfer seeding or off scalar-oracle parity, any failed
+  decision under the Poisson load, or — topology permitting — its p99
+  admission-to-decision latency / sustained decisions/sec regressing
+  past the baseline (p99 gets double the throughput tolerance: thread
+  scheduling is noisier than the solver).
 
 Raw scenarios/sec are machine-dependent (laptop vs CI runner vs core
 count), so throughput comparisons are **machine-normalized**: each
@@ -200,6 +207,54 @@ def compare(cur: dict, base: dict, rtol: float) -> Gate:
                 f"{c['ratio']:.2f}x vs baseline {b['ratio']:.2f}x")
         else:
             gate.skip("precision", "no baseline section")
+
+    s, bs = cur.get("service"), base.get("service")
+    if s is None:
+        gate.skip("service", "no service section in current run "
+                  "(benchmarks/service_bench.py did not merge its results)")
+    else:
+        gate.check("service: window bit-identical to one-shot",
+                   bool(s.get("bit_identical_to_oneshot")),
+                   "batched admission decisions == route_requests bits")
+        d = s.get("drift") or {}
+        gate.check("service: drift re-solve warm-seeded",
+                   d.get("transfer_lanes", 0) > 0,
+                   f"{d.get('transfer_lanes', 0)} transfer lane(s), "
+                   f"{d.get('resolve_lanes', 0)} re-solved cold")
+        gate.check("service: drift re-solve oracle parity",
+                   d.get("parity", 1.0) < 1e-6,
+                   f"rel err {d.get('parity', 1.0):.1e} vs scalar simplex")
+        slo = s.get("slo") or {}
+        gate.check("service: zero failed decisions under load",
+                   slo.get("failed", 1) == 0,
+                   f"{slo.get('failed')} failed of "
+                   f"{slo.get('decisions')} decision(s)")
+        bslo = (bs or {}).get("slo") or {}
+        if not bslo:
+            gate.skip("service SLO", "no baseline SLO section "
+                      "(rebaseline to arm the latency gates)")
+        elif not topo_ok:
+            gate.skip("service SLO", "topology mismatch — latency and "
+                      "decisions/sec floors skipped")
+        elif bool(cur.get("smoke")) != bool(base.get("smoke")):
+            gate.skip("service SLO", "smoke/full mismatch — the SLO load "
+                      "profile differs, latency floors skipped")
+        else:
+            # thread-scheduling noise is larger than solver noise: the
+            # p99 ceiling gets double the throughput tolerance
+            ceil = bslo["p99_ms"] * (1.0 + 2.0 * rtol)
+            gate.check(
+                "service: p99 admission-to-decision latency",
+                slo.get("p99_ms", float("inf")) <= ceil,
+                f"{slo.get('p99_ms', 0):.2f} ms vs baseline "
+                f"{bslo['p99_ms']:.2f} ms (ceiling {ceil:.2f} ms)")
+            floor = bslo["decisions_per_s"] * (1.0 - rtol)
+            gate.check(
+                "service: sustained decisions/sec",
+                slo.get("decisions_per_s", 0.0) >= floor,
+                f"{slo.get('decisions_per_s', 0):.1f} vs baseline "
+                f"{bslo['decisions_per_s']:.1f} (floor {floor:.1f}; "
+                "arrival-rate bound, not machine-normalized)")
 
     w, bw = cur.get("warm"), base.get("warm")
     if not w:

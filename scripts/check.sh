@@ -18,6 +18,12 @@
 #    are tracked per commit.  With ENGINE_COMPILE_CACHE set, compiled
 #    executables persist in that directory across processes (CI caches
 #    it between workflow runs).
+#    benchmarks/service_bench.py --smoke then drives the always-on
+#    routing service (async admission queue + deadline batching + drift
+#    re-solves) under a Poisson arrival load, checks window/one-shot
+#    bit-identity and warm-transfer oracle parity, and merges a
+#    "service" section (p50/p99/p999 admission-to-decision latency,
+#    decisions/sec) into the same $BENCH_OUT JSON.
 # 3. scripts/bench_compare.py diffs $BENCH_OUT against the committed
 #    BENCH_baseline.json: >30% machine-normalized scenarios/sec
 #    regression, any fallback-count increase, or a warm sweep slower
@@ -58,6 +64,10 @@ python -m pytest -x -q
 echo
 echo "== batched engine smoke (parity + speedup + banded + warm sweep) =="
 python -m benchmarks.batched_solve_bench --smoke
+
+echo
+echo "== routing service smoke (SLO latency under Poisson load) =="
+python -m benchmarks.service_bench --smoke
 
 echo
 echo "perf trajectory written to ${BENCH_OUT}"

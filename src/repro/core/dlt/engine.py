@@ -1119,7 +1119,8 @@ class DLTEngine:
 
     def _solve_group(self, fm: Formulation, sub: BatchedSystemSpec,
                      fam: FamilyLP, warm: bool,
-                     transfer: Optional[dict] = None):
+                     transfer: Optional[dict] = None,
+                     want_carry: bool = False):
         """Solve one padded family, warm two-phase when asked & worthwhile.
 
         Warm plan: lanes are already ordered by processor count, so every
@@ -1131,15 +1132,23 @@ class DLTEngine:
         The padded LP shape is shared group-wide, so seeds transfer with
         no reshaping.
 
-        ``transfer`` (a neighboring bucket's anchor carry) upgrades the
-        anchor pass itself to a warm start (see :meth:`_transfer_init`);
+        ``transfer`` (a neighboring bucket's — or, for the routing
+        service, a previous solve's — anchor carry) upgrades the anchor
+        pass itself to a warm start (see :meth:`_transfer_init`);
         anchors the transferred seed cannot certify re-run cold, so a
-        bad transfer costs a re-solve, never a result.
+        bad transfer costs a re-solve, never a result.  In the flat
+        (no anchor/rest split) branch a transfer seeds EVERY lane.
+
+        ``want_carry`` forces anchor-carry collection even on cold flat
+        solves — the routing service collects a carry from every
+        admission window so a later drift re-solve can warm-start from
+        it.  Collecting state never changes the compiled program or the
+        results, only what is copied back off-device.
 
         Returns ``(x, st, ni, nref, pfb, carry)``: per-lane solutions,
         statuses, iterations, refinement counts, the mixed-precision
-        fallback mask and (in warm sweeps with a banded-structure
-        formulation) the anchor carry for the next bucket.
+        fallback mask and (when collected) the anchor carry for the
+        next bucket / window.
         """
         st8 = self._state
         cfg = self.config
@@ -1149,16 +1158,41 @@ class DLTEngine:
             st8.bump(banded_lanes=B)
         elif plan.kind == "pallas_banded":
             st8.bump(pallas_lanes=B)
-        want_carry = warm and cfg.warm_transfer
+        want_carry = (want_carry or warm) and cfg.warm_transfer
 
         if not warm or B <= cfg.warm_stride:
-            out = self._solve_family(plan, want_state=want_carry)
+            # flat branch: every lane solves in one pass — seeded from
+            # the carried anchors when a transfer is available (the
+            # routing service's drift re-solve path), cold otherwise
+            init0 = (self._transfer_init(fm, sub, fam, np.arange(B),
+                                         transfer)
+                     if warm and transfer is not None else None)
+            out = self._solve_family(plan, init=init0,
+                                     want_state=want_carry)
             x, st, ni, nref = out[0], out[1], out[2], out[3]
+            y = out[5] if want_carry else None
+            if init0 is not None:
+                st8.bump(transfer_lanes=B, warm_lanes=B,
+                         warm_iterations=ni.sum())
+                # transferred-seed failures re-run cold at full budget
+                failed = np.flatnonzero(st != STATUS_OPTIMAL)
+                if failed.size:
+                    fout = self._solve_family(_plan_take(plan, failed),
+                                              want_state=want_carry)
+                    x[failed], st[failed] = fout[0], fout[1]
+                    ni[failed] += fout[2]
+                    nref[failed] += fout[3]
+                    if want_carry:
+                        y[failed] = fout[5]
+                    st8.bump(resolve_lanes=failed.size,
+                             cold_iterations=fout[2].sum())
+                st8.bump(lanes=B)
+            else:
+                st8.bump(lanes=B, cold_lanes=B, cold_iterations=ni.sum())
             carry = None
             if want_carry:
                 carry = self._make_carry(fm, sub, fam, plan, np.arange(B),
-                                         x, out[5], st, ni)
-            st8.bump(lanes=B, cold_lanes=B, cold_iterations=ni.sum())
+                                         x, y, st, ni)
             return self._precision_fallback(plan, x, st, ni, nref) + (carry,)
 
         anchor = np.arange(0, B, cfg.warm_stride)
@@ -1297,6 +1331,45 @@ class DLTEngine:
         whose neighbors share structure; ``sweep``/``grid`` pass the
         config's ``warm_start`` automatically.
         """
+        return self._solve_batch_impl(specs, frontend, formulation,
+                                      presorted=presorted, warm=warm)[0]
+
+    def solve_batch_carry(
+            self, specs, frontend: bool = True,
+            formulation: FormulationLike = None, *,
+            presorted: bool = False, warm: bool = False,
+            carry_in: Optional[dict] = None,
+    ) -> Tuple[BatchedSolution, dict]:
+        """Service-facing :meth:`solve_batch`: ``(solution, carry)``.
+
+        Identical results to :meth:`solve_batch` — collecting anchor
+        state never changes the compiled program — plus an **anchor
+        carry**: per source-count bucket, the solved lanes' formulation
+        fields, duals and banded geometry, exactly the package the
+        cross-bucket ``warm_transfer`` path seeds from.  Feed a previous
+        call's carry back through ``carry_in`` together with
+        ``warm=True`` to warm-start THIS batch from those solutions
+        (counted in ``stats.transfer_lanes``; lanes the transferred
+        seed cannot certify re-run cold, so a stale carry costs a
+        re-solve, never a result).  This is the always-on routing
+        service's drift re-solve hook: window *t*'s carry anchors
+        window *t+1* after the fleet's measured stats drift.
+
+        The carry maps source-count -> opaque anchor package; treat it
+        as a token to pass back, not a stable API.  On the scalar
+        engine (or with ``warm_transfer`` disabled) the carry is empty
+        and ``carry_in`` is ignored.
+        """
+        return self._solve_batch_impl(specs, frontend, formulation,
+                                      presorted=presorted, warm=warm,
+                                      carry_in=carry_in, want_carry=True)
+
+    def _solve_batch_impl(
+            self, specs, frontend: bool = True,
+            formulation: FormulationLike = None, *,
+            presorted: bool = False, warm: bool = False,
+            carry_in: Optional[dict] = None, want_carry: bool = False,
+    ) -> Tuple[BatchedSolution, dict]:
         cfg = self.config
         fm = self._formulation(frontend, formulation)
         bspec = (specs if isinstance(specs, BatchedSystemSpec)
@@ -1304,7 +1377,8 @@ class DLTEngine:
         if cfg.engine == "scalar":
             # honor the config contract: the scalar engine keeps the
             # one-LP-at-a-time loop (and its pinned solver) on every path
-            return self._solve_batch_scalar(bspec, frontend, formulation)
+            return (self._solve_batch_scalar(bspec, frontend, formulation),
+                    {})
         frontend = fm.frontend
         B, Nmax, Mmax = bspec.batch, bspec.n_max, bspec.m_max
 
@@ -1327,7 +1401,7 @@ class DLTEngine:
             # so each bucket's anchors can seed the next (cross-bucket
             # warm transfer keyed on nb)
             groups.sort(key=lambda kv: kv[0])
-        carry_by_nb: dict = {}
+        carry_by_nb: dict = dict(carry_in) if carry_in else {}
         for (nb, mb), idx in groups:
             # never pad past the group's true max — a group's padded shape
             # then depends only on its own lanes, so solving it inside a
@@ -1340,7 +1414,8 @@ class DLTEngine:
             transfer = (carry_by_nb.get(nb)
                         if warm and cfg.warm_transfer else None)
             x, st, ni, nref, pfb, carry = self._solve_group(
-                fm, sub, fam, warm, transfer=transfer)
+                fm, sub, fam, warm, transfer=transfer,
+                want_carry=want_carry)
             if carry is not None:
                 carry_by_nb[nb] = carry
             fields = fm.unpack_batch(sub, x)
@@ -1410,14 +1485,14 @@ class DLTEngine:
         self._state.bump(batches=1,
                          fallback_lanes=(fallback_mask.sum()
                                          if cfg.oracle_fallback else 0))
-        return BatchedSolution(
+        return (BatchedSolution(
             spec=bspec, frontend=frontend, finish_time=finish, beta=beta,
             status=status, iterations=iters, TS=TS, TF=TF,
             formulation=fm.name, fallback_mask=fallback_mask,
             precision=prec,
             refine_iterations=refits if prec == "mixed" else None,
             precision_fallback_mask=pfb_all if prec == "mixed" else None,
-        )
+        ), carry_by_nb)
 
     def sweep(self, spec: SystemSpec, frontend: bool = True,
               m_max: Optional[int] = None, *,

@@ -1,5 +1,9 @@
-from .engine import ServeEngine, Request, RouterStats
+from .engine import (ServeEngine, Request, RouterStats, route_requests,
+                     route_requests_batch)
 from .sampler import greedy, temperature_sample
+from .service import (RouteDecision, RouterService, ServiceConfig,
+                      ServiceStats)
 
-__all__ = ["ServeEngine", "Request", "RouterStats", "greedy",
-           "temperature_sample"]
+__all__ = ["ServeEngine", "Request", "RouterStats", "route_requests",
+           "route_requests_batch", "RouteDecision", "RouterService",
+           "ServiceConfig", "ServiceStats", "greedy", "temperature_sample"]

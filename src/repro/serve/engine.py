@@ -23,10 +23,12 @@ import numpy as np
 
 from repro.configs import ModelConfig
 from repro.core.dlt import SystemSpec, get_default_engine
+from repro.core.dlt.executors import LANE_MICROBATCH
 from repro.models import LM
 from .sampler import greedy
 
-__all__ = ["Request", "ServeEngine", "RouterStats", "route_requests"]
+__all__ = ["Request", "ServeEngine", "RouterStats", "route_requests",
+           "route_requests_batch"]
 
 
 @dataclasses.dataclass
@@ -91,34 +93,97 @@ class ServeEngine:
 
 @dataclasses.dataclass
 class RouterStats:
-    """Measured serving fleet: the paper's (G, R, A) for a request burst."""
+    """Measured serving fleet: the paper's (G, R, A) for a request burst.
+
+    Validated on construction — a NaN or non-positive rate here would
+    otherwise propagate into the LP as an unbounded/degenerate row and
+    surface as an inscrutable solver failure lanes later.
+    """
     frontend_seconds_per_request: Sequence[float]   # G_i per ingress
     frontend_release: Sequence[float]               # R_i
     replica_seconds_per_request: Sequence[float]    # A_j per replica
 
+    def __post_init__(self):
+        g = np.asarray(self.frontend_seconds_per_request, np.float64)
+        r = np.asarray(self.frontend_release, np.float64)
+        a = np.asarray(self.replica_seconds_per_request, np.float64)
+        for name, v in (("frontend_seconds_per_request", g),
+                        ("frontend_release", r),
+                        ("replica_seconds_per_request", a)):
+            if v.ndim != 1 or v.size == 0:
+                raise ValueError(
+                    f"{name} must be a non-empty 1-D sequence, got "
+                    f"shape {v.shape}")
+            if not np.all(np.isfinite(v)):
+                raise ValueError(f"{name} must be finite, got {v}")
+        if g.shape != r.shape:
+            raise ValueError(
+                "frontend_seconds_per_request and frontend_release must "
+                f"have one entry per ingress: got {g.size} vs {r.size}")
+        if np.any(g <= 0):
+            raise ValueError(
+                "frontend_seconds_per_request (G_i) must be strictly "
+                f"positive, got {g}")
+        if np.any(a <= 0):
+            raise ValueError(
+                "replica_seconds_per_request (A_j) must be strictly "
+                f"positive, got {a}")
+        if np.any(r < 0):
+            raise ValueError(
+                f"frontend_release (R_i) must be non-negative, got {r}")
 
-def route_requests(stats: RouterStats, num_requests: int,
-                   frontend: bool = True) -> dict:
-    """Solve the burst-drain problem; returns shares + makespan.
 
-    shares[j] = requests replica j should take (ints, sum == num_requests).
+def _round_shares(load: np.ndarray, num_requests: int) -> np.ndarray:
+    """Integer shares summing EXACTLY to ``num_requests``.
+
+    Floors the LP's fractional per-processor loads, then settles the
+    remainder by fractional part: a positive remainder adds requests to
+    the largest fractional claims, a NEGATIVE one (the LP's
+    ``processor_load`` summing slightly above ``J`` — tolerance-level
+    dust, or an over-count after a fallback) removes them from the
+    smallest fractional claims, never driving a share below zero.
     """
-    spec = SystemSpec(
+    shares = np.floor(np.maximum(load, 0.0)).astype(np.int64)
+    frac = np.maximum(load, 0.0) - shares
+    rem = num_requests - int(shares.sum())
+    if rem > 0:
+        order = np.argsort(-frac, kind="stable")
+        add, extra = divmod(rem, len(shares))
+        shares += add
+        shares[order[:extra]] += 1
+    while rem < 0:
+        order = np.argsort(frac, kind="stable")
+        for j in order:
+            if rem == 0:
+                break
+            if shares[j] > 0:
+                shares[j] -= 1
+                rem += 1
+    return shares
+
+
+def _burst_specs(stats: RouterStats, counts: Sequence[int]):
+    """Canonical burst specs (one per count) + the processor permutation.
+
+    The canonical sort depends only on (G, A) — shared by every burst of
+    one fleet — so it is computed once and every lane is built presorted.
+    """
+    template = SystemSpec(
         G=np.asarray(stats.frontend_seconds_per_request, np.float64),
         R=np.asarray(stats.frontend_release, np.float64),
         A=np.asarray(stats.replica_seconds_per_request, np.float64),
-        J=float(num_requests),
+        J=1.0,
     )
-    cspec, _, pperm = spec.canonical()
-    # the shared DLT session: repeat bursts reuse its configuration (and,
-    # for batched routing sweeps, its compiled-shape cache)
-    sched = get_default_engine().solve(cspec, frontend=frontend,
-                                       presorted=True)
-    load = sched.processor_load
-    shares_c = np.floor(load).astype(np.int64)
-    rem = num_requests - int(shares_c.sum())
-    order = np.argsort(-(load - shares_c), kind="stable")
-    shares_c[order[:max(rem, 0)]] += 1
+    cspec, _, pperm = template.canonical()
+    specs = [SystemSpec(G=cspec.G, R=cspec.R, A=cspec.A, J=float(c))
+             for c in counts]
+    return specs, pperm
+
+
+def _decision(stats: RouterStats, sched, num_requests: int,
+              pperm: np.ndarray) -> dict:
+    """Shares + makespan decision from one solved (canonical) schedule."""
+    shares_c = _round_shares(sched.processor_load, num_requests)
     shares = np.zeros_like(shares_c)
     shares[pperm] = shares_c
     uniform = float(np.max(np.asarray(stats.replica_seconds_per_request)
@@ -129,3 +194,49 @@ def route_requests(stats: RouterStats, num_requests: int,
         "uniform_makespan": uniform,
         "schedule": sched,
     }
+
+
+def route_requests_batch(stats: RouterStats, counts: Sequence[int],
+                         frontend: bool = True, *,
+                         engine=None) -> list:
+    """Route many burst queries against one fleet in a single solve.
+
+    Each entry of ``counts`` is an independent burst-drain LP over the
+    same measured fleet; the whole list solves as ONE batched session
+    call.  The lane list is padded to at least one executor micro-batch
+    (:data:`~repro.core.dlt.executors.LANE_MICROBATCH` lanes, repeating
+    the last burst) so every routing solve — a one-shot query or an
+    admission window of any size — compiles to the same fixed-width
+    per-lane program and lands on the engine's po2 lane ladder: repeat
+    windows hit the compile cache, and a decision's bits never depend
+    on how many queries shared its window (the executor micro-batch
+    invariant; asserted in tests/test_router_service.py).
+
+    Returns one :func:`route_requests`-shaped dict per count.
+    """
+    if len(counts) == 0:
+        return []
+    eng = engine if engine is not None else get_default_engine()
+    specs, pperm = _burst_specs(stats, counts)
+    pad = max(LANE_MICROBATCH - len(specs), 0)
+    sol = eng.solve_batch(specs + [specs[-1]] * pad, frontend=frontend,
+                          presorted=True)
+    return [_decision(stats, sol.schedule(k, strict=True), int(c), pperm)
+            for k, c in enumerate(counts)]
+
+
+def route_requests(stats: RouterStats, num_requests: int,
+                   frontend: bool = True) -> dict:
+    """Solve the burst-drain problem; returns shares + makespan.
+
+    shares[j] = requests replica j should take (ints, sum == num_requests).
+
+    One-shot queries ride the same batched path as
+    :func:`route_requests_batch` (and the always-on
+    :class:`~repro.serve.service.RouterService`), on the shared default
+    DLT session — repeat bursts against one fleet shape reuse its
+    compiled executable, and the decision is bit-identical to the same
+    burst solved inside any admission window.
+    """
+    return route_requests_batch(stats, [num_requests],
+                                frontend=frontend)[0]

@@ -1,0 +1,22 @@
+"""Always-on DLT routing service.
+
+See :mod:`repro.serve.service.service` for the subsystem overview:
+``RouterService`` (async admission queue + deadline batching + drift
+re-solves), ``ServiceConfig`` (the knobs), and the supporting
+``AdmissionQueue`` / ``DriftTracker`` / ``ServiceStats`` primitives.
+"""
+
+from .drift import DriftTracker
+from .queue import AdmissionQueue
+from .service import RouteDecision, RouterService, ServiceConfig
+from .stats import ServiceStats, ServiceStatsSnapshot
+
+__all__ = [
+    "AdmissionQueue",
+    "DriftTracker",
+    "RouteDecision",
+    "RouterService",
+    "ServiceConfig",
+    "ServiceStats",
+    "ServiceStatsSnapshot",
+]

@@ -1,0 +1,61 @@
+"""EWMA drift detection over measured replica service rates.
+
+The router's LP is only as good as its ``RouterStats``: replicas slow
+down (noisy neighbors, thermal throttling, growing KV caches) and the
+shares computed for yesterday's A_j start leaving makespan on the table.
+The tracker keeps an exponentially weighted moving average of observed
+seconds/request per replica and flags when any replica's smoothed rate
+has moved more than a relative threshold from the rates the service last
+solved against — the trigger for a warm-seeded re-solve.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+__all__ = ["DriftTracker"]
+
+
+class DriftTracker:
+    """Per-replica EWMA of measured seconds/request."""
+
+    def __init__(self, alpha: float):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"ewma_alpha must be in (0, 1], got {alpha}")
+        self.alpha = float(alpha)
+        self._ewma: Optional[np.ndarray] = None
+        self.observations = 0
+
+    @property
+    def ewma(self) -> Optional[np.ndarray]:
+        """Current smoothed A_j estimate (None before any observation)."""
+        return None if self._ewma is None else self._ewma.copy()
+
+    def observe(self, replica_seconds_per_request: Sequence[float]) -> None:
+        """Fold one measurement vector into the moving average."""
+        a = np.asarray(replica_seconds_per_request, np.float64)
+        if a.ndim != 1 or not np.all(np.isfinite(a)) or np.any(a <= 0):
+            raise ValueError(
+                "observed replica_seconds_per_request must be a 1-D vector "
+                f"of strictly positive finite values, got {a}")
+        if self._ewma is None:
+            self._ewma = a.copy()
+        else:
+            if a.shape != self._ewma.shape:
+                raise ValueError(
+                    f"observation has {a.size} replicas but the tracker "
+                    f"was started with {self._ewma.size}")
+            self._ewma = self.alpha * a + (1.0 - self.alpha) * self._ewma
+        self.observations += 1
+
+    def relative_drift(self, baseline: Sequence[float]) -> float:
+        """max_j |ewma_j - baseline_j| / baseline_j (0.0 if no data)."""
+        if self._ewma is None:
+            return 0.0
+        b = np.asarray(baseline, np.float64)
+        return float(np.max(np.abs(self._ewma - b) / b))
+
+    def drifted(self, baseline: Sequence[float], threshold: float) -> bool:
+        return self.relative_drift(baseline) > threshold

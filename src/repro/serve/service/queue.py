@@ -1,0 +1,50 @@
+"""Thread-safe admission queue for the always-on router.
+
+A deliberately small primitive: frontends ``put`` pending route queries,
+the service loop ``wait_first``s for the window-opening arrival and then
+``drain``s whatever accumulated when the admission deadline fires.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import List, Optional
+
+__all__ = ["AdmissionQueue"]
+
+
+class AdmissionQueue:
+    """FIFO of pending admissions with a first-arrival wakeup."""
+
+    def __init__(self):
+        self._items: deque = deque()
+        self._lock = threading.Lock()
+        self._nonempty = threading.Condition(self._lock)
+
+    def put(self, item) -> None:
+        with self._nonempty:
+            self._items.append(item)
+            self._nonempty.notify_all()
+
+    def wait_first(self, timeout: Optional[float] = None) -> bool:
+        """Block until the queue is non-empty (or ``timeout`` elapses).
+
+        Returns True when at least one item is pending — the signal that
+        an admission window should open.
+        """
+        with self._nonempty:
+            return self._nonempty.wait_for(lambda: len(self._items) > 0,
+                                           timeout=timeout)
+
+    def drain(self, max_items: Optional[int] = None) -> List:
+        """Pop up to ``max_items`` pending admissions (all, if None)."""
+        with self._lock:
+            n = len(self._items) if max_items is None \
+                else min(max_items, len(self._items))
+            return [self._items.popleft() for _ in range(n)]
+
+    @property
+    def depth(self) -> int:
+        with self._lock:
+            return len(self._items)

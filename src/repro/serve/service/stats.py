@@ -1,0 +1,98 @@
+"""Service-level counters and the admission-to-decision latency ledger.
+
+Mirrors the ``DLTEngine`` stats idiom (cumulative integer counters,
+snapshot on read) and adds what a *service* needs that a solver does
+not: a latency reservoir with tail quantiles, because an always-on
+router is judged by its p99, not its mean.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["ServiceStats", "ServiceStatsSnapshot"]
+
+# Cap on retained per-decision latencies.  At say 1k decisions/sec a day
+# of uptime is ~86M samples; the reservoir keeps the most recent window
+# instead — SLOs are about recent behavior anyway.
+_LATENCY_RESERVOIR = 65536
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceStatsSnapshot:
+    """Immutable view of the service counters at one instant."""
+
+    windows: int                # admission windows solved
+    cold_windows: int           # windows solved from the cold start point
+    warm_windows: int           # drift windows warm-seeded from an anchor
+    decisions: int              # futures resolved with a RouteDecision
+    failed_decisions: int       # futures failed by strict-lane errors
+    drift_events: int           # times the EWMA crossed the threshold
+    transfer_lanes: int         # engine lanes seeded via warm_transfer
+    resolve_lanes: int          # warm lanes the engine re-solved cold
+    fallback_lanes: int         # lanes the engine sent to the oracle
+    queue_depth: int            # pending admissions right now
+    solve_seconds_total: float  # wall time inside engine solves
+
+
+class ServiceStats:
+    """Mutable, thread-safe ledger owned by a ``RouterService``."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.windows = 0
+        self.cold_windows = 0
+        self.warm_windows = 0
+        self.decisions = 0
+        self.failed_decisions = 0
+        self.drift_events = 0
+        self.transfer_lanes = 0
+        self.resolve_lanes = 0
+        self.fallback_lanes = 0
+        self.solve_seconds_total = 0.0
+        self._latencies: List[float] = []
+
+    def bump(self, **by) -> None:
+        with self._lock:
+            for k, v in by.items():
+                setattr(self, k, getattr(self, k) + v)
+
+    def record_latency(self, seconds: float) -> None:
+        with self._lock:
+            self._latencies.append(float(seconds))
+            if len(self._latencies) > _LATENCY_RESERVOIR:
+                del self._latencies[: len(self._latencies)
+                                    - _LATENCY_RESERVOIR]
+
+    def latency_quantile(self, q: float) -> float:
+        """Admission-to-decision latency quantile in seconds (NaN if none)."""
+        with self._lock:
+            if not self._latencies:
+                return float("nan")
+            return float(np.quantile(np.asarray(self._latencies), q))
+
+    def latency_summary(self) -> Dict[str, float]:
+        """The SLO triple: p50 / p99 / p999 in seconds."""
+        return {"p50": self.latency_quantile(0.50),
+                "p99": self.latency_quantile(0.99),
+                "p999": self.latency_quantile(0.999)}
+
+    def snapshot(self, queue_depth: int = 0) -> ServiceStatsSnapshot:
+        with self._lock:
+            return ServiceStatsSnapshot(
+                windows=self.windows,
+                cold_windows=self.cold_windows,
+                warm_windows=self.warm_windows,
+                decisions=self.decisions,
+                failed_decisions=self.failed_decisions,
+                drift_events=self.drift_events,
+                transfer_lanes=self.transfer_lanes,
+                resolve_lanes=self.resolve_lanes,
+                fallback_lanes=self.fallback_lanes,
+                queue_depth=queue_depth,
+                solve_seconds_total=self.solve_seconds_total,
+            )

@@ -3,6 +3,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
@@ -46,6 +47,52 @@ def test_engine_greedy_deterministic():
     a = engine.generate(req)[0]
     b = engine.generate(req)[0]
     np.testing.assert_array_equal(a, b)
+
+
+def test_engine_generate_ragged_prompts():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=4, max_seq=48)
+    rng = np.random.default_rng(1)
+    lens = [3, 11, 7]
+    reqs = [Request(rng.integers(0, cfg.vocab_size, n, dtype=np.int32),
+                    max_new_tokens=2 + i, request_id=i)
+            for i, n in enumerate(lens)]
+    outs = engine.generate(reqs)
+    assert [o.shape for o in outs] == [(2,), (3,), (4,)]
+    for o in outs:
+        assert (o >= 0).all() and (o < cfg.vocab_size).all()
+
+
+def test_engine_generate_exactly_max_batch():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=2, max_seq=32)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, 6, dtype=np.int32),
+                    max_new_tokens=3) for _ in range(2)]
+    outs = engine.generate(reqs)
+    assert len(outs) == 2 and all(o.shape == (3,) for o in outs)
+
+
+def test_engine_generate_over_max_batch_raises():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=2, max_seq=32)
+    reqs = [Request(np.arange(4, dtype=np.int32)) for _ in range(3)]
+    with pytest.raises(ValueError, match="max_batch=2"):
+        engine.generate(reqs)
+
+
+def test_engine_generate_empty_batch():
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_batch=2, max_seq=32)
+    assert engine.generate([]) == []
 
 
 def test_route_requests_prefers_fast_replicas():

@@ -492,18 +492,101 @@ def run_sharded(r, rng, smoke, out):
            f"{cores} physical core(s)")
 
 
+def _formulation_specs(rng, name, count, m_lo, m_hi):
+    """Ragged spec family carrying the formulation's required extras."""
+    specs = []
+    for m in rng.integers(m_lo, m_hi + 1, count):
+        if name == "resource_sharing":
+            n = int(rng.integers(1, 4))
+            specs.append(SystemSpec(
+                G=rng.uniform(0.1, 1.0, n),
+                R=np.sort(rng.uniform(0.0, 2.0, n)),
+                A=rng.uniform(0.5, 4.0, m),
+                J=float(rng.uniform(50.0, 200.0)),
+                extras={"link_capacity": float(rng.uniform(0.0, 0.3))}))
+        else:   # multi_installment: single source, R rides an extra axis
+            specs.append(SystemSpec(
+                G=rng.uniform(0.1, 1.0, 1),
+                R=rng.uniform(0.0, 2.0, 1),
+                A=rng.uniform(0.5, 4.0, m),
+                J=float(rng.uniform(50.0, 200.0)),
+                extras={"installments": int(rng.integers(1, 5))}))
+    return specs
+
+
+def run_formulations(r, rng, smoke, out):
+    """The registered scenario families beyond the paper's three LPs.
+
+    One section per formulation, each with an fp64 AND a mixed leg —
+    same shape as the core sections, so ``scripts/bench_compare.py``
+    parity-gates them like any other family (a section absent from the
+    baseline is gated on its own parity flags and skips the
+    throughput floor until a baseline lands).  Hard gates: 1e-6 parity
+    against the formulation's own scalar-simplex oracle on a spot
+    sample, and fp64/mixed status identity.
+    """
+    if smoke:
+        B, m_lo, m_hi, parity_sample = 32, 3, 12, 4
+    else:
+        B, m_lo, m_hi, parity_sample = 128, 3, 24, 8
+    sections = {}
+    for name in ("resource_sharing", "multi_installment"):
+        specs = _formulation_specs(rng, name, B, m_lo, m_hi)
+        kw = dict(formulation=name)
+        legs = {}
+        for policy in ("fp64", "mixed"):
+            _time_batched(specs, False, precision=policy, **kw)  # warm
+            best_t, best_sol = None, None
+            for _ in range(3):
+                t, sol = _time_batched(specs, False, precision=policy, **kw)
+                if best_t is None or t < best_t:
+                    best_t, best_sol = t, sol
+            legs[policy] = (best_t, best_sol)
+        t64, sol64 = legs["fp64"]
+        tmx, solmx = legs["mixed"]
+        assert np.all(sol64.status == 0), f"{name} bench family infeasible"
+        worst = max(
+            abs(sol64.finish_time[k]
+                - solve(specs[k], formulation=name,
+                        solver="simplex").finish_time)
+            / max(1.0, sol64.finish_time[k])
+            for k in range(0, B, max(1, B // parity_sample)))
+        mixed_worst = float(max(
+            abs(solmx.finish_time[k] - sol64.finish_time[k])
+            / max(1.0, abs(sol64.finish_time[k])) for k in range(B)))
+        statuses_equal = bool(np.array_equal(solmx.status, sol64.status))
+        label = f"{name} M={m_lo}..{m_hi}"
+        table(["family", "batch", "fp64/s", "mixed/s", "fallbacks"],
+              [[label, B, round(B / t64, 1), round(B / tmx, 1),
+                sol64.fallback_count]], fmt="{:>28}")
+        sections[name] = dict(
+            family=label, batch=B, fp64_per_s=B / t64, mixed_per_s=B / tmx,
+            parity_worst=float(worst), mixed_parity_worst=mixed_worst,
+            statuses_equal=statuses_equal,
+            fallbacks=sol64.fallback_count)
+        r.check(f"{name} parity vs own scalar simplex (rel err < 1e-6)",
+                bool(worst < 1e-6), True, rtol=0)
+        r.check(f"{name} mixed vs fp64 parity (rel err < 1e-6)",
+                bool(mixed_worst < 1e-6), True, rtol=0)
+        r.check(f"{name} mixed statuses identical to fp64",
+                statuses_equal, True, rtol=0)
+    out["formulations"] = sections
+
+
 def run(smoke=False):
     r = check("batched_solve_bench")
     rng = np.random.default_rng(0)
     out = {"smoke": smoke, "topology": _topology(), "uniform": [],
            "mixed": None, "banded": None, "precision": None, "warm": None,
-           "sharded": None, "counters": None, "cache": None, "passed": None}
+           "sharded": None, "formulations": None, "counters": None,
+           "cache": None, "passed": None}
     run_uniform(r, rng, smoke, out)
     run_mixed(r, rng, smoke, out)
     run_banded(r, rng, smoke, out)
     run_precision(r, rng, smoke, out)
     run_warm(r, rng, smoke, out)
     run_sharded(r, rng, smoke, out)
+    run_formulations(r, rng, smoke, out)
 
     if smoke:
         # fast parity spot-check rides along with the smoke bench

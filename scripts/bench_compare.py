@@ -13,6 +13,11 @@ committed ``BENCH_baseline.json`` and fails on:
 * the warm-started sweep dropping below cold scenarios/sec, or its
   warm/cold iteration ratio regressing past the threshold,
 * the banded kernel falling behind the structured path,
+* any registered scenario family (``formulations`` sections, e.g. the
+  resource-sharing and multi-installment LPs) drifting off its own
+  scalar-simplex oracle or off fp64/mixed parity — a family present in
+  the run but absent from the baseline is parity-gated and skips the
+  throughput floor until a baseline containing it lands,
 * the mixed-precision policy drifting from fp64 parity, leaving any
   unexplained full-fp64 fallback lane, or its mixed/fp64 throughput
   ratio regressing past the threshold (the ratio is a regression
@@ -207,6 +212,32 @@ def compare(cur: dict, base: dict, rtol: float) -> Gate:
                 f"{c['ratio']:.2f}x vs baseline {b['ratio']:.2f}x")
         else:
             gate.skip("precision", "no baseline section")
+
+    base_fms = base.get("formulations") or {}
+    for name, c in (cur.get("formulations") or {}).items():
+        label = f"formulations[{name}]"
+        gate.check(f"{label}: scalar-oracle + mixed parity",
+                   c.get("parity_worst", 1.0) < 1e-6
+                   and c.get("mixed_parity_worst", 1.0) < 1e-6
+                   and bool(c.get("statuses_equal")),
+                   f"oracle {c.get('parity_worst', 1.0):.2e}, "
+                   f"mixed {c.get('mixed_parity_worst', 1.0):.2e}, "
+                   f"statuses_equal={c.get('statuses_equal')}")
+        b = base_fms.get(name)
+        if not b:
+            # a family the baseline predates is gated on its own parity
+            # flags only; the throughput floor arms once a baseline
+            # containing the section lands
+            gate.skip(label, "new section: parity-gated, "
+                      "throughput-floor skipped")
+            continue
+        _fallbacks(gate, label, c.get("fallbacks", 0), b.get("fallbacks", 0))
+        if topo_ok:
+            # the mixed leg normalizes by the fp64 leg (same family, same
+            # machine), exactly like the precision section
+            _throughput(gate, f"{label}[mixed]", c["mixed_per_s"],
+                        b["mixed_per_s"], rtol, c.get("fp64_per_s"),
+                        b.get("fp64_per_s"))
 
     s, bs = cur.get("service"), base.get("service")
     if s is None:

@@ -10,8 +10,11 @@
 #    property tests fall back to tests/_hyp.py, scipy cross-checks skip),
 # 2. a fast batched-vs-scalar parity + throughput smoke, including a
 #    mixed-size ragged no-front-end family exercising size-bucketed
-#    batching, a banded-vs-structured kernel pass, and a warm-vs-cold
-#    Sec 6 prefix sweep (benchmarks/batched_solve_bench.py --smoke).
+#    batching, a banded-vs-structured kernel pass, a warm-vs-cold
+#    Sec 6 prefix sweep, and the registered scenario families beyond
+#    the paper's LPs (resource-sharing, multi-installment) on both the
+#    fp64 and mixed precision legs
+#    (benchmarks/batched_solve_bench.py --smoke).
 #    The smoke writes a perf-trajectory JSON (scenarios/sec, warm vs
 #    cold IPM iterations, compile-cache hit/miss counters) to
 #    $BENCH_OUT — CI uploads it as a workflow artifact so the numbers

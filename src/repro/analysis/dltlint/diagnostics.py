@@ -52,7 +52,7 @@ class Finding:
     rule: str                     # "DL001"
     severity: Severity
     message: str                  # what is wrong, one line
-    target: str                   # combo label, e.g. "frontend/banded/local"
+    target: str                   # combo label, "<formulation>/<kernel>/<executor>"
     provenance: str = ""          # eqn path inside the jaxpr, "" = whole graph
     hint: str = ""                # how to fix it
     data: Dict[str, Any] = dataclasses.field(default_factory=dict)

@@ -22,12 +22,10 @@ except ImportError:  # pragma: no cover - exercised on min-versions CI
 
 from ...core.dlt.batched import build_banded_family, build_family_lp
 from ...core.dlt.precision import FP32_FACTOR_SCOPE, REFINE_RESIDUAL_SCOPE
-from ...core.dlt.stacking import BatchedSystemSpec
 from ..hlo_parse import analyze_hlo
 from .diagnostics import Finding, Severity
 from .trace import (
     TraceArtifact,
-    _demo_specs,
     iter_eqns,
     iter_eqns_scoped,
 )
@@ -406,18 +404,27 @@ class BandedHonesty(Rule):
                           shapes: Optional[Sequence[Tuple[int, int]]] = None,
                           ) -> List[Finding]:
         out = []
+        caps = fm.capabilities
         for (n, m) in (shapes or HONESTY_SHAPES):
             struct = fm.banded_structure(n, m)
             label = f"{fm.name}[n={n},m={m}]"
             if struct is None:
-                out.append(Finding(
-                    rule=self.id, severity=Severity.INFO,
-                    message="no banded_structure declared — nothing to "
-                            "verify",
-                    target=label))
+                if caps is not None and caps.supports_banded:
+                    out.append(Finding(
+                        rule=self.id, severity=Severity.ERROR,
+                        message="capabilities claim supports_banded=True "
+                                "but banded_structure() returned None",
+                        target=label,
+                        hint="either implement banded_structure() or "
+                             "declare supports_banded=False"))
+                else:
+                    out.append(Finding(
+                        rule=self.id, severity=Severity.INFO,
+                        message="no banded structure declared — nothing to "
+                                "verify",
+                        target=label))
                 continue
-            bs = BatchedSystemSpec.from_specs(
-                _demo_specs([(n, m)], masked=True))
+            bs = fm.demo_batch(n=n, m=m, masked=True)
             fam = build_family_lp(bs, fm)
             try:
                 bfam = build_banded_family(

@@ -18,7 +18,7 @@ from ...core.dlt.engine import DLTEngine
 from ...core.dlt.formulations import available_formulations, get_formulation
 from .diagnostics import Finding, LintReport, Severity
 from .rules import get_rules
-from .trace import TraceArtifact, TraceTarget, demo_batch
+from .trace import TraceArtifact, TraceTarget
 
 __all__ = [
     "LINT_KERNELS",
@@ -53,7 +53,7 @@ def trace_target(target: TraceTarget, *, with_hlo: bool = False,
     """Trace one combination over a small masked demo family."""
     eng = _engine_for(target)
     fm = get_formulation(target.formulation)
-    bs = demo_batch(n=n, m=m, masked=True)
+    bs = fm.demo_batch(n=n, m=m, masked=True)
     fam = build_family_lp(bs, fm)
     plan = eng._kernel_plan(fm, bs, fam)
     closed, lowered, key = eng.trace_plan(plan, batch=target.batch,
@@ -81,7 +81,7 @@ def lint_engine(engine: DLTEngine, *,
     """Lint the one combination ``engine`` is configured for."""
     ruleset = get_rules(rules)
     fm = engine._formulation(True, None)
-    bs = demo_batch(n=n, m=m, masked=True)
+    bs = fm.demo_batch(n=n, m=m, masked=True)
     fam = build_family_lp(bs, fm)
     plan = engine._kernel_plan(fm, bs, fam)
     executor = engine._resolve_executor()

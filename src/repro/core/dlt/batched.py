@@ -57,6 +57,7 @@ from ...kernels.dlt_banded_chol import ops as _chol_kernels
 from . import precision as _precision
 from .formulations import (
     BatchFields,
+    DEFAULT_NOFRONTEND_FORMULATION,
     FamilyDims,
     Formulation,
     get_formulation,
@@ -90,12 +91,6 @@ __all__ = [
 STATUS_OPTIMAL = 0
 STATUS_MAXITER = 1
 STATUS_INFEASIBLE = 2
-
-#: Formulation used for ``frontend=False`` solves when none is pinned.
-#: The column-reduced program is exactly equivalent to Sec 3.2 (and ~4x
-#: cheaper per IPM iteration); pass ``formulation="nofrontend"`` to force
-#: the full interval program.
-DEFAULT_NOFRONTEND_FORMULATION = "nofrontend_reduced"
 
 #: Processor-count bucket edges for size-bucketed batching (~1.33-1.5x
 #: steps: worst-case padding stays small while compiled-shape count stays
@@ -137,7 +132,7 @@ def build_family_lp(bs: BatchedSystemSpec,
     artificials of REAL eq rows are themselves masked variables.
     """
     fm = get_formulation(formulation)
-    dims = fm.family_dims(bs.n_max, bs.m_max)
+    dims = fm.batch_dims(bs)
     nv, n_ub, n_eq = dims.nv, dims.n_ub, dims.n_eq
     B = bs.batch
     rows = fm.build_batch_rows(bs)
@@ -1022,15 +1017,27 @@ def _bucket_m(m: int, edges: Sequence[int]) -> int:
 
 
 def _group_lanes(bs: BatchedSystemSpec, bucket: str,
-                 m_edges: Sequence[int]):
-    """Order-preserving lane groups keyed by padded bucket shape (n, m)."""
-    if bucket == "none":
-        return {(bs.n_max, bs.m_max): np.arange(bs.batch)}
-    if bucket != "size":
+                 m_edges: Sequence[int],
+                 fm: "Formulation | None" = None):
+    """Order-preserving lane groups keyed by padded bucket shape.
+
+    The key is ``(n_sources, m_bucket) + formulation extra key``: a
+    formulation whose LP shape depends on a declared extra axis (e.g.
+    the installment count) appends that axis' bucket through
+    ``Formulation.group_key``, so lanes with incompatible padded shapes
+    never share a family.
+    """
+    if bucket not in ("none", "size"):
         raise ValueError(f"unknown bucket mode {bucket!r}: use 'size' or 'none'")
     groups: "OrderedDict[tuple, list]" = OrderedDict()
     for k in range(bs.batch):
-        key = (int(bs.n_sources[k]), _bucket_m(int(bs.n_procs[k]), m_edges))
+        # even unbucketed lanes split on the formulation key: lanes from
+        # different extra-axis buckets have incompatible padded LP shapes
+        key = ((bs.n_max, bs.m_max) if bucket == "none"
+               else (int(bs.n_sources[k]), _bucket_m(int(bs.n_procs[k]),
+                                                     m_edges)))
+        if fm is not None:
+            key = key + tuple(fm.group_key(bs, k))
         groups.setdefault(key, []).append(k)
     return {key: np.asarray(idx) for key, idx in groups.items()}
 

@@ -54,7 +54,6 @@ from . import precision as _precision
 from .batched import (
     COMPILE_CACHE_SIZE,
     DEFAULT_M_BUCKET_EDGES,
-    DEFAULT_NOFRONTEND_FORMULATION,
     STATUS_INFEASIBLE,
     STATUS_MAXITER,
     STATUS_OPTIMAL,
@@ -79,7 +78,13 @@ from .batched import (
 )
 from .cost import ProcessorSweep
 from .executors import Executor, available_executors, resolve_executor
-from .formulations import BatchFields, Formulation, get_formulation
+from .formulations import (
+    BatchFields,
+    Formulation,
+    FormulationCapabilities,
+    default_batched_formulation,
+    get_formulation,
+)
 from .single_source import single_source_intervals
 from .solve import solve as _scalar_solve
 from .speedup import SpeedupGrid
@@ -484,12 +489,22 @@ def _plan_take(plan: _KernelPlan, pos: np.ndarray) -> _KernelPlan:
 WARM_M_BUCKET_EDGES = (4, 16, 64, 256, 1024)
 
 
+def _fields_take(fields: BatchFields, idx: np.ndarray) -> BatchFields:
+    """Row-select batch fields, including per-formulation extras."""
+    return BatchFields(
+        beta=fields.beta[idx], finish=fields.finish[idx],
+        TS=None if fields.TS is None else fields.TS[idx],
+        TF=None if fields.TF is None else fields.TF[idx],
+        extra=None if fields.extra is None else
+        {k: v[idx] for k, v in fields.extra.items()})
+
+
 class DLTEngine:
     """A configured DLT solving session.
 
     Construct once, then run the whole workload surface through it::
 
-        eng = DLTEngine(formulation="nofrontend_reduced", max_iter=30)
+        eng = DLTEngine(max_iter=30)       # registry picks the formulation
         eng.solve(spec)                    # one Schedule
         eng.solve_batch(specs)             # BatchedSolution (ragged ok)
         eng.sweep(spec, m_max=32)          # Sec 6 prefix family (warm)
@@ -539,8 +554,25 @@ class DLTEngine:
                      formulation: FormulationLike) -> Formulation:
         which = formulation if formulation is not None else self.config.formulation
         if which is None:
-            which = True if frontend else DEFAULT_NOFRONTEND_FORMULATION
+            return default_batched_formulation(frontend)
         return get_formulation(which)
+
+    @staticmethod
+    def _caps(fm: Formulation) -> FormulationCapabilities:
+        """The formulation's declared capabilities (required by the engine).
+
+        Kernel routing, warm transfer and axis validation are all driven
+        by the declaration — never by formulation names — so an instance
+        without one cannot be scheduled.
+        """
+        caps = fm.capabilities
+        if caps is None:
+            raise ValueError(
+                f"formulation {fm.name!r} declares no capabilities — set "
+                "the `capabilities` class attribute (FormulationCapabilities) "
+                "and add it to the registry via "
+                "repro.core.dlt.formulations.register()")
+        return caps
 
     # ---- stats + compiled-cache introspection ----------------------------
 
@@ -623,13 +655,14 @@ class DLTEngine:
         cfg = self.config
         kind = cfg.kernel
         struct = None
-        if kind in ("auto", "banded", "pallas_banded"):
+        if (kind in ("auto", "banded", "pallas_banded")
+                and self._caps(fm).supports_banded):
             struct = fm.banded_structure(sub.n_max, sub.m_max)
         if kind == "pallas_banded":
             if struct is None:
                 raise ValueError(
                     f"kernel='pallas_banded' but formulation {fm.name!r} "
-                    "publishes no banded_structure — use kernel='auto' "
+                    "declares supports_banded=False — use kernel='auto' "
                     "(structured fallback) or kernel='structured'")
             if not _chol_kernels.pallas_supported(
                     interpret=cfg.pallas_interpret):
@@ -644,7 +677,7 @@ class DLTEngine:
                 if kind == "banded":
                     raise ValueError(
                         f"kernel='banded' but formulation {fm.name!r} "
-                        "publishes no banded_structure — use kernel='auto' "
+                        "declares supports_banded=False — use kernel='auto' "
                         "(structured fallback) or kernel='structured'")
                 self._state.bump(kernel_fallbacks=1)
                 kind = "structured"
@@ -920,11 +953,7 @@ class DLTEngine:
         seeded with the cold HSDE point instead.
         """
         sub_a = sub.take(anchor)
-        fields = fm.unpack_batch(sub_a, xa)
-        fields_src = BatchFields(
-            beta=fields.beta[src], finish=fields.finish[src],
-            TS=None if fields.TS is None else fields.TS[src],
-            TF=None if fields.TF is None else fields.TF[src])
+        fields_src = _fields_take(fm.unpack_batch(sub_a, xa), src)
         return self._warm_init_from(fm, sub, fam, rest, fields_src,
                                     sub_a.cell_mask[src], ya[src].copy(),
                                     sta[src])
@@ -945,35 +974,10 @@ class DLTEngine:
         """
         cfg = self.config
         nv, n_ub = fam.dims.nv, fam.dims.n_ub
-        nR = dest.size
         bsr = sub.take(dest)
-        cell = bsr.cell_mask
-        cell_a = cell_src
-
-        beta = fields_src.beta.copy()
-        beta[~cell] = 0.0
-        tot = beta.sum(axis=(1, 2))
-        beta *= np.where(tot > 0, bsr.J / np.where(tot > 0, tot, 1.0),
-                         1.0)[:, None, None]
-        TS = TF = None
-        if fm.has_intervals:
-            N, M = bsr.n_max, bsr.m_max
-            TF = fields_src.TF.copy()
-            activated = cell & ~cell_a
-            for j in range(M):
-                prev_j = TF[:, :, j - 1] if j else np.zeros((nR, N))
-                for i in range(N):
-                    prev_i = TF[:, i - 1, j] if i else np.full(nR, -np.inf)
-                    cand = (np.maximum(prev_j[:, i], prev_i)
-                            + bsr.G[:, i] * beta[:, i, j])
-                    TF[:, i, j] = np.where(activated[:, i, j],
-                                           np.maximum(cand, 0.0),
-                                           TF[:, i, j])
-            TF[~cell] = 0.0
-            TS = np.clip(TF - beta * bsr.G[:, :, None], 0.0, None)
-            TS[~cell] = 0.0
-        v = fm.pack_batch(bsr, BatchFields(
-            beta=beta, finish=fields_src.finish.copy(), TS=TS, TF=TF))
+        # Field completion (mass renorm, chain-fill of newly activated
+        # cells) is the formulation's business: the hook owns the layout.
+        v = fm.pack_batch(bsr, fm.warm_fields(bsr, fields_src, cell_src))
 
         Fr, br = fam.F[dest], fam.b[dest]
         cr, artr = fam.c[dest], fam.art[dest]
@@ -1006,12 +1010,15 @@ class DLTEngine:
         masks, standard-layout duals and the bucket's banded geometry.
         Each destination anchor is seeded from the carried anchor with
         the nearest processor count; formulation fields are padded on
-        the M axis (newly activated cells are chain-filled by
-        :meth:`_warm_init_from`) and the dual transfers through the
-        :func:`banded_row_transfer` row maps.  Returns ``None`` when
+        the M axis (newly activated cells are chain-filled by the
+        formulation's ``warm_fields`` hook) and the dual transfers
+        through the :func:`banded_row_transfer` row maps.  Returns
+        ``None`` when the formulation declares no warm transfer or when
         either bucket lacks a banded geometry (no row correspondence
         to transfer through).
         """
+        if not self._caps(fm).supports_warm_transfer:
+            return None
         geom_src = transfer.get("geom")
         if geom_src is None:
             return None
@@ -1079,6 +1086,8 @@ class DLTEngine:
                     xa: np.ndarray, ya: np.ndarray, sta: np.ndarray,
                     nia: np.ndarray) -> Optional[dict]:
         """Package this group's anchors for cross-bucket transfer."""
+        if not self._caps(fm).supports_warm_transfer:
+            return None
         struct = fm.banded_structure(sub.n_max, sub.m_max)
         if struct is None:
             return None
@@ -1286,7 +1295,7 @@ class DLTEngine:
                 continue
             sp = sched.spec
             n, m = sp.num_sources, sp.num_processors
-            beta[k, :n, :m] = sched.beta
+            beta[k, :n, :m] = fm.fold_schedule(sched)
             finish[k] = sched.finish_time
             if TS is not None:
                 if sched.TS is not None:
@@ -1304,6 +1313,24 @@ class DLTEngine:
             TS=TS, TF=TF, formulation=fm.name,
             fallback_mask=np.zeros(B, dtype=bool),
         )
+
+    def _require_axes(self, fm: Formulation, axes: Tuple[str, ...],
+                      what: str) -> None:
+        """Fail fast when a family API varies an axis ``fm`` ignores.
+
+        ``sweep`` varies the processor count and ``grid`` additionally
+        varies the source count; a formulation that does not declare
+        the axis in ``capabilities.spec_axes`` would silently solve the
+        same program per cell (or blow up inside tracing), so the
+        mismatch is a ``ValueError`` naming the declared axes instead.
+        """
+        declared = self._caps(fm).spec_axes
+        missing = [a for a in axes if a not in declared]
+        if missing:
+            raise ValueError(
+                f"{what} varies the {missing[0]!r} axis but formulation "
+                f"{fm.name!r} declares spec_axes={declared!r} — family "
+                "APIs only vary declared axes")
 
     # ---- the workload surface -------------------------------------------
 
@@ -1395,14 +1422,18 @@ class DLTEngine:
         pfb_all = np.zeros(B, dtype=bool)
 
         m_edges = WARM_M_BUCKET_EDGES if warm else cfg.m_bucket_edges
-        groups = list(_group_lanes(bspec, cfg.bucket, m_edges).items())
+        groups = list(_group_lanes(bspec, cfg.bucket, m_edges, fm=fm).items())
         if warm:
             # visit buckets of one source count in ascending M-edge order
             # so each bucket's anchors can seed the next (cross-bucket
-            # warm transfer keyed on nb)
+            # warm transfer keyed on the bucket-free part of the key)
             groups.sort(key=lambda kv: kv[0])
         carry_by_nb: dict = dict(carry_in) if carry_in else {}
-        for (nb, mb), idx in groups:
+        verified = np.ones(B, dtype=bool)
+        for key, idx in groups:
+            # key = (n_sources, m_bucket) + formulation group axes
+            nb, mb = key[0], key[1]
+            ckey = (nb,) + key[2:]
             # never pad past the group's true max — a group's padded shape
             # then depends only on its own lanes, so solving it inside a
             # ragged batch or alone is the same computation
@@ -1411,14 +1442,19 @@ class DLTEngine:
                 idx = idx[np.argsort(bspec.n_procs[idx], kind="stable")]
             sub = bspec.take(idx, n_pad=nb, m_pad=mb)
             fam = build_family_lp(sub, fm)
-            transfer = (carry_by_nb.get(nb)
+            transfer = (carry_by_nb.get(ckey)
                         if warm and cfg.warm_transfer else None)
             x, st, ni, nref, pfb, carry = self._solve_group(
                 fm, sub, fam, warm, transfer=transfer,
                 want_carry=want_carry)
             if carry is not None:
-                carry_by_nb[nb] = carry
-            fields = fm.unpack_batch(sub, x)
+                carry_by_nb[ckey] = carry
+            # clean first (exact zeros on padded cells — the IPM leaves
+            # ~tol-level dust on masked vars), verify per group so
+            # formulation extras (per-round splits etc.) reach the checks
+            fields = fm.clean_batch(sub, fm.unpack_batch(sub, x))
+            if cfg.verify:
+                verified[idx] = fm.verify_batch(sub, fields)
             sl = np.ix_(idx, np.arange(nb), np.arange(mb))
             beta[sl] = fields.beta
             finish[idx] = fields.finish
@@ -1430,7 +1466,7 @@ class DLTEngine:
             refits[idx] = nref
             pfb_all[idx] = pfb
 
-        # exact zeros on padding (IPM leaves ~tol-level dust on masked vars)
+        # exact zeros on padding of lanes no group wrote (defensive)
         cell = bspec.cell_mask
         beta[~cell] = 0.0
         if TS is not None:
@@ -1439,28 +1475,31 @@ class DLTEngine:
 
         ok = status == STATUS_OPTIMAL
         if cfg.verify:
-            good = fm.verify_batch(
-                bspec, BatchFields(beta=beta, finish=finish, TS=TS, TF=TF))
-            demoted = ok & ~good
+            demoted = ok & ~verified
             status[demoted] = STATUS_MAXITER
-            ok &= good
+            ok &= verified
 
         fallback_mask = ~ok
         if cfg.oracle_fallback:
             # every uncertified lane — including IPM infeasibility verdicts,
-            # which the simplex either confirms or overturns with a solution
+            # which the simplex either confirms or overturns with a
+            # solution.  Classic-oracle formulations re-check against the
+            # paper's scalar mapping; self-oracle formulations re-solve
+            # their own scalar LP (there is no independent paper program).
+            fkw = ({} if self._caps(fm).oracle_kind == "classic"
+                   else {"formulation": fm})
             for k in np.flatnonzero(~ok):
                 try:
                     sched = _scalar_solve(
                         bspec.scenario(k), frontend=frontend,
-                        solver="simplex", presorted=True)
+                        solver="simplex", presorted=True, **fkw)
                 except InfeasibleError:
                     status[k] = STATUS_INFEASIBLE
                     continue
                 sp = sched.spec
                 n, m = sp.num_sources, sp.num_processors
                 beta[k] = 0.0
-                beta[k, :n, :m] = sched.beta
+                beta[k, :n, :m] = fm.fold_schedule(sched)
                 finish[k] = sched.finish_time
                 if TS is not None:
                     TS[k] = 0.0
@@ -1504,6 +1543,8 @@ class DLTEngine:
         from the sweep exactly like the scalar loop drops them.
         """
         cfg = self.config
+        self._require_axes(self._formulation(frontend, formulation),
+                           ("m",), "sweep()")
         cspec = spec.canonical()[0]
         M = (cspec.num_processors if m_max is None
              else min(m_max, cspec.num_processors))
@@ -1543,6 +1584,8 @@ class DLTEngine:
         cell raises :class:`InfeasibleError` on either engine.
         """
         cfg = self.config
+        self._require_axes(self._formulation(frontend, formulation),
+                           ("n", "m"), "grid()")
         cspec = spec.canonical()[0]
         P, Q = len(source_counts), len(processor_counts)
         tf = np.full((P, Q), np.nan)

@@ -1,11 +1,19 @@
-"""Formulation registry for the paper's DLT programs.
+"""Formulation registry for the DLT scenario families.
 
-Every LP formulation — Sec 3.1 front-end, Sec 3.2 no-front-end, and the
-column-reduced no-front-end chain variant — is one :class:`Formulation`
-object exposing scalar builds, batched row builds, unpacking, and
-verification.  The scalar simplex path and the batched interior-point
-engine share these objects, so each LP row and each paper constraint is
-written down exactly once.
+Every LP formulation — the paper's Sec 3.1 front-end, Sec 3.2
+no-front-end and its column-reduced chain variant, plus the related-work
+scenario families (resource-sharing networks, multi-installment bus
+scheduling) — is one :class:`Formulation` object exposing scalar builds,
+batched row builds, unpacking, verification and a declared
+:class:`FormulationCapabilities` record.  The scalar simplex path and
+the batched interior-point engine share these objects, so each LP row
+and each paper constraint is written down exactly once.
+
+Third-party formulations plug in through :func:`register`; the engine
+and dltlint consult ``capabilities`` (never formulation names), so a
+registered formulation gets kernel routing, bucketing, warm sweeps and
+lint coverage without engine changes — see CONTRIBUTING's "Authoring a
+formulation" guide.
 
 >>> from repro.core.dlt.formulations import get_formulation
 >>> get_formulation("nofrontend_reduced").family_dims(2, 8)
@@ -13,32 +21,46 @@ FamilyDims(nv=25, n_ub=25, n_eq=1)
 """
 
 from .base import (
+    DEFAULT_NOFRONTEND_FORMULATION,
     BandedStructure,
     BatchFields,
     BatchRows,
     FamilyDims,
     Formulation,
+    FormulationCapabilities,
     available_formulations,
+    default_batched_formulation,
     get_formulation,
+    register,
     register_formulation,
 )
 from .frontend import FRONTEND, FrontendFormulation
+from .multi_installment import MULTI_INSTALLMENT, MultiInstallmentFormulation
 from .nofrontend import NOFRONTEND, NoFrontendFormulation
 from .nofrontend_reduced import NOFRONTEND_REDUCED, ReducedNoFrontendFormulation
+from .resource_sharing import RESOURCE_SHARING, ResourceSharingFormulation
 
 __all__ = [
     "Formulation",
+    "FormulationCapabilities",
     "FamilyDims",
     "BatchRows",
     "BatchFields",
     "BandedStructure",
+    "register",
     "register_formulation",
     "get_formulation",
     "available_formulations",
+    "default_batched_formulation",
+    "DEFAULT_NOFRONTEND_FORMULATION",
     "FrontendFormulation",
     "NoFrontendFormulation",
     "ReducedNoFrontendFormulation",
+    "ResourceSharingFormulation",
+    "MultiInstallmentFormulation",
     "FRONTEND",
     "NOFRONTEND",
     "NOFRONTEND_REDUCED",
+    "RESOURCE_SHARING",
+    "MULTI_INSTALLMENT",
 ]

@@ -11,7 +11,10 @@ of the paper's programs:
 * ``batch_column_mask`` — which LP variables are real per scenario,
 * ``unpack_batch``      — solution vector -> named schedule fields,
 * ``constraint_checks`` — the paper constraint set as labeled vectorized
-  predicates, shared by the batch verifier and the scalar verifier.
+  predicates, shared by the batch verifier and the scalar verifier,
+* ``capabilities``      — a declared :class:`FormulationCapabilities`
+  record the engine, warm-start machinery and dltlint consult instead of
+  special-casing formulation names.
 
 The scalar entry points (``build_scalar``, ``unpack_scalar``,
 ``verify_scalar``) are derived on a one-lane batch, so there is exactly
@@ -25,6 +28,13 @@ Conventions shared by every formulation:
 * inequality rows read ``A_ub x <= b_ub``, equalities ``A_eq x = b_eq``;
 * a padded scenario's inactive rows must read ``0 <= 1`` / come with
   ``eq_active=False`` so the standard-form embedding can park them.
+
+Third-party formulations plug in through :func:`register` — the single
+public extension point.  It validates the declared capabilities and
+refuses name collisions; the engine resolves names exclusively through
+this registry, so a registered formulation gets kernel routing, size
+bucketing, warm sweeps, executors and lint coverage with no engine
+changes.
 """
 
 from __future__ import annotations
@@ -42,11 +52,23 @@ __all__ = [
     "BatchRows",
     "BatchFields",
     "BandedStructure",
+    "FormulationCapabilities",
     "Formulation",
+    "register",
     "register_formulation",
     "get_formulation",
     "available_formulations",
+    "default_batched_formulation",
+    "DEFAULT_NOFRONTEND_FORMULATION",
 ]
+
+#: Batched default for ``frontend=False`` — the exact column-reduced
+#: Sec 3.2 program (same optimum, ~40% fewer variables).
+DEFAULT_NOFRONTEND_FORMULATION = "nofrontend_reduced"
+
+#: Oracle kinds a formulation may declare (see
+#: :attr:`FormulationCapabilities.oracle_kind`).
+_ORACLE_KINDS = ("classic", "self")
 
 
 class FamilyDims(NamedTuple):
@@ -74,6 +96,60 @@ class BatchRows(NamedTuple):
     A_eq: np.ndarray       # (B, n_eq, nv)
     b_eq: np.ndarray       # (B, n_eq)
     eq_active: np.ndarray  # (B, n_eq) bool — False on padded eq rows
+
+
+@dataclasses.dataclass(frozen=True)
+class FormulationCapabilities:
+    """What a formulation supports — declared, never inferred from names.
+
+    The engine's kernel routing, warm-seeding and the dltlint target
+    sweep consult this record; before it existed they special-cased the
+    three seed formulations by name, which broke the moment a fourth
+    formulation registered.
+
+    Attributes:
+      supports_banded: the formulation publishes a validated
+        :class:`BandedStructure` (``banded_structure`` returns non-None
+        for every family shape).  ``False`` routes the auto kernel
+        choice to the structured/dense paths and makes an explicit
+        ``kernel="banded"`` pin a :class:`ValueError`.
+      supports_warm_transfer: cross-bucket warm seeding through the
+        banded row maps is meaningful for this formulation.  Requires
+        ``supports_banded`` (the transfer runs through the banded
+        geometry's row correspondence).
+      oracle_kind: which scalar oracle verifies a batched solve lane.
+        ``"classic"`` — the paper's standalone solver (Sec 2 closed
+        form / Sec 3 simplex selected by the ``frontend`` flag), fully
+        independent of the formulation's own rows.  ``"self"`` — the
+        same formulation re-solved through the scalar simplex path
+        (used by formulations the classic solver does not model).
+      spec_axes: the spec axes this formulation consumes.  ``"n"`` /
+        ``"m"`` are the source/processor axes; every other name is a
+        per-spec extra carried in ``SystemSpec.extras`` (e.g.
+        ``"link_capacity"``, ``"installments"``).  ``sweep``/``grid``
+        validate requested axes against this tuple up front.
+    """
+
+    supports_banded: bool
+    supports_warm_transfer: bool
+    oracle_kind: str
+    spec_axes: Tuple[str, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "spec_axes", tuple(self.spec_axes))
+        if self.oracle_kind not in _ORACLE_KINDS:
+            raise ValueError(
+                f"oracle_kind must be one of {_ORACLE_KINDS}, "
+                f"got {self.oracle_kind!r}")
+        if self.supports_warm_transfer and not self.supports_banded:
+            raise ValueError(
+                "supports_warm_transfer requires supports_banded — the "
+                "cross-bucket seed transfers through the banded row maps")
+
+    @property
+    def required_extras(self) -> Tuple[str, ...]:
+        """Spec-extra names (every declared axis that is not n/m)."""
+        return tuple(a for a in self.spec_axes if a not in ("n", "m"))
 
 
 class BandedStructure(NamedTuple):
@@ -178,12 +254,20 @@ class _BandedBuilder:
 
 @dataclasses.dataclass(frozen=True)
 class BatchFields:
-    """Named solution fields in the padded (B, N_max, M_max) layout."""
+    """Named solution fields in the padded (B, N_max, M_max) layout.
+
+    ``extra`` carries formulation-specific per-lane arrays that do not
+    fit the (B, N, M) grid — e.g. multi-installment per-round loads
+    ``beta_r``.  ``beta`` is ALWAYS the per-(source, processor) totals
+    in the padded grid layout (the engine's assembly and the cost model
+    rely on it); ``extra`` refines it, never replaces it.
+    """
 
     beta: np.ndarray            # (B, N_max, M_max)
     finish: np.ndarray          # (B,)
     TS: Optional[np.ndarray] = None
     TF: Optional[np.ndarray] = None
+    extra: Optional[Dict[str, np.ndarray]] = None
 
 
 class Formulation:
@@ -192,6 +276,9 @@ class Formulation:
     name: str = ""
     frontend: bool = False        # Schedule semantics (Sec 3.1 vs 3.2)
     has_intervals: bool = False   # unpack produces TS/TF
+
+    #: Declared capability record — REQUIRED for :func:`register`.
+    capabilities: Optional[FormulationCapabilities] = None
 
     # ---- required per-formulation pieces -------------------------------
 
@@ -238,9 +325,140 @@ class Formulation:
         solver must keep the dense/structured path.  Implementations
         return a :class:`BandedStructure` whose row transform makes
         ``F D F'`` block-tridiagonal-plus-border for EVERY lane of the
-        padded family (masked rows only shrink the pattern).
+        padded family (masked rows only shrink the pattern).  A non-None
+        return must be matched by ``capabilities.supports_banded``.
         """
         return None
+
+    # ---- overridable: batching/grouping hooks ---------------------------
+
+    def batch_dims(self, bs: BatchedSystemSpec) -> FamilyDims:
+        """Family dims of a STACKED spec (may consult extras).
+
+        The default depends only on ``(n_max, m_max)``; formulations
+        with extra size axes (e.g. the installment count) bucket them
+        here so that every subset of a lane group reproduces the same
+        dims — the engine relies on ``batch_dims(sub.take(idx)) ==
+        batch_dims(sub)`` within one group.
+        """
+        return self.family_dims(bs.n_max, bs.m_max)
+
+    def group_key(self, bs: BatchedSystemSpec, k: int) -> tuple:
+        """Extra size-bucketing key components for lane ``k``.
+
+        Appended to the engine's ``(n_sources, m_bucket)`` group key.
+        Formulations whose LP shape depends on an extra axis return its
+        bucket here (e.g. the installment-count bucket) so lanes with
+        incompatible shapes never share a padded family.
+        """
+        return ()
+
+    def demo_batch(self, n: int = 2, m: int = 3,
+                   masked: bool = True) -> BatchedSystemSpec:
+        """Deterministic small stacked family for traces, lint and docs.
+
+        Values are fixed (no RNG): heterogeneous G/R/A so no LP row
+        degenerates, release times strictly increasing so the ordering
+        constraints are all active.  With ``masked`` a smaller second
+        lane is stacked in, so the family contains padded sources,
+        processors and rows.  Declared extras are filled with
+        deterministic per-lane values; override when an extra needs a
+        special range (e.g. integer installment counts) or when the
+        formulation constrains (n, m) itself.
+        """
+        shapes = [(n, m)]
+        if masked:
+            shapes.append((max(1, n - 1), max(1, m - 1)))
+        req = (self.capabilities.required_extras
+               if self.capabilities is not None else ())
+        specs = []
+        for li, (nl, ml) in enumerate(shapes):
+            if li == 0:
+                G = 0.2 + 0.1 * np.arange(nl)
+                R = 0.5 * np.arange(nl)
+                A = 1.0 + 0.25 * np.arange(ml)
+                J = 10.0 + nl + ml
+            else:
+                G = 0.3 + 0.1 * np.arange(nl)
+                R = 0.25 * np.arange(nl)
+                A = 1.5 + 0.5 * np.arange(ml)
+                J = 5.0
+            extras = {name: 0.25 * (ei + 1) + 0.125 * li
+                      for ei, name in enumerate(req)} or None
+            specs.append(SystemSpec(G=G, R=R, A=A, J=J, extras=extras))
+        return BatchedSystemSpec.from_specs(specs)
+
+    def clean_batch(self, bs: BatchedSystemSpec,
+                    fields: BatchFields) -> BatchFields:
+        """Exact zeros on padded cells (what ``constraint_checks`` needs).
+
+        The default zeroes beta/TS/TF outside each lane's real
+        ``(source, processor)`` cells; formulations with ``extra``
+        arrays additionally zero their padded entries and keep ``beta``
+        consistent with them.
+        """
+        cell = bs.cell_mask
+
+        def z(a):
+            return None if a is None else np.where(cell, a, 0.0)
+
+        return dataclasses.replace(
+            fields, beta=z(fields.beta), TS=z(fields.TS), TF=z(fields.TF))
+
+    def warm_fields(self, bs_dest: BatchedSystemSpec,
+                    fields_src: BatchFields,
+                    cell_src: np.ndarray) -> BatchFields:
+        """Complete a neighboring lane's fields into a warm seed.
+
+        ``fields_src`` is already selected per destination lane and
+        padded to the destination ``(N, M)`` shape; ``cell_src`` marks
+        the cells the SOURCE lane really had.  The default implements
+        the transfer rule for the paper's programs: beta cleared outside
+        the destination's real cells and renormalized to its mass, and
+        (for interval formulations) transmission intervals on newly
+        activated cells filled along the minimal chain
+        ``TF_{i,j} = max(TF_{i,j-1}, TF_{i-1,j}) + G_i beta_{i,j}``.
+        The result feeds :meth:`pack_batch`; slacks and duals are the
+        engine's job.
+        """
+        bsr = bs_dest
+        cell = bsr.cell_mask
+        nR = int(cell.shape[0])
+        beta = fields_src.beta.copy()
+        beta[~cell] = 0.0
+        tot = beta.sum(axis=(1, 2))
+        beta *= np.where(tot > 0, bsr.J / np.where(tot > 0, tot, 1.0),
+                         1.0)[:, None, None]
+        TS = TF = None
+        if self.has_intervals:
+            N, M = bsr.n_max, bsr.m_max
+            TF = fields_src.TF.copy()
+            activated = cell & ~cell_src
+            for j in range(M):
+                prev_j = TF[:, :, j - 1] if j else np.zeros((nR, N))
+                for i in range(N):
+                    prev_i = TF[:, i - 1, j] if i else np.full(nR, -np.inf)
+                    cand = (np.maximum(prev_j[:, i], prev_i)
+                            + bsr.G[:, i] * beta[:, i, j])
+                    TF[:, i, j] = np.where(activated[:, i, j],
+                                           np.maximum(cand, 0.0),
+                                           TF[:, i, j])
+            TF[~cell] = 0.0
+            TS = np.clip(TF - beta * bsr.G[:, :, None], 0.0, None)
+            TS[~cell] = 0.0
+        return BatchFields(beta=beta, finish=fields_src.finish.copy(),
+                           TS=TS, TF=TF)
+
+    def fold_schedule(self, sched: Schedule) -> np.ndarray:
+        """A scalar oracle Schedule's beta in the (n, m) grid layout.
+
+        The engine writes oracle-fallback results into the batched
+        ``(B, N_max, M_max)`` beta array through this hook.  The default
+        is the identity; formulations whose scalar schedule carries a
+        finer layout (e.g. per-installment rows) fold it to
+        per-(source, processor) totals here.
+        """
+        return np.asarray(sched.beta, dtype=np.float64)
 
     # ---- derived: batch verification -----------------------------------
 
@@ -257,10 +475,23 @@ class Formulation:
     def _singleton(self, spec: SystemSpec) -> BatchedSystemSpec:
         return BatchedSystemSpec.from_specs([spec], presorted=True)
 
+    def _extra(self, bs: BatchedSystemSpec, name: str) -> np.ndarray:
+        """(B,) spec-extra array, with a spec_axes-naming error when absent."""
+        extras = bs.extras or {}
+        if name not in extras:
+            axes = (self.capabilities.spec_axes
+                    if self.capabilities is not None else ())
+            raise ValueError(
+                f"formulation {self.name!r} needs spec extra {name!r} "
+                f"(declared spec_axes: {axes}); provide it via "
+                f"SystemSpec(extras={{{name!r}: ...}}) or the "
+                f"BatchedSystemSpec extras mapping")
+        return np.asarray(extras[name], dtype=np.float64)
+
     def build_scalar(self, spec: SystemSpec):
         """(c, A_ub, b_ub, A_eq, b_eq) over x >= 0 for an exact-size spec."""
         bs = self._singleton(spec)
-        dims = self.family_dims(bs.n_max, bs.m_max)
+        dims = self.batch_dims(bs)
         rows = self.build_batch_rows(bs)
         c = np.zeros(dims.nv)
         c[dims.nv - 1] = 1.0
@@ -310,12 +541,46 @@ _REGISTRY: Dict[str, Formulation] = {}
 FormulationLike = Union[Formulation, str, bool]
 
 
-def register_formulation(formulation: Formulation) -> Formulation:
-    """Register a formulation instance under its ``name``."""
+def register(formulation: Formulation, *,
+             replace: bool = False) -> Formulation:
+    """Register a formulation — the single public extension point.
+
+    Validates the instance up front so a broken registration fails HERE
+    with a clear message, not deep inside the engine:
+
+    * ``name`` must be non-empty and not collide with an existing
+      registration (pass ``replace=True`` to intentionally override);
+    * ``capabilities`` must be a :class:`FormulationCapabilities`
+      instance — the engine's routing, warm seeding and lint sweep all
+      consult it, so a formulation without one cannot be driven.
+    """
+    if not isinstance(formulation, Formulation):
+        raise TypeError(
+            f"register() takes a Formulation instance, got "
+            f"{type(formulation).__name__}")
     if not formulation.name:
         raise ValueError("formulation needs a non-empty name")
+    caps = formulation.capabilities
+    if caps is None:
+        raise ValueError(
+            f"formulation {formulation.name!r} declares no capabilities; "
+            "set the `capabilities` class attribute to a "
+            "FormulationCapabilities(...) record")
+    if not isinstance(caps, FormulationCapabilities):
+        raise TypeError(
+            f"formulation {formulation.name!r}: capabilities must be a "
+            f"FormulationCapabilities, got {type(caps).__name__}")
+    if not replace and formulation.name in _REGISTRY:
+        raise ValueError(
+            f"formulation name collision: {formulation.name!r} is already "
+            "registered (pass replace=True to override it)")
     _REGISTRY[formulation.name] = formulation
     return formulation
+
+
+def register_formulation(formulation: Formulation) -> Formulation:
+    """Legacy alias for :func:`register` (overwrite allowed)."""
+    return register(formulation, replace=True)
 
 
 def get_formulation(which: FormulationLike) -> Formulation:
@@ -336,6 +601,16 @@ def get_formulation(which: FormulationLike) -> Formulation:
                 f"unknown formulation {which!r}; available: "
                 f"{available_formulations()}") from None
     raise TypeError(f"cannot resolve formulation from {which!r}")
+
+
+def default_batched_formulation(frontend: bool) -> Formulation:
+    """The registry's batched default for a front-end flag.
+
+    Owned by the registry (not the engine) so the seed-name mapping
+    lives in exactly one place.
+    """
+    return _REGISTRY["frontend" if frontend
+                     else DEFAULT_NOFRONTEND_FORMULATION]
 
 
 def available_formulations() -> list:

@@ -32,8 +32,9 @@ from .base import (
     BatchRows,
     FamilyDims,
     Formulation,
+    FormulationCapabilities,
     _BandedBuilder,
-    register_formulation,
+    register,
 )
 
 __all__ = ["FrontendFormulation", "FRONTEND"]
@@ -45,6 +46,12 @@ class FrontendFormulation(Formulation):
     name = "frontend"
     frontend = True
     has_intervals = False
+    capabilities = FormulationCapabilities(
+        supports_banded=True,
+        supports_warm_transfer=True,
+        oracle_kind="classic",
+        spec_axes=("n", "m"),
+    )
 
     def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
         N, M = n_max, m_max
@@ -189,4 +196,4 @@ class FrontendFormulation(Formulation):
         return checks
 
 
-FRONTEND = register_formulation(FrontendFormulation())
+FRONTEND = register(FrontendFormulation())

@@ -1,0 +1,353 @@
+"""Multi-installment scheduling LP — R-round distribution on a bus network.
+
+Implements the multi-installment divisible-load model of
+Berlinska/Drozdowski-style linear/bus networks (arXiv:0706.4038): ONE
+source feeds M processors over a shared bus in R rounds ("installments").
+Round-robin order — installment ``(r, j)`` is the ``q = r*M + j``-th
+transmission on the bus — so a processor starts computing early chunks
+while later chunks are still in flight, which is the whole point of
+multi-installment distribution: it hides communication latency that a
+single-installment schedule must serialize.
+
+Per-spec extras: ``installments`` (R, a positive integer).  R buckets
+exactly like the processor count M does — lanes group by
+``bucket(R)`` and the padded family is built at the bucket edge, so a
+mixed-R batch compiles one executable per (bucket_M, bucket_R) pair.
+
+Variables (installment-major order ``q = r*M + j``):
+    x = [beta (R*M), F (R*M), T_f]        all >= 0
+
+``beta[r, j]`` is the load of installment ``(r, j)``; ``F[r, j]`` its
+computation-finish time on ``P_j``.  With ``G`` the bus inverse speed,
+``R_1`` the source release time and arrival time
+``T_arr(r,j) = R_1 + G * sum_{q' <= q} beta[q']`` (bus serialization):
+
+  (EqA)  F_{r,j} >= T_arr(r,j) + A_j beta_{r,j}       (arrive, then compute)
+  (EqQ)  F_{r,j} >= F_{r-1,j} + A_j beta_{r,j}        (per-processor queue)
+  (EqT)  T_f    >= F_{r,j}                            (makespan)
+  (EqM)  sum beta = J                                 (mass)
+
+i.e. ``(3R-1)M`` inequality rows and one equality.  At R = 1 this IS
+the paper's Sec 2 single-source no-front-end program.  No banded
+structure is declared: the EqA prefix sums are dense across EVERY
+installment column and there is no per-column diff that cancels them
+(adjacent q differ by a full A_j swap), so the formulation declares
+itself structureless and the engine routes it to the structured/dense
+kernels.
+
+Unlike the grid formulations, ``build_batch_rows`` masks padded CELLS
+in its own coefficients (not just through the downstream column mask),
+so the scalar simplex path may solve a round-padded family directly.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from ..stacking import BatchedSystemSpec
+from ..types import Schedule, SystemSpec
+from .base import (
+    BatchFields,
+    BatchRows,
+    FamilyDims,
+    Formulation,
+    FormulationCapabilities,
+    register,
+)
+
+__all__ = ["MultiInstallmentFormulation", "MULTI_INSTALLMENT",
+           "R_BUCKET_EDGES"]
+
+#: Installment-count bucket edges (same ladder the M-axis uses).
+R_BUCKET_EDGES: Tuple[int, ...] = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+
+def _bucket_r(r: int) -> int:
+    for edge in R_BUCKET_EDGES:
+        if r <= edge:
+            return edge
+    return int(r)
+
+
+class MultiInstallmentFormulation(Formulation):
+    """R-round bus LP: ``x = [beta (R*M), F (R*M), T_f]`` (single source)."""
+
+    name = "multi_installment"
+    frontend = False
+    has_intervals = False
+    capabilities = FormulationCapabilities(
+        supports_banded=False,
+        supports_warm_transfer=False,
+        oracle_kind="self",
+        spec_axes=("m", "installments"),
+    )
+
+    # ---- shape plumbing -------------------------------------------------
+
+    def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
+        """Dims at ``n_max`` INSTALLMENTS (the R axis rides the n slot).
+
+        This formulation is single-source; its family shape varies over
+        (R, M), so the registry-wide ``(n_max, m_max)`` signature is
+        reinterpreted with the installment bucket in the first slot
+        (``batch_dims`` is the canonical entry point and does exactly
+        that).
+        """
+        Rm, M = n_max, m_max
+        return FamilyDims(
+            nv=2 * Rm * M + 1,
+            n_ub=(3 * Rm - 1) * M,
+            n_eq=1,
+        )
+
+    def _installments(self, bs: BatchedSystemSpec) -> np.ndarray:
+        r = self._extra(bs, "installments")
+        ri = np.rint(r)
+        if np.any(np.abs(r - ri) > 0) or np.any(ri < 1):
+            raise ValueError("installments must be integers >= 1")
+        return ri.astype(np.int64)
+
+    def batch_dims(self, bs: BatchedSystemSpec) -> FamilyDims:
+        Rm = _bucket_r(int(self._installments(bs).max()))
+        return self.family_dims(Rm, bs.m_max)
+
+    def group_key(self, bs: BatchedSystemSpec, k: int) -> tuple:
+        return (_bucket_r(int(self._installments(bs)[k])),)
+
+    def _round_mask(self, bs: BatchedSystemSpec, Rm: int) -> np.ndarray:
+        """(B, Rm, M) — True on real (installment, processor) cells."""
+        rk = self._installments(bs)
+        ract = np.arange(Rm)[None, :] < rk[:, None]
+        return ract[:, :, None] & bs.proc_mask[:, None, :]
+
+    # ---- LP pieces ------------------------------------------------------
+
+    def batch_column_mask(self, bs: BatchedSystemSpec) -> np.ndarray:
+        dims = self.batch_dims(bs)
+        Rm = (dims.nv - 1) // (2 * bs.m_max)
+        cell = self._round_mask(bs, Rm).reshape(bs.batch, -1)
+        return np.concatenate(
+            [cell, cell, np.ones((bs.batch, 1), dtype=bool)], axis=1)
+
+    def build_batch_rows(self, bs: BatchedSystemSpec) -> BatchRows:
+        """EqA/EqQ/EqT/EqM rows, cell-masked in the coefficients."""
+        if bs.n_max != 1:
+            raise ValueError(
+                "multi_installment models a single source; got a family "
+                f"with n_max={bs.n_max} (it declares spec_axes "
+                f"{self.capabilities.spec_axes} — no 'n' axis)")
+        B, M = bs.batch, bs.m_max
+        dims = self.batch_dims(bs)
+        Rm = (dims.nv - 1) // (2 * M)
+        RM = Rm * M
+        nv, n_ub = dims.nv, dims.n_ub
+        tf = nv - 1
+        G0, R0, A, J = bs.G[:, 0], bs.R[:, 0], bs.A, bs.J
+        act = self._round_mask(bs, Rm).reshape(B, RM)         # (B, RM)
+        qc = np.arange(RM)
+        jq = qc % M                                           # processor of q
+
+        A_ub = np.zeros((B, n_ub, nv))
+        b_ub = np.zeros((B, n_ub))
+
+        # (EqA)  G sum_{q'<=q} beta + A_j beta_q - F_q <= -R_1,  RM rows
+        oA = 0
+        tri_incl = (qc[:, None] >= qc[None, :]).astype(float)  # q' <= q
+        A_ub[:, oA: oA + RM, :RM] = (
+            G0[:, None, None] * tri_incl[None] * act[:, None, :])
+        A_ub[:, oA + qc, qc] += A[:, jq]
+        A_ub[:, oA + qc, RM + qc] = -1.0
+        A_ub[:, oA: oA + RM] *= act[:, :, None]
+        b_ub[:, oA + qc] = np.where(act, -R0[:, None], 1.0)
+
+        # (EqQ)  F_{r-1,j} + A_j beta_{r,j} - F_{r,j} <= 0,  (Rm-1)*M rows
+        oQ = RM
+        if Rm > 1:
+            q1 = np.arange(M, RM)                 # cells with a prior round
+            r = oQ + np.arange(q1.size)
+            actq = act[:, q1]
+            A_ub[:, r, RM + q1 - M] = np.where(actq, 1.0, 0.0)
+            A_ub[:, r, q1] = np.where(actq, A[:, q1 % M], 0.0)
+            A_ub[:, r, RM + q1] = np.where(actq, -1.0, 0.0)
+            b_ub[:, r] = np.where(actq, 0.0, 1.0)
+
+        # (EqT)  F_q - T_f <= 0,  RM rows
+        oT = oQ + (Rm - 1) * M
+        A_ub[:, oT + qc, RM + qc] = np.where(act, 1.0, 0.0)
+        A_ub[:, oT + qc, tf] = np.where(act, -1.0, 0.0)
+        b_ub[:, oT + qc] = np.where(act, 0.0, 1.0)
+
+        # (EqM)  sum beta = J  (cell-masked, so scalar padding is inert)
+        A_eq = np.zeros((B, 1, nv))
+        A_eq[:, 0, :RM] = act.astype(float)
+        b_eq = J[:, None].copy()
+        eq_active = np.ones((B, 1), dtype=bool)
+        return BatchRows(A_ub, b_ub, A_eq, b_eq, eq_active)
+
+    def unpack_batch(self, bs: BatchedSystemSpec, x: np.ndarray) -> BatchFields:
+        """Fields: per-processor totals in ``beta``, rounds in ``extra``."""
+        B, M = bs.batch, bs.m_max
+        dims = self.batch_dims(bs)
+        Rm = (dims.nv - 1) // (2 * M)
+        RM = Rm * M
+        if x.shape[1] not in (dims.nv, dims.n_std):
+            raise ValueError(
+                f"solution width {x.shape[1]} matches neither nv={dims.nv} "
+                f"nor n_std={dims.n_std} of the R-bucketed family — lanes "
+                "from different installment buckets cannot share a batch")
+        beta_r = x[:, :RM].reshape(B, Rm, M).copy()
+        F_r = x[:, RM: 2 * RM].reshape(B, Rm, M).copy()
+        return BatchFields(
+            beta=beta_r.sum(axis=1, keepdims=True),
+            finish=x[:, 2 * RM].copy(),
+            extra={"beta_r": beta_r, "F_r": F_r},
+        )
+
+    def pack_batch(self, bs: BatchedSystemSpec,
+                   fields: BatchFields) -> np.ndarray:
+        B = bs.batch
+        if not fields.extra or "beta_r" not in fields.extra:
+            raise ValueError(
+                "multi_installment pack_batch needs the per-round fields "
+                "(extra['beta_r'] / extra['F_r']) produced by unpack_batch")
+        return np.concatenate(
+            [fields.extra["beta_r"].reshape(B, -1),
+             fields.extra["F_r"].reshape(B, -1),
+             fields.finish[:, None]], axis=1)
+
+    # ---- verification ---------------------------------------------------
+
+    def _implied_finish(self, bs: BatchedSystemSpec, beta_r: np.ndarray,
+                        act: np.ndarray):
+        """Minimal feasible per-cell finish + its per-lane max.
+
+        The bus recursion from the rounds alone:
+        ``F(r,j) = max(T_arr(r,j), F(r-1,j)) + A_j beta_{r,j}`` — the LP
+        optimum satisfies ``T_f >= max F`` and any schedule violating it
+        is infeasible, so verification never needs the LP's F block.
+        """
+        B, Rb, M = beta_r.shape
+        G0, R0, A = bs.G[:, 0], bs.R[:, 0], bs.A[:, :M]
+        pref = np.cumsum(beta_r.reshape(B, Rb * M), axis=1).reshape(B, Rb, M)
+        arr = R0[:, None, None] + G0[:, None, None] * pref
+        prevF = np.zeros((B, M))
+        maxF = np.zeros(B)
+        for r in range(Rb):
+            a = act[:, r, :]
+            f = np.maximum(arr[:, r, :], prevF) + A * beta_r[:, r, :]
+            prevF = np.where(a, f, prevF)
+            maxF = np.maximum(maxF, np.max(np.where(a, f, 0.0), axis=1))
+        return maxF
+
+    def _rounds_of(self, bs: BatchedSystemSpec,
+                   fields: BatchFields) -> np.ndarray:
+        """(B, Rb, M) per-round loads from extra (or scalar-path beta)."""
+        if fields.extra and "beta_r" in fields.extra:
+            return np.asarray(fields.extra["beta_r"], dtype=np.float64)
+        # scalar verify path: Schedule.beta IS the (R, M) round matrix
+        return np.asarray(fields.beta, dtype=np.float64)
+
+    def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
+                          tol: float) -> List[Tuple[str, np.ndarray]]:
+        beta_r = self._rounds_of(bs, fields)
+        finish = fields.finish
+        Rb = beta_r.shape[1]
+        act = self._round_mask(bs, Rb)
+        scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), bs.J))
+        slack = tol * scale
+        checks = []
+        checks.append(("beta >= 0", ~np.any(
+            (beta_r < -slack[:, None, None]) & act, axis=(1, 2))))
+        checks.append(("EqM (mass = J)", np.abs(
+            beta_r.sum(axis=(1, 2)) - bs.J) <= slack))
+        need = self._implied_finish(bs, np.where(act, beta_r, 0.0), act)
+        checks.append(("EqA/EqQ/EqT (bus arrival + sequential compute)",
+                       finish >= need - slack))
+        return checks
+
+    # ---- engine hooks ---------------------------------------------------
+
+    def clean_batch(self, bs: BatchedSystemSpec,
+                    fields: BatchFields) -> BatchFields:
+        """Exact zeros on padded rounds/processors; totals recomputed."""
+        if not fields.extra or "beta_r" not in fields.extra:
+            return super().clean_batch(bs, fields)
+        beta_r = fields.extra["beta_r"]
+        act = self._round_mask(bs, beta_r.shape[1])
+        beta_r = np.where(act, beta_r, 0.0)
+        F_r = np.where(act, fields.extra["F_r"], 0.0)
+        return BatchFields(
+            beta=beta_r.sum(axis=1, keepdims=True),
+            finish=fields.finish, TS=None, TF=None,
+            extra={"beta_r": beta_r, "F_r": F_r},
+        )
+
+    def warm_fields(self, bs_dest: BatchedSystemSpec,
+                    fields_src: BatchFields,
+                    cell_src: np.ndarray) -> BatchFields:
+        """Round-level warm seed: renormalize, then re-chain the finishes."""
+        if not fields_src.extra or "beta_r" not in fields_src.extra:
+            raise ValueError(
+                "multi_installment warm seeding needs per-round source "
+                "fields (extra['beta_r'])")
+        beta_r = np.asarray(fields_src.extra["beta_r"], dtype=np.float64)
+        act = self._round_mask(bs_dest, beta_r.shape[1])
+        beta_r = np.where(act, beta_r, 0.0)
+        tot = beta_r.sum(axis=(1, 2))
+        beta_r *= np.where(tot > 0, bs_dest.J / np.where(tot > 0, tot, 1.0),
+                           1.0)[:, None, None]
+        B, Rb, M = beta_r.shape
+        G0, R0, A = bs_dest.G[:, 0], bs_dest.R[:, 0], bs_dest.A[:, :M]
+        pref = np.cumsum(beta_r.reshape(B, Rb * M), axis=1).reshape(B, Rb, M)
+        arr = R0[:, None, None] + G0[:, None, None] * pref
+        F_r = np.zeros((B, Rb, M))
+        prevF = np.zeros((B, M))
+        finish = np.zeros(B)
+        for r in range(Rb):
+            a = act[:, r, :]
+            f = np.maximum(arr[:, r, :], prevF) + A * beta_r[:, r, :]
+            F_r[:, r, :] = np.where(a, f, 0.0)
+            prevF = np.where(a, f, prevF)
+            finish = np.maximum(finish, np.max(np.where(a, f, 0.0), axis=1))
+        return BatchFields(
+            beta=beta_r.sum(axis=1, keepdims=True), finish=finish,
+            extra={"beta_r": beta_r, "F_r": F_r},
+        )
+
+    def fold_schedule(self, sched: Schedule) -> np.ndarray:
+        """Scalar schedules carry rounds; the grid wants per-proc totals."""
+        return np.asarray(sched.beta, dtype=np.float64).sum(
+            axis=0, keepdims=True)
+
+    def demo_batch(self, n: int = 2, m: int = 3,
+                   masked: bool = True) -> BatchedSystemSpec:
+        """Single-source demo; the requested ``n`` rides the R axis."""
+        shapes = [(n, m)]
+        if masked:
+            shapes.append((max(1, n - 1), max(1, m - 1)))
+        specs = []
+        for li, (rl, ml) in enumerate(shapes):
+            if li == 0:
+                specs.append(SystemSpec(
+                    G=[0.2], R=[0.0], A=1.0 + 0.25 * np.arange(ml),
+                    J=10.0 + rl + ml, extras={"installments": rl}))
+            else:
+                specs.append(SystemSpec(
+                    G=[0.3], R=[0.0], A=1.5 + 0.5 * np.arange(ml),
+                    J=5.0, extras={"installments": rl}))
+        return BatchedSystemSpec.from_specs(specs)
+
+    # ---- scalar path ----------------------------------------------------
+
+    def unpack_scalar(self, spec: SystemSpec, x: np.ndarray) -> Schedule:
+        """Schedule.beta is the per-round (R, M) installment matrix."""
+        bs = self._singleton(spec)
+        f = self.unpack_batch(bs, np.asarray(x)[None, :])
+        rk = int(self._installments(bs)[0])
+        return Schedule(spec=spec, beta=f.extra["beta_r"][0, :rk, :].copy(),
+                        finish_time=float(f.finish[0]), frontend=False)
+
+
+MULTI_INSTALLMENT = register(MultiInstallmentFormulation())

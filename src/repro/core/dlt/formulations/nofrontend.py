@@ -32,8 +32,9 @@ from .base import (
     BatchRows,
     FamilyDims,
     Formulation,
+    FormulationCapabilities,
     _BandedBuilder,
-    register_formulation,
+    register,
 )
 
 __all__ = ["NoFrontendFormulation", "NOFRONTEND"]
@@ -45,6 +46,12 @@ class NoFrontendFormulation(Formulation):
     name = "nofrontend"
     frontend = False
     has_intervals = True
+    capabilities = FormulationCapabilities(
+        supports_banded=True,
+        supports_warm_transfer=True,
+        oracle_kind="classic",
+        spec_axes=("n", "m"),
+    )
 
     def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
         N, M = n_max, m_max
@@ -244,4 +251,4 @@ class NoFrontendFormulation(Formulation):
         return checks
 
 
-NOFRONTEND = register_formulation(NoFrontendFormulation())
+NOFRONTEND = register(NoFrontendFormulation())

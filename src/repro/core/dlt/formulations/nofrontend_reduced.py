@@ -51,8 +51,9 @@ from .base import (
     BatchFields,
     BatchRows,
     FamilyDims,
+    FormulationCapabilities,
     _BandedBuilder,
-    register_formulation,
+    register,
 )
 from .nofrontend import NoFrontendFormulation
 
@@ -69,6 +70,12 @@ class ReducedNoFrontendFormulation(NoFrontendFormulation):
     name = "nofrontend_reduced"
     frontend = False
     has_intervals = True
+    capabilities = FormulationCapabilities(
+        supports_banded=True,
+        supports_warm_transfer=True,
+        oracle_kind="classic",
+        spec_axes=("n", "m"),
+    )
 
     def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
         N, M = n_max, m_max
@@ -254,4 +261,4 @@ class ReducedNoFrontendFormulation(NoFrontendFormulation):
     # constraint_checks inherited: always the ORIGINAL Sec 3.2 Eq 7-14 set.
 
 
-NOFRONTEND_REDUCED = register_formulation(ReducedNoFrontendFormulation())
+NOFRONTEND_REDUCED = register(ReducedNoFrontendFormulation())

@@ -1,0 +1,140 @@
+"""Resource-sharing network LP — sources share one bottleneck link.
+
+Extends the Sec 3.1 front-end program with the shared-link capacity
+coupling of Wu/Cao/Robertazzi, "Optimal Scheduling for Divisible Loads
+in Resource-Sharing Networks" (arXiv:1902.01898): the sources do not
+own independent channels — their transmissions ride ONE shared bus
+whose inverse capacity is the per-spec extra ``link_capacity``
+(time / unit load; ``0`` models an uncontended network and reduces the
+program to the plain front-end LP).
+
+Because transmissions are serialized on the bus in processor order, the
+load destined to processors ``1..j`` (from every source) must clear the
+shared link before ``P_j``'s pipeline can drain, which adds one coupling
+row per processor to the front-end program:
+
+  (EqL)  R_1 + ell * sum_{i, k<=j} beta_{i,k} <= T_f        j = 1..M
+
+Variables are unchanged: ``x = [beta (N*M), T_f]``.  The EqL rows
+couple EVERY source's beta across a processor prefix, so they are dense
+in the processor-block basis — they live in the arrowhead BORDER of the
+banded structure next to the Eq 6 mass row (the sparsity claim is
+property-checked by dltlint's DL005 symbolic rule).  The Eq 6 row stays
+FIRST among the border rows: cross-bucket warm transfer matches border
+rows by index, and Eq 6 is the row every bucket shares.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..stacking import BatchedSystemSpec
+from .base import (
+    BandedStructure,
+    BatchFields,
+    BatchRows,
+    FamilyDims,
+    FormulationCapabilities,
+    _BandedBuilder,
+    register,
+)
+from .frontend import FrontendFormulation
+
+__all__ = ["ResourceSharingFormulation", "RESOURCE_SHARING"]
+
+
+class ResourceSharingFormulation(FrontendFormulation):
+    """Front-end LP + shared-link prefix rows: ``x = [beta (N*M), T_f]``."""
+
+    name = "resource_sharing"
+    frontend = True
+    has_intervals = False
+    capabilities = FormulationCapabilities(
+        supports_banded=True,
+        supports_warm_transfer=True,
+        oracle_kind="self",
+        spec_axes=("n", "m", "link_capacity"),
+    )
+
+    def family_dims(self, n_max: int, m_max: int) -> FamilyDims:
+        N, M = n_max, m_max
+        return FamilyDims(
+            nv=N * M + 1,
+            n_ub=(N - 1) + (N - 1) * (M - 1) + M + M,   # front-end + EqL
+            n_eq=1,
+        )
+
+    def _link(self, bs: BatchedSystemSpec) -> np.ndarray:
+        ell = self._extra(bs, "link_capacity")
+        if np.any(ell < 0):
+            raise ValueError("link_capacity must be >= 0 "
+                             "(inverse shared-link speed)")
+        return ell
+
+    def build_batch_rows(self, bs: BatchedSystemSpec) -> BatchRows:
+        """Front-end rows (Eqs 3-6) + the M shared-link prefix rows."""
+        rows = super().build_batch_rows(bs)
+        B, N, M = bs.batch, bs.n_max, bs.m_max
+        ell = self._link(bs)
+        ms = bs.n_procs[:, None]
+        tf = N * M
+        oL = (N - 1) + (N - 1) * (M - 1) + M
+        jc = np.arange(M)
+        act = jc[None, :] < ms
+
+        # (EqL)  ell * sum_{i, k<=j} beta_{i,k} - T_f <= -R_1
+        A_ub, b_ub = rows.A_ub, rows.b_ub
+        tri_incl = (jc[:, None] >= jc[None, :]).astype(float)   # k <= j
+        A_ub[:, oL: oL + M, :tf] = (
+            ell[:, None, None] * np.tile(tri_incl, (1, N))[None])
+        A_ub[:, oL + jc, tf] = -1.0
+        A_ub[:, oL: oL + M] *= act[:, :, None]
+        b_ub[:, oL + jc] = np.where(act, -bs.R[:, :1], 1.0)
+        return rows
+
+    def banded_structure(self, n_max: int, m_max: int) -> BandedStructure:
+        """Front-end chain blocks; EqL joins the arrowhead border.
+
+        Same block layout as the front-end program (Eq 3 in block 0,
+        Eq 5 as a diff chain, Eq 4 coupling ``j-1`` to ``j``).  The EqL
+        prefix rows are dense across processor columns and CANNOT be
+        localized by a diff against Eq 5 (different A_j weights), so
+        they sit in the border with the Eq 6 mass row — Eq 6 first, so
+        border-by-index row transfer pairs the row every bucket shares.
+        """
+        N, M = n_max, m_max
+        dims = self.family_dims(N, M)
+        o4 = N - 1
+        o5 = (N - 1) + (N - 1) * (M - 1)
+        oL = o5 + M
+        sb = _BandedBuilder()
+        for j in range(M):
+            if j == 0:
+                for i in range(N - 1):                       # Eq 3
+                    sb.add(i, 0)
+            sb.add(o5 + j, j, o5 + j - 1 if j else -1)       # Eq 5 (diff)
+            if j >= 1:
+                for i in range(N - 1):                       # Eq 4 (i, j-1)
+                    sb.add(o4 + i * (M - 1) + (j - 1), j)
+        sb.add(dims.n_ub, M)                                 # Eq 6 border
+        for j in range(M):                                   # EqL border
+            sb.add(oL + j, M)
+        return sb.build(M)
+
+    def constraint_checks(self, bs: BatchedSystemSpec, fields: BatchFields,
+                          tol: float):
+        """Eqs 3-6 + the shared-link prefix bound (padded cells zero)."""
+        checks = super().constraint_checks(bs, fields, tol)
+        ell = self._link(bs)
+        beta, finish = fields.beta, fields.finish
+        scale = np.maximum(1.0, np.maximum(np.nan_to_num(finish), bs.J))
+        slack = tol * scale
+        pref = np.cumsum(beta.sum(axis=1), axis=1)           # (B, M) k <= j
+        need = bs.R[:, :1] + ell[:, None] * pref
+        checks.append(("EqL (shared link)", ~np.any(
+            bs.proc_mask & (finish[:, None] < need - slack[:, None]),
+            axis=1)))
+        return checks
+
+
+RESOURCE_SHARING = register(ResourceSharingFormulation())

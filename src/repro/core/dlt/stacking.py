@@ -7,6 +7,16 @@ inert: the LP embeddings (see :mod:`repro.core.dlt.formulations`) mask
 padded rows and columns exactly, so they never influence a scenario's
 program.
 
+Per-formulation scalar axes beyond the paper's G/R/A/J/C — shared link
+capacities, installment counts, … — travel in the typed ``extras``
+mapping (``{name: (B,) float64}``), NOT as new positional fields: a
+formulation reads the axes it declared in ``capabilities.spec_axes``
+and ignores the rest, so the dataclass never grows per-formulation
+columns.  ``from_specs`` stacks them from each spec's ``extras`` dict
+(uniform presence required) or takes batch-level arrays; passing an
+extra axis as a bare keyword argument still works but warns — it is the
+deprecated pre-``extras`` call shape.
+
 This lives in its own module so the formulation registry can build
 scalar programs through the batched row builders (a one-lane batch)
 without importing the solver engine.
@@ -15,13 +25,28 @@ without importing the solver engine.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import warnings
+from typing import Mapping, Optional, Sequence
 
 import numpy as np
 
 from .types import SystemSpec
 
 __all__ = ["BatchedSystemSpec"]
+
+
+def _as_extra_col(name: str, val, B: int) -> np.ndarray:
+    """One extras column -> validated (B,) float64."""
+    a = np.asarray(val, dtype=np.float64)
+    if a.ndim == 0:
+        a = np.full(B, float(a))
+    if a.shape != (B,):
+        raise ValueError(
+            f"extras[{name!r}] must be scalar or shape ({B},), "
+            f"got shape {a.shape}")
+    if not np.all(np.isfinite(a)):
+        raise ValueError(f"extras[{name!r}] must be finite")
+    return a
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +61,7 @@ class BatchedSystemSpec:
     n_sources: np.ndarray    # (B,) actual N per scenario
     n_procs: np.ndarray      # (B,) actual M per scenario
     has_cost: Optional[np.ndarray] = None  # (B,) True where the spec had C
+    extras: Optional[Mapping[str, np.ndarray]] = None  # {name: (B,)}
 
     @property
     def batch(self) -> int:
@@ -64,9 +90,35 @@ class BatchedSystemSpec:
 
     @classmethod
     def from_specs(cls, specs: Sequence[SystemSpec],
-                   presorted: bool = False) -> "BatchedSystemSpec":
+                   presorted: bool = False,
+                   extras: Optional[Mapping[str, object]] = None,
+                   **legacy_axes) -> "BatchedSystemSpec":
+        """Stack specs; extra axes come per-spec or via ``extras``.
+
+        Extra-axis precedence: every key present on ANY spec's
+        ``extras`` must be present on ALL of them (a partially-supplied
+        axis is an error, not a silent default).  Batch-level ``extras``
+        arrays may add further axes but may not collide with per-spec
+        keys.  Bare keyword axes (``from_specs(specs, link_capacity=…)``
+        — the pre-``extras`` call shape) are folded into ``extras`` with
+        a :class:`DeprecationWarning`.
+        """
         if not len(specs):
             raise ValueError("empty spec batch")
+        if legacy_axes:
+            warnings.warn(
+                "passing extra spec axes as bare keyword arguments to "
+                "BatchedSystemSpec.from_specs is deprecated; use "
+                f"extras={{...}} instead (got {sorted(legacy_axes)})",
+                DeprecationWarning, stacklevel=2)
+            merged = dict(extras or {})
+            for name, val in legacy_axes.items():
+                if name in merged:
+                    raise ValueError(
+                        f"extra axis {name!r} passed both in extras= and "
+                        "as a keyword argument")
+                merged[name] = val
+            extras = merged
         cspecs = [s if presorted else s.canonical()[0] for s in specs]
         B = len(cspecs)
         Nmax = max(s.num_sources for s in cspecs)
@@ -87,8 +139,27 @@ class BatchedSystemSpec:
                 C[k, :m] = s.C
                 has_c[k] = True
             ns[k], ms[k] = n, m
+
+        ex: dict = {}
+        spec_keys = sorted({key for s in cspecs for key in (s.extras or {})})
+        for name in spec_keys:
+            missing = [k for k, s in enumerate(cspecs)
+                       if name not in (s.extras or {})]
+            if missing:
+                raise ValueError(
+                    f"spec extra {name!r} present on some specs but missing "
+                    f"on lanes {missing}; extras must be uniform across a "
+                    "batch")
+            ex[name] = np.asarray([s.extras[name] for s in cspecs],
+                                  dtype=np.float64)
+        for name, val in dict(extras or {}).items():
+            if name in ex:
+                raise ValueError(
+                    f"extra axis {name!r} supplied both per-spec and at "
+                    "batch level")
+            ex[name] = _as_extra_col(name, val, B)
         return cls(G=G, R=R, A=A, J=J, C=C, n_sources=ns, n_procs=ms,
-                   has_cost=has_c)
+                   has_cost=has_c, extras=ex or None)
 
     def _lane_has_cost(self, k: int) -> bool:
         if self.C is None:
@@ -98,10 +169,13 @@ class BatchedSystemSpec:
     def scenario(self, k: int) -> SystemSpec:
         """The k-th scenario as a scalar (already canonical) SystemSpec."""
         n, m = int(self.n_sources[k]), int(self.n_procs[k])
+        ex = ({name: float(col[k]) for name, col in self.extras.items()}
+              if self.extras else None)
         return SystemSpec(
             G=self.G[k, :n], R=self.R[k, :n], A=self.A[k, :m],
             J=float(self.J[k]),
             C=self.C[k, :m] if self._lane_has_cost(k) else None,
+            extras=ex,
         )
 
     def take(self, idx: np.ndarray, n_pad: Optional[int] = None,
@@ -134,4 +208,6 @@ class BatchedSystemSpec:
             C=None if self.C is None else _fit(self.C, m_pad, 0.0),
             n_sources=self.n_sources[idx], n_procs=self.n_procs[idx],
             has_cost=None if self.has_cost is None else self.has_cost[idx],
+            extras=None if self.extras is None else
+            {name: col[idx] for name, col in self.extras.items()},
         )

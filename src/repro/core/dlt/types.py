@@ -15,11 +15,27 @@ Multi-Source Multi-Processor Systems with Divisible Loads" (2019):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Mapping, Optional
 
 import numpy as np
 
 __all__ = ["SystemSpec", "Schedule", "InfeasibleError"]
+
+
+def _as_extras(extras) -> Optional[Mapping[str, float]]:
+    """Normalize a spec-extras mapping to {str: finite float} (or None)."""
+    if extras is None:
+        return None
+    out = {}
+    for name, val in dict(extras).items():
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"extras keys must be non-empty strings, "
+                             f"got {name!r}")
+        f = float(val)
+        if not np.isfinite(f):
+            raise ValueError(f"extras[{name!r}] must be finite, got {val!r}")
+        out[name] = f
+    return out or None
 
 
 class InfeasibleError(RuntimeError):
@@ -41,6 +57,13 @@ class SystemSpec:
     processors by ascending ``A`` (fastest compute first).  ``canonical()``
     returns a sorted copy plus the permutations used, so callers can keep
     their own node identities.
+
+    ``extras`` carries per-formulation scalar axes beyond the paper's
+    G/R/A/J/C — e.g. ``{"link_capacity": 0.4}`` for the resource-sharing
+    network model or ``{"installments": 3}`` for multi-installment
+    scheduling.  Keys are declared by each formulation's
+    ``capabilities.spec_axes``; unknown keys are carried through
+    untouched so specs survive round trips between formulations.
     """
 
     G: np.ndarray  # (N,)
@@ -48,11 +71,13 @@ class SystemSpec:
     A: np.ndarray  # (M,)
     J: float = 1.0
     C: Optional[np.ndarray] = None  # (M,) $ / unit time, optional
+    extras: Optional[Mapping[str, float]] = None
 
     def __post_init__(self):
         object.__setattr__(self, "G", _as_f64(self.G))
         object.__setattr__(self, "R", _as_f64(self.R))
         object.__setattr__(self, "A", _as_f64(self.A))
+        object.__setattr__(self, "extras", _as_extras(self.extras))
         if self.C is not None:
             object.__setattr__(self, "C", _as_f64(self.C))
         if self.G.shape != self.R.shape:
@@ -86,6 +111,7 @@ class SystemSpec:
             A=self.A[pperm],
             J=self.J,
             C=None if self.C is None else self.C[pperm],
+            extras=self.extras,
         )
         return spec, sperm, pperm
 
@@ -99,13 +125,15 @@ class SystemSpec:
             A=self.A[:m],
             J=self.J,
             C=None if self.C is None else self.C[:m],
+            extras=self.extras,
         )
 
     def subset_sources(self, n: int) -> "SystemSpec":
         if not (1 <= n <= self.num_sources):
             raise ValueError(f"n={n} out of range")
         return SystemSpec(
-            G=self.G[:n], R=self.R[:n], A=self.A, J=self.J, C=self.C
+            G=self.G[:n], R=self.R[:n], A=self.A, J=self.J, C=self.C,
+            extras=self.extras,
         )
 
 

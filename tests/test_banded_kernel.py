@@ -27,6 +27,7 @@ from repro.core.dlt.batched import (
 from repro.core.dlt.formulations import (
     BatchFields,
     Formulation,
+    FormulationCapabilities,
     get_formulation,
 )
 from repro.core.dlt.stacking import BatchedSystemSpec
@@ -178,6 +179,9 @@ class _NoStructureFormulation(Formulation):
     """A formulation that publishes no banded structure (base default)."""
 
     name = "test_no_structure"
+    capabilities = FormulationCapabilities(
+        supports_banded=False, supports_warm_transfer=False,
+        oracle_kind="classic", spec_axes=("n", "m"))
 
 
 def test_auto_falls_back_without_structure_banded_raises():
@@ -198,7 +202,7 @@ def test_auto_falls_back_without_structure_banded_raises():
     ok = (sol.status == 0) & (ref.status == 0)
     np.testing.assert_allclose(sol.finish_time[ok], ref.finish_time[ok],
                                rtol=REL_TOL)
-    with pytest.raises(ValueError, match="banded_structure"):
+    with pytest.raises(ValueError, match="supports_banded"):
         eng.configured(kernel="banded").solve_batch(specs, formulation=fm)
 
 

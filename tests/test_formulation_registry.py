@@ -1,0 +1,230 @@
+"""Registry v2 contract, parametrized over EVERY registered formulation.
+
+These tests are deliberately name-blind: they pull the registry listing
+and assert the properties the engine relies on — declared capabilities,
+shape agreement between the row builders and the column mask, pack/unpack
+round-tripping, and banded-claim honesty — so a newly registered
+formulation is covered the moment ``register()`` runs.  The duplicate /
+invalid registration errors are the API-redesign guardrails: a broken
+registration must fail at ``register()`` with a clear message, never
+deep inside the engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.dlt import DLTEngine, SystemSpec
+from repro.core.dlt.batched import build_family_lp
+from repro.core.dlt.formulations import (
+    Formulation,
+    FormulationCapabilities,
+    available_formulations,
+    default_batched_formulation,
+    get_formulation,
+    register,
+    register_formulation,
+)
+
+ALL_FORMULATIONS = available_formulations()
+
+
+# ---------------------------------------------------------------------------
+# registry surface + capabilities
+# ---------------------------------------------------------------------------
+
+def test_new_families_are_registered():
+    assert {"resource_sharing", "multi_installment"} <= set(ALL_FORMULATIONS)
+
+
+@pytest.mark.parametrize("name", ALL_FORMULATIONS)
+def test_capabilities_declared(name):
+    caps = get_formulation(name).capabilities
+    assert isinstance(caps, FormulationCapabilities)
+    assert caps.oracle_kind in ("classic", "self")
+    assert isinstance(caps.spec_axes, tuple) and "m" in caps.spec_axes
+    # warm transfer runs through the banded row maps
+    if caps.supports_warm_transfer:
+        assert caps.supports_banded
+    # required extras are exactly the non-(n, m) axes
+    assert caps.required_extras == tuple(
+        a for a in caps.spec_axes if a not in ("n", "m"))
+
+
+def test_default_batched_formulation_resolves_from_registry():
+    fe = default_batched_formulation(True)
+    nf = default_batched_formulation(False)
+    assert fe.frontend and not nf.frontend
+    assert fe.name in ALL_FORMULATIONS and nf.name in ALL_FORMULATIONS
+    assert fe is get_formulation(True)
+
+
+# ---------------------------------------------------------------------------
+# shape agreement: demo batch -> dims / mask / rows all line up
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_FORMULATIONS)
+def test_mask_and_row_builder_shapes_agree(name):
+    fm = get_formulation(name)
+    bs = fm.demo_batch(n=2, m=3, masked=True)
+    dims = fm.batch_dims(bs)
+    mask = fm.batch_column_mask(bs)
+    rows = fm.build_batch_rows(bs)
+    B = bs.batch
+    assert mask.shape == (B, dims.nv) and mask.dtype == bool
+    assert rows.A_ub.shape == (B, dims.n_ub, dims.nv)
+    assert rows.b_ub.shape == (B, dims.n_ub)
+    assert rows.A_eq.shape == (B, dims.n_eq, dims.nv)
+    assert rows.b_eq.shape == (B, dims.n_eq)
+    assert rows.eq_active.shape == (B, dims.n_eq)
+
+
+@pytest.mark.parametrize("name", ALL_FORMULATIONS)
+def test_group_key_is_a_tuple(name):
+    fm = get_formulation(name)
+    bs = fm.demo_batch(n=2, m=3, masked=True)
+    for k in range(bs.batch):
+        key = fm.group_key(bs, k)
+        assert isinstance(key, tuple)
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_FORMULATIONS)
+def test_pack_unpack_round_trip(name):
+    """``pack(unpack(x))`` re-unpacks to identical fields.
+
+    ``unpack -> pack`` is a projection onto the formulation's field
+    space: one cycle may normalize (drop padded-cell dust), but a second
+    cycle must be the identity on everything ``BatchFields`` carries —
+    including formulation extras like per-round splits.
+    """
+    fm = get_formulation(name)
+    bs = fm.demo_batch(n=2, m=3, masked=True)
+    dims = fm.batch_dims(bs)
+    rng = np.random.default_rng(5)
+    x = rng.uniform(0.1, 2.0, (bs.batch, dims.nv))
+    f1 = fm.unpack_batch(bs, fm.pack_batch(bs, fm.unpack_batch(bs, x)))
+    f2 = fm.unpack_batch(bs, fm.pack_batch(bs, f1))
+    np.testing.assert_allclose(f2.beta, f1.beta, atol=1e-12)
+    np.testing.assert_allclose(f2.finish, f1.finish, atol=1e-12)
+    for a, b in ((f1.TS, f2.TS), (f1.TF, f2.TF)):
+        assert (a is None) == (b is None)
+        if a is not None:
+            np.testing.assert_allclose(b, a, atol=1e-12)
+    assert (f1.extra is None) == (f2.extra is None)
+    if f1.extra is not None:
+        assert set(f1.extra) == set(f2.extra)
+        for k in f1.extra:
+            np.testing.assert_allclose(f2.extra[k], f1.extra[k], atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# capability-flag honesty
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_FORMULATIONS)
+def test_banded_claim_is_honest(name):
+    fm = get_formulation(name)
+    caps = fm.capabilities
+    if caps.supports_banded:
+        # the claim: a validated structure for every family shape
+        for (n, m) in [(1, 1), (2, 3), (3, 5), (2, 8)]:
+            struct = fm.banded_structure(n, m)
+            assert struct is not None
+            struct.validate(fm.family_dims(n, m))
+    else:
+        assert fm.banded_structure(2, 3) is None
+        # an explicit banded pin on a structureless formulation is an
+        # error naming the capability, not a silent downgrade
+        bs = fm.demo_batch(n=2, m=3, masked=True)
+        specs = [bs.scenario(k) for k in range(bs.batch)]
+        eng = DLTEngine(kernel="banded", verify=False, oracle_fallback=False)
+        with pytest.raises(ValueError, match="supports_banded"):
+            eng.solve_batch(specs, formulation=name)
+
+
+@pytest.mark.parametrize("name", ALL_FORMULATIONS)
+def test_demo_batch_feeds_the_family_builder(name):
+    """The lint sweep's entry point: demo specs carry the required
+    extras and the family LP builds at the declared dims."""
+    fm = get_formulation(name)
+    bs = fm.demo_batch(n=2, m=3, masked=True)
+    for extra in fm.capabilities.required_extras:
+        assert bs.extras is not None and extra in bs.extras
+    fam = build_family_lp(bs, fm)
+    assert fam.dims == fm.batch_dims(bs)
+
+
+# ---------------------------------------------------------------------------
+# register() validation errors
+# ---------------------------------------------------------------------------
+
+class _StubFormulation(Formulation):
+    name = "test_registry_stub"
+    capabilities = FormulationCapabilities(
+        supports_banded=False, supports_warm_transfer=False,
+        oracle_kind="classic", spec_axes=("n", "m"))
+
+
+def test_register_rejects_duplicates_and_junk():
+    with pytest.raises(TypeError, match="Formulation instance"):
+        register(object())
+    nameless = _StubFormulation()
+    nameless.name = ""
+    with pytest.raises(ValueError, match="non-empty name"):
+        register(nameless)
+    capless = _StubFormulation()
+    capless.name = "test_registry_capless"
+    capless.capabilities = None
+    with pytest.raises(ValueError, match="capabilities"):
+        register(capless)
+    wrongtype = _StubFormulation()
+    wrongtype.name = "test_registry_wrongtype"
+    wrongtype.capabilities = {"supports_banded": False}
+    with pytest.raises(TypeError, match="FormulationCapabilities"):
+        register(wrongtype)
+    # collision with an existing registration names the duplicate
+    dup = _StubFormulation()
+    dup.name = ALL_FORMULATIONS[0]
+    with pytest.raises(ValueError, match="collision"):
+        register(dup)
+    # replace=True (and the legacy alias) intentionally override
+    mine = _StubFormulation()
+    try:
+        assert register(mine) is mine
+        with pytest.raises(ValueError, match="replace=True"):
+            register(_StubFormulation())
+        assert register_formulation(_StubFormulation()) is not mine
+    finally:
+        from repro.core.dlt.formulations.base import _REGISTRY
+        _REGISTRY.pop(mine.name, None)
+
+
+def test_capabilities_record_validates_itself():
+    with pytest.raises(ValueError, match="oracle_kind"):
+        FormulationCapabilities(
+            supports_banded=False, supports_warm_transfer=False,
+            oracle_kind="psychic", spec_axes=("n", "m"))
+    with pytest.raises(ValueError, match="supports_banded"):
+        FormulationCapabilities(
+            supports_banded=False, supports_warm_transfer=True,
+            oracle_kind="classic", spec_axes=("n", "m"))
+
+
+# ---------------------------------------------------------------------------
+# family APIs validate axes up front
+# ---------------------------------------------------------------------------
+
+def test_sweep_and_grid_validate_declared_axes():
+    eng = DLTEngine(max_iter=30)
+    spec = SystemSpec(G=[0.2], R=[0.5], A=[1.0, 1.2, 0.9], J=12.0,
+                      extras={"installments": 2})
+    # multi_installment declares no 'n' axis: grid must refuse BEFORE
+    # building anything, naming the declared axes
+    with pytest.raises(ValueError, match="spec_axes"):
+        eng.grid(spec, (1,), (1, 2, 3), formulation="multi_installment")
+    # sweep varies 'm', which IS declared — no error
+    sw = eng.sweep(spec, formulation="multi_installment")
+    assert sw.m.size >= 1

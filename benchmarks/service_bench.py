@@ -24,6 +24,15 @@ solver:
   on its background thread, with a mid-run rate drift to exercise warm
   re-solves under load.  Reports p50/p99/p999 admission-to-decision
   latency and sustained decisions/sec.
+* **Concurrency (multi-fleet).**  1/2/4 ``FleetRouter`` loops over ONE
+  shared engine session at a fixed aggregate Poisson rate: per-window
+  decisions must stay bit-identical to one-shot routing under loop
+  contention, with zero failed decisions.  A closed-loop saturation leg
+  (per-fleet driver threads, no arrival gaps) measures aggregate peak
+  decisions/s scaling vs the single loop — >= 1.5x at 2 fleets on a
+  >= 4-core host, parity floor on the 1-core reference — and a final
+  leg prices ``shard_map`` dispatch inside a latency window
+  (``executor="sharded"`` SLO profile).
 
 Run:  PYTHONPATH=src python -m benchmarks.service_bench
       PYTHONPATH=src python -m benchmarks.service_bench --smoke
@@ -50,7 +59,8 @@ import numpy as np
 
 from repro.core.dlt import DLTEngine, SystemSpec, solve
 from repro.core.dlt.executors import LANE_MICROBATCH
-from repro.serve import RouterStats, RouterService, ServiceConfig
+from repro.serve import (FleetRouter, RouterStats, RouterService,
+                         ServiceConfig)
 from repro.serve.engine import route_requests_batch
 from .common import check, table
 
@@ -226,12 +236,201 @@ def run_slo(r, smoke, out):
         solve_seconds_total=s.solve_seconds_total)
 
 
+#: Per-fleet A_j scale factors for the concurrency phase: distinct rates
+#: per fleet (distinct LP data, same padded shape — every fleet shares
+#: ONE compiled executable through the session LRU).
+_FLEET_SCALES = (1.0, 1.25, 0.75, 1.5)
+
+
+def _fleets(nf: int) -> dict:
+    return {f"f{i}": RouterStats(
+        FLEET_G, FLEET_R, [a * _FLEET_SCALES[i] for a in FLEET_A])
+        for i in range(nf)}
+
+
+def _poisson_leg(router, names, rate, duration, rng):
+    """Fixed-aggregate Poisson arrivals round-robined over the fleets.
+
+    Arrival-bound by design — it measures bit-identity and tail latency
+    UNDER loop contention, not peak throughput (see ``_saturation_leg``
+    for the scaling metric).  Returns ``{fleet: [(count, future), ...]}``.
+    """
+    futs = {name: [] for name in names}
+    t_start = time.perf_counter()
+    with router:
+        t_next, k = 0.0, 0
+        while True:
+            t_next += float(rng.exponential(1.0 / rate))
+            if t_next >= duration:
+                break
+            delay = t_next - (time.perf_counter() - t_start)
+            if delay > 0:
+                time.sleep(delay)
+            name = names[k % len(names)]
+            n = int(rng.integers(1, 48))
+            futs[name].append((n, router.submit(name, n)))
+            k += 1
+    return futs, time.perf_counter() - t_start
+
+
+def _saturation_leg(router, names, duration, rng):
+    """Closed-loop peak throughput: one driver thread per fleet.
+
+    Each driver submits a full micro-batch window then solves it with a
+    synchronous ``step()`` (no daemon loop, no arrival gaps), so the
+    aggregate decisions/s is compute-bound — the number that can
+    actually scale past one loop when cores allow it.
+    """
+    counts = [0] * len(names)
+    barrier = threading.Barrier(len(names) + 1)
+
+    def drive(i, name):
+        svc = router.service(name)
+        lrng = np.random.default_rng(1000 + i)
+        barrier.wait()
+        t0 = time.perf_counter()
+        while time.perf_counter() - t0 < duration:
+            for _ in range(LANE_MICROBATCH):
+                svc.submit(int(lrng.integers(1, 48)))
+            counts[i] += svc.step()
+
+    threads = [threading.Thread(target=drive, args=(i, name))
+               for i, name in enumerate(names)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    router.flush()                       # resolve any tail admissions
+    return sum(counts) / elapsed
+
+
+def run_concurrency(r, smoke, out):
+    """1/2/4 fleets over one shared session: identity, p99, scaling."""
+    if smoke:
+        rate, duration, sat_duration, window_ms = 120.0, 1.2, 1.0, 10.0
+    else:
+        rate, duration, sat_duration, window_ms = 250.0, 4.0, 3.0, 5.0
+    cores = os.cpu_count() or 1
+    cfg = ServiceConfig(admit_window_ms=window_ms,
+                        max_window=LANE_MICROBATCH)
+    rows, per_nf = [], {}
+    bit_ok, failed_total = True, 0
+    for nf in (1, 2, 4):
+        rng = np.random.default_rng(11 + nf)
+        fleets = _fleets(nf)
+        router = FleetRouter(fleets, cfg, engine=ENGINE)
+        router.prewarm()
+        names = list(fleets)
+        # -- Poisson leg: fixed AGGREGATE arrival rate split over fleets
+        futs, t_total = _poisson_leg(router, names, rate, duration, rng)
+        decs = [f.result(timeout=60) for per in futs.values()
+                for _, f in per]
+        lat_ms = np.asarray([d.latency_seconds for d in decs]) * 1e3
+        p99 = float(np.quantile(lat_ms, 0.99)) if len(decs) else float("nan")
+        agg = router.aggregate_stats()
+        failed_total += int(agg["failed_decisions"])
+        # -- bit-identity vs each fleet's one-shot baseline, under the
+        #    contention the sibling loops just produced
+        for name in names:
+            oneshot = {n: route_requests_batch(
+                fleets[name], [n], engine=ENGINE)[0]
+                for n in sorted({n for n, _ in futs[name]})}
+            for n, f in futs[name]:
+                d = f.result(timeout=60)
+                if not (np.array_equal(d.shares, oneshot[n]["shares"])
+                        and d.makespan == oneshot[n]["makespan"]):
+                    bit_ok = False
+        # -- saturation leg: closed-loop peak decisions/s (the scaling
+        #    metric; the Poisson leg is arrival-bound by construction)
+        sat_router = FleetRouter(fleets, cfg, engine=ENGINE)
+        sat_dps = _saturation_leg(sat_router, names, sat_duration, rng)
+        per_nf[str(nf)] = dict(
+            decisions=len(decs), p99_ms=p99,
+            poisson_dps=len(decs) / t_total, saturated_dps=sat_dps,
+            windows=int(agg["windows"]),
+            failed=int(agg["failed_decisions"]))
+        rows.append([nf, len(decs), int(agg["windows"]),
+                     round(p99, 2), round(len(decs) / t_total, 1),
+                     round(sat_dps, 1)])
+    table(["fleets", "decisions", "windows", "p99 ms", "poisson dec/s",
+           "saturated dec/s"], rows, fmt="{:>15}")
+
+    scaling2 = per_nf["2"]["saturated_dps"] / per_nf["1"]["saturated_dps"]
+    scaling4 = per_nf["4"]["saturated_dps"] / per_nf["1"]["saturated_dps"]
+    r.check("per-window decisions bit-identical to one-shot under "
+            "multi-fleet contention", bool(bit_ok), True, rtol=0)
+    r.check("zero failed decisions across all fleet counts",
+            bool(failed_total == 0), True, rtol=0)
+    if cores >= 4:
+        r.check("2-fleet aggregate decisions/s >= 1.5x single loop "
+                f"({cores} cores)", bool(scaling2 >= 1.5), True, rtol=0)
+    else:
+        # 1-core reference topology: concurrency cannot add throughput,
+        # it must only not destroy it (parity floor, not a speedup claim)
+        r.check(f"2-fleet aggregate decisions/s parity on {cores} core(s) "
+                "(>= 0.75x single loop)", bool(scaling2 >= 0.75), True,
+                rtol=0)
+    r.note("aggregate saturated scaling",
+           f"2 fleets {scaling2:.2f}x / 4 fleets {scaling4:.2f}x vs one "
+           f"loop ({cores} cores)")
+
+    # -- sharded-executor SLO leg: price shard_map dispatch in-window
+    sh_eng = ENGINE.configured(executor="sharded")
+    sh_svc = RouterService(_fleet(), cfg, engine=sh_eng)
+    sh_svc.prewarm()
+    sh_rng = np.random.default_rng(23)
+    sh_futs, sh_total = _poisson_leg(
+        _SingleFleet(sh_svc), ["f0"],
+        rate if not smoke else 60.0, duration, sh_rng)
+    sh_decs = [f.result(timeout=60) for _, f in sh_futs["f0"]]
+    sh_lat = np.asarray([d.latency_seconds for d in sh_decs]) * 1e3
+    sh_p99 = (float(np.quantile(sh_lat, 0.99))
+              if len(sh_decs) else float("nan"))
+    sh_stats = sh_svc.stats
+    r.check("sharded-executor SLO leg: zero failed decisions",
+            bool(sh_stats.failed_decisions == 0), True, rtol=0)
+    r.note("sharded SLO", f"p99 {sh_p99:.2f} ms over {len(sh_decs)} "
+           f"decisions ({sh_eng._resolve_executor().device_count()} "
+           "device(s))")
+    out["concurrency"] = dict(
+        fleets=per_nf, bit_identical=bool(bit_ok), failed=failed_total,
+        scaling_2f=float(scaling2), scaling_4f=float(scaling4),
+        cpu_count=cores,
+        cache=dict((k, ENGINE.compile_cache_info()[k])
+                   for k in ("hits", "misses", "lookups", "contention")),
+        sharded_slo=dict(
+            decisions=len(sh_decs), p99_ms=sh_p99,
+            decisions_per_s=len(sh_decs) / sh_total,
+            failed=int(sh_stats.failed_decisions)))
+
+
+class _SingleFleet:
+    """Adapter: drive one ``RouterService`` through the fleet-leg helpers."""
+
+    def __init__(self, svc):
+        self._svc = svc
+
+    def submit(self, name, n):
+        return self._svc.submit(n)
+
+    def __enter__(self):
+        self._svc.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._svc.stop()
+
+
 def run(smoke=False):
     r = check("service_bench")
     out = {}
     run_identity(r, out)
     run_drift(r, out)
     run_slo(r, smoke, out)
+    run_concurrency(r, smoke, out)
 
     bench_out = os.environ.get("BENCH_OUT")
     if bench_out:

@@ -29,7 +29,15 @@ committed ``BENCH_baseline.json`` and fails on:
   decision under the Poisson load, or — topology permitting — its p99
   admission-to-decision latency / sustained decisions/sec regressing
   past the baseline (p99 gets double the throughput tolerance: thread
-  scheduling is noisier than the solver).
+  scheduling is noisier than the solver),
+* the multi-fleet ``concurrency`` section losing bit-identity under
+  loop contention, failing any decision (including the sharded-executor
+  SLO leg), or — once a baseline carrying the section lands, with
+  matching topology and profile — its 2-fleet aggregate decisions/s
+  scaling or multi-fleet p99 regressing past the baseline.  Per the
+  new-section convention the identity/zero-failed gates arm
+  immediately; the scaling/latency floors stay skipped until the
+  section is baselined.
 
 Raw scenarios/sec are machine-dependent (laptop vs CI runner vs core
 count), so throughput comparisons are **machine-normalized**: each
@@ -286,6 +294,78 @@ def compare(cur: dict, base: dict, rtol: float) -> Gate:
                 f"{slo.get('decisions_per_s', 0):.1f} vs baseline "
                 f"{bslo['decisions_per_s']:.1f} (floor {floor:.1f}; "
                 "arrival-rate bound, not machine-normalized)")
+
+        conc = s.get("concurrency")
+        if conc is None:
+            gate.skip("service concurrency", "no concurrency section in "
+                      "current run (old service_bench JSON)")
+        else:
+            gate.check(
+                "concurrency: bit-identical under multi-fleet contention",
+                bool(conc.get("bit_identical")),
+                f"{len(conc.get('fleets') or {})} fleet counts, "
+                f"{conc.get('failed')} failed")
+            gate.check(
+                "concurrency: zero failed decisions (all fleet counts)",
+                conc.get("failed", 1) == 0,
+                f"{conc.get('failed')} failed decision(s)")
+            sh = conc.get("sharded_slo") or {}
+            gate.check(
+                "concurrency: sharded SLO leg zero failed decisions",
+                sh.get("failed", 1) == 0,
+                f"{sh.get('failed')} failed of {sh.get('decisions')} "
+                "decision(s)")
+            cache = conc.get("cache") or {}
+            if cache:
+                gate.check(
+                    "concurrency: compile-cache counters consistent",
+                    cache.get("hits", 0) + cache.get("misses", 0)
+                    == cache.get("lookups", -1),
+                    f"hits {cache.get('hits')} + misses "
+                    f"{cache.get('misses')} == lookups "
+                    f"{cache.get('lookups')} "
+                    f"(contention {cache.get('contention')})")
+            bconc = (bs or {}).get("concurrency") or {}
+            if not bconc:
+                # PR-9 new-section convention: identity/zero-failed gates
+                # arm immediately; scaling + latency floors wait for a
+                # baseline that carries the section
+                gate.skip("concurrency floors", "new section: "
+                          "identity-gated, scaling/latency floors skipped "
+                          "until baselined")
+            elif not topo_ok:
+                gate.skip("concurrency floors", "topology mismatch — "
+                          "scaling and p99 floors skipped")
+            elif bool(cur.get("smoke")) != bool(base.get("smoke")):
+                gate.skip("concurrency floors", "smoke/full mismatch — "
+                          "the load profile differs, floors skipped")
+            else:
+                # scaling is a ratio (2-fleet/1-fleet on the SAME host)
+                # so it compares across runs without machine norm; the
+                # absolute >= 1.5x multi-core claim is self-checked by
+                # the bench run itself
+                s2 = conc.get("scaling_2f", 0.0)
+                gate.check(
+                    "concurrency: 2-fleet aggregate scaling vs baseline",
+                    s2 >= bconc["scaling_2f"] * (1.0 - rtol),
+                    f"{s2:.2f}x vs baseline {bconc['scaling_2f']:.2f}x")
+                cur2 = (conc.get("fleets") or {}).get("2") or {}
+                base2 = (bconc.get("fleets") or {}).get("2") or {}
+                if base2.get("p99_ms"):
+                    ceil = base2["p99_ms"] * (1.0 + 2.0 * rtol)
+                    gate.check(
+                        "concurrency: 2-fleet p99 latency",
+                        cur2.get("p99_ms", float("inf")) <= ceil,
+                        f"{cur2.get('p99_ms', 0):.2f} ms vs baseline "
+                        f"{base2['p99_ms']:.2f} ms (ceiling {ceil:.2f} ms)")
+                bsh = bconc.get("sharded_slo") or {}
+                if bsh.get("p99_ms"):
+                    ceil = bsh["p99_ms"] * (1.0 + 2.0 * rtol)
+                    gate.check(
+                        "concurrency: sharded SLO p99 latency",
+                        sh.get("p99_ms", float("inf")) <= ceil,
+                        f"{sh.get('p99_ms', 0):.2f} ms vs baseline "
+                        f"{bsh['p99_ms']:.2f} ms (ceiling {ceil:.2f} ms)")
 
     w, bw = cur.get("warm"), base.get("warm")
     if not w:

@@ -37,10 +37,12 @@ share one compiled-shape cache.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import json
 import os
+import threading
 from typing import Iterable, Iterator, Optional, Sequence, Tuple, Union
 
 import functools
@@ -402,6 +404,10 @@ class EngineStats:
     fallback_lanes: int = 0     # lanes re-solved by the simplex oracle
     cache_hits: int = 0         # compiled-executable LRU hits
     cache_misses: int = 0       # compiled-executable LRU misses (compiles)
+    cache_lookups: int = 0      # compiled-executable LRU lookups
+                                # (invariant: hits + misses == lookups)
+    cache_contention: int = 0   # lookups that blocked on a peer thread's
+                                # in-flight compile of the same shape
     refine_iterations: int = 0  # fp64-residual refinement corrections
                                 # spent by mixed-precision solves
     precision_fallback_lanes: int = 0  # mixed lanes re-solved with the
@@ -415,25 +421,90 @@ class EngineStats:
         return self.cold_iterations + self.warm_iterations
 
 
+class _CompileLatch:
+    """One in-flight compile of one cache key.
+
+    The owning thread compiles, publishes the executable (or the
+    exception) here, then sets ``done``; peer threads that need the
+    SAME key block on this event only — lookups of other keys never
+    wait behind a compile.
+    """
+
+    __slots__ = ("done", "exe", "exc")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.exe = None
+        self.exc: Optional[BaseException] = None
+
+
+#: Stripe count for the in-flight compile-latch table.  Only the latch
+#: bookkeeping is striped — the ready-executable LRU stays behind one
+#: (cheap, never held during a compile) lock so eviction order is the
+#: exact global LRU the cache-size contract promises.
+_LATCH_STRIPES = 8
+
+
 class _EngineState:
-    """Mutable session state shared by an engine and its configured() views."""
+    """Mutable session state shared by an engine and its configured() views.
+
+    All of it is lock-protected: ``lru_lock`` guards the compiled-
+    executable OrderedDict (held only for dict ops, never during a
+    compile), each stripe lock guards one shard of the in-flight latch
+    table, and ``counter_lock`` guards the stats ledger.  ``scopes``
+    carries per-thread counter-scope stacks (see
+    :meth:`DLTEngine.counter_scope`).
+    """
 
     def __init__(self):
         from collections import OrderedDict
 
         self.compiled: "OrderedDict[tuple, object]" = OrderedDict()
+        self.lru_lock = threading.Lock()
+        self.stripe_locks = tuple(
+            threading.Lock() for _ in range(_LATCH_STRIPES))
+        self.inflight: Tuple[dict, ...] = tuple(
+            {} for _ in range(_LATCH_STRIPES))
+        self.counter_lock = threading.Lock()
+        self.scopes = threading.local()
         self.counters = dict(
             batches=0, lanes=0, cold_lanes=0, warm_lanes=0,
             cold_iterations=0, warm_iterations=0, banded_lanes=0,
             pallas_lanes=0, kernel_fallbacks=0,
             resolve_lanes=0, fallback_lanes=0,
             cache_hits=0, cache_misses=0,
+            cache_lookups=0, cache_contention=0,
             refine_iterations=0, precision_fallback_lanes=0,
             transfer_lanes=0)
 
     def bump(self, **by):
-        for k, v in by.items():
-            self.counters[k] += int(v)
+        with self.counter_lock:
+            for k, v in by.items():
+                self.counters[k] += int(v)
+        stack = getattr(self.scopes, "stack", None)
+        if stack:
+            for scope in stack:
+                for k, v in by.items():
+                    scope[k] += int(v)
+
+    def stripe_of(self, key: tuple) -> int:
+        return hash(key) % _LATCH_STRIPES
+
+    def cache_get(self, key: tuple):
+        """LRU lookup (refreshes recency); ``None`` when absent."""
+        with self.lru_lock:
+            exe = self.compiled.get(key)
+            if exe is not None:
+                self.compiled.move_to_end(key)
+            return exe
+
+    def cache_put(self, key: tuple, exe, maxsize: int) -> None:
+        """Publish a compiled executable, evicting in exact LRU order."""
+        with self.lru_lock:
+            self.compiled[key] = exe
+            self.compiled.move_to_end(key)
+            while len(self.compiled) > maxsize:
+                self.compiled.popitem(last=False)
 
 
 def _enable_persistent_cache(cache_dir: str) -> None:
@@ -517,6 +588,30 @@ class DLTEngine:
     ``configured()`` view), counts hits/misses/fallbacks/iterations in
     ``stats``, and — with ``compile_cache_dir`` set — persists compiled
     executables across processes via the JAX compilation cache.
+
+    **Concurrency model.**  A session (and its ``configured()`` views)
+    may be driven from many threads at once.  The solve path mutates no
+    global state — the audit, per layer:
+
+    - configs (``EngineConfig``), specs, formulation capabilities and
+      compile keys are frozen dataclasses / plain tuples; each call
+      allocates its own batch arrays and carries;
+    - ``jax.experimental.enable_x64`` (the dtype scope every solve
+      chunk runs under) is thread-local in jax, so concurrent fp32 /
+      fp64 sessions do not leak into each other;
+    - module-level caches on the path (`formulations`/`executors`
+      registries, autotune tables) are populated at import time or via
+      ``functools.lru_cache`` — both safe to read concurrently;
+    - the only shared MUTABLE state is this session's compiled-shape
+      LRU and its stats ledger, both lock-protected: a missing shape is
+      compiled by exactly one thread while peers block on that entry's
+      latch (never the whole cache — see :meth:`compile_cache_info`'s
+      ``contention`` counter), and counter bumps take a lock plus
+      thread-local :meth:`counter_scope` deltas.
+
+    Because compiled executables are pure functions of their key and
+    every window pads onto the same micro-batch ladder, results are
+    bit-identical no matter which thread (or how many) ran the solve.
     """
 
     def __init__(self, config: Optional[EngineConfig] = None, **overrides):
@@ -527,6 +622,7 @@ class DLTEngine:
         self.config = config
         self._state = _EngineState()
         self._executor: Optional[Executor] = None
+        self._exec_lock = threading.Lock()
         if config.compile_cache_dir is not None:
             _enable_persistent_cache(config.compile_cache_dir)
 
@@ -545,6 +641,7 @@ class DLTEngine:
         eng.config = self.config.replace(**overrides)
         eng._state = self._state
         eng._executor = None
+        eng._exec_lock = threading.Lock()
         if (eng.config.compile_cache_dir is not None
                 and eng.config.compile_cache_dir != self.config.compile_cache_dir):
             _enable_persistent_cache(eng.config.compile_cache_dir)
@@ -578,22 +675,65 @@ class DLTEngine:
 
     @property
     def stats(self) -> EngineStats:
-        return EngineStats(**self._state.counters)
+        with self._state.counter_lock:
+            return EngineStats(**self._state.counters)
 
     def reset_stats(self) -> None:
         """Zero the counters (the compiled cache is kept)."""
-        for k in self._state.counters:
-            self._state.counters[k] = 0
+        with self._state.counter_lock:
+            for k in self._state.counters:
+                self._state.counters[k] = 0
+
+    @contextlib.contextmanager
+    def counter_scope(self):
+        """Counter deltas made by THIS thread while the scope is open.
+
+        Yields a dict (every counter name, starting at zero) that
+        accumulates each ``bump`` the calling thread performs inside
+        the ``with`` block.  Unlike before/after :attr:`stats`
+        snapshots, the deltas are unpolluted by concurrent solves on
+        other threads sharing this session — the race-free way for a
+        service loop to attribute compiles/fallbacks to its own window.
+        Scopes nest (each open scope on this thread sees the bump).
+        """
+        st = self._state
+        scope = {k: 0 for k in st.counters}
+        stack = getattr(st.scopes, "stack", None)
+        if stack is None:
+            stack = st.scopes.stack = []
+        stack.append(scope)
+        try:
+            yield scope
+        finally:
+            stack.remove(scope)
 
     def compile_cache_info(self) -> dict:
-        """Compiled-family cache state: LRU shapes + hit/miss/persist."""
+        """Compiled-family cache state: LRU shapes + hit/miss/persist.
+
+        ``lookups`` / ``contention`` expose the concurrency counters
+        (``hits + misses == lookups``; ``contention`` is lookups that
+        blocked on a peer thread's in-flight compile); ``in_flight`` is
+        the number of compiles currently owned by some thread and
+        ``stripes`` the latch-table stripe count.
+        """
         cfg, st = self.config, self._state
+        with st.lru_lock:
+            size, keys = len(st.compiled), list(st.compiled)
+        with st.counter_lock:
+            hits = st.counters["cache_hits"]
+            misses = st.counters["cache_misses"]
+            lookups = st.counters["cache_lookups"]
+            contention = st.counters["cache_contention"]
         info = {
-            "size": len(st.compiled),
+            "size": size,
             "maxsize": cfg.compile_cache_size,
-            "keys": list(st.compiled),
-            "hits": st.counters["cache_hits"],
-            "misses": st.counters["cache_misses"],
+            "keys": keys,
+            "hits": hits,
+            "misses": misses,
+            "lookups": lookups,
+            "contention": contention,
+            "in_flight": sum(len(t) for t in st.inflight),
+            "stripes": len(st.stripe_locks),
             "persist_dir": cfg.compile_cache_dir,
             "persist_entries": None,
         }
@@ -607,8 +747,10 @@ class DLTEngine:
     def _resolve_executor(self) -> Executor:
         """The config's executor, instantiated once per engine view."""
         if self._executor is None:
-            self._executor = resolve_executor(self.config.executor,
-                                              self.config.devices)
+            with self._exec_lock:
+                if self._executor is None:
+                    self._executor = resolve_executor(self.config.executor,
+                                                      self.config.devices)
         return self._executor
 
     def _precision_policy(self) -> str:
@@ -710,23 +852,60 @@ class DLTEngine:
         ``jit(vmap)`` locally, ``shard_map`` over the lane mesh when
         sharded); the LRU key carries the executor's ``cache_token`` so
         views with different placement never share an executable.
+
+        Concurrency contract: exactly ONE thread compiles a missing
+        shape.  Peers needing the same key block on that entry's latch
+        (counted in ``cache_contention``) and take the published
+        executable as a hit; lookups of other keys proceed without
+        waiting.  Every call counts one ``cache_lookups`` and exactly
+        one of ``cache_hits`` / ``cache_misses``, so
+        ``hits + misses == lookups`` holds under any interleaving.
         """
         cfg, st = self.config, self._state
         executor = self._resolve_executor()
         key = self._cache_key(plan, B, warm, max_iter,
                               executor.cache_token())
-        exe = st.compiled.get(key)
+        st.bump(cache_lookups=1)
+        exe = st.cache_get(key)
         if exe is not None:
-            st.compiled.move_to_end(key)
             st.bump(cache_hits=1)
             return exe
+        stripe = st.stripe_locks[st.stripe_of(key)]
+        table = st.inflight[st.stripe_of(key)]
+        with stripe:
+            # Re-check under the stripe lock: a peer may have published
+            # between the LRU miss above and here (check-then-act race).
+            exe = st.cache_get(key)
+            if exe is not None:
+                st.bump(cache_hits=1)
+                return exe
+            latch = table.get(key)
+            owner = latch is None
+            if owner:
+                latch = table[key] = _CompileLatch()
+        if not owner:
+            latch.done.wait()
+            if latch.exc is not None:
+                st.bump(cache_misses=1, cache_contention=1)
+                raise latch.exc
+            st.bump(cache_hits=1, cache_contention=1)
+            return latch.exe
         st.bump(cache_misses=1)
-        fn, in_axes, args = self._kernel_signature(plan, B, warm, max_iter)
-        exe = executor.compile(fn, in_axes, args)
-        st.compiled[key] = exe
-        while len(st.compiled) > cfg.compile_cache_size:
-            st.compiled.popitem(last=False)
-        return exe
+        try:
+            fn, in_axes, args = self._kernel_signature(plan, B, warm,
+                                                       max_iter)
+            exe = executor.compile(fn, in_axes, args)
+        except BaseException as e:
+            latch.exc = e
+            raise
+        else:
+            latch.exe = exe
+            st.cache_put(key, exe, cfg.compile_cache_size)
+            return exe
+        finally:
+            with stripe:
+                table.pop(key, None)
+            latch.done.set()
 
     def _cache_key(self, plan: _KernelPlan, B: int, warm: bool,
                    max_iter: int, etok: Tuple) -> Tuple:
@@ -1660,16 +1839,19 @@ class DLTEngine:
 
 
 _DEFAULT_ENGINE: Optional[DLTEngine] = None
+_DEFAULT_ENGINE_LOCK = threading.Lock()
 
 
 def get_default_engine() -> DLTEngine:
     """The process-wide default session the free-function shims run on.
 
-    Created lazily with a default :class:`EngineConfig`; shims apply
-    their keyword knobs through :meth:`DLTEngine.configured`, so every
-    call still shares one compiled-shape cache and stats ledger.
+    Created lazily (thread-safely) with a default :class:`EngineConfig`;
+    shims apply their keyword knobs through :meth:`DLTEngine.configured`,
+    so every call still shares one compiled-shape cache and stats ledger.
     """
     global _DEFAULT_ENGINE
     if _DEFAULT_ENGINE is None:
-        _DEFAULT_ENGINE = DLTEngine()
+        with _DEFAULT_ENGINE_LOCK:
+            if _DEFAULT_ENGINE is None:
+                _DEFAULT_ENGINE = DLTEngine()
     return _DEFAULT_ENGINE

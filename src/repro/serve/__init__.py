@@ -1,9 +1,10 @@
 from .engine import (ServeEngine, Request, RouterStats, route_requests,
                      route_requests_batch)
 from .sampler import greedy, temperature_sample
-from .service import (RouteDecision, RouterService, ServiceConfig,
-                      ServiceStats)
+from .service import (FleetRouter, RateObserver, RouteDecision,
+                      RouterService, ServiceConfig, ServiceStats)
 
 __all__ = ["ServeEngine", "Request", "RouterStats", "route_requests",
-           "route_requests_batch", "RouteDecision", "RouterService",
-           "ServiceConfig", "ServiceStats", "greedy", "temperature_sample"]
+           "route_requests_batch", "FleetRouter", "RateObserver",
+           "RouteDecision", "RouterService", "ServiceConfig",
+           "ServiceStats", "greedy", "temperature_sample"]

@@ -15,7 +15,8 @@ Two layers:
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,15 +40,25 @@ class Request:
 
 
 class ServeEngine:
-    """One replica: batched prefill + decode against a slotted KV cache."""
+    """One replica: batched prefill + decode against a slotted KV cache.
+
+    With ``observer`` set (a ``RateObserver`` from
+    ``RouterService.rate_observer()``), every ``generate`` call stamps
+    its measured wall time into the observer as this ``replica``'s
+    seconds/request sample — the automatic feed for drift-triggered
+    re-solves.  Without one, timings are simply not recorded.
+    """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int,
-                 max_seq: int):
+                 max_seq: int, *, observer: Optional[object] = None,
+                 replica: int = 0):
         self.cfg = cfg
         self.model = LM(cfg)
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
+        self.observer = observer
+        self.replica = int(replica)
         self._decode = jax.jit(self.model.decode_step)
 
     def generate(self, requests: Sequence[Request], sampler=greedy,
@@ -55,6 +66,7 @@ class ServeEngine:
         """Decode a batch of requests (padded to the engine batch)."""
         if len(requests) == 0:
             return []
+        t_start = time.perf_counter()
         if len(requests) > self.max_batch:
             raise ValueError(
                 f"batch of {len(requests)} requests exceeds the engine's "
@@ -84,6 +96,9 @@ class ServeEngine:
             nxt = sampler(logits[:, -1, :], key)
             tok = nxt[:, None]
             pos += 1
+        if self.observer is not None:
+            self.observer.record(self.replica, B,
+                                 time.perf_counter() - t_start)
         return [outs[i, : requests[i].max_new_tokens] for i in range(B)]
 
 

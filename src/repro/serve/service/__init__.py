@@ -2,11 +2,16 @@
 
 See :mod:`repro.serve.service.service` for the subsystem overview:
 ``RouterService`` (async admission queue + deadline batching + drift
-re-solves), ``ServiceConfig`` (the knobs), and the supporting
-``AdmissionQueue`` / ``DriftTracker`` / ``ServiceStats`` primitives.
+re-solves), ``ServiceConfig`` (the knobs), ``FleetRouter`` (N
+concurrent per-fleet loops over one shared engine session),
+``RateObserver`` (auto-observed replica rates from ``generate``
+timings), and the supporting ``AdmissionQueue`` / ``DriftTracker`` /
+``ServiceStats`` primitives.
 """
 
 from .drift import DriftTracker
+from .fleet import FleetRouter
+from .observer import RateObserver
 from .queue import AdmissionQueue
 from .service import RouteDecision, RouterService, ServiceConfig
 from .stats import ServiceStats, ServiceStatsSnapshot
@@ -14,6 +19,8 @@ from .stats import ServiceStats, ServiceStatsSnapshot
 __all__ = [
     "AdmissionQueue",
     "DriftTracker",
+    "FleetRouter",
+    "RateObserver",
     "RouteDecision",
     "RouterService",
     "ServiceConfig",

@@ -11,6 +11,7 @@ solved against — the trigger for a warm-seeded re-solve.
 
 from __future__ import annotations
 
+import threading
 from typing import Optional, Sequence
 
 import numpy as np
@@ -19,43 +20,66 @@ __all__ = ["DriftTracker"]
 
 
 class DriftTracker:
-    """Per-replica EWMA of measured seconds/request."""
+    """Per-replica EWMA of measured seconds/request.
+
+    Cold-start contract: the EWMA seeds from the FIRST observation, not
+    from the configured (solved-against) rates.  Seeding from the
+    config would bias a cold start toward the possibly stale baseline —
+    with a genuinely different measured rate, ``1 - (1-alpha)^k``
+    windows pass before the smoothed value crosses ``drift_threshold``,
+    so the very drift the tracker exists to catch is the one it reacts
+    slowest to.  With first-observation seeding a single honest
+    measurement far from the baseline is already ``relative_drift`` > 0
+    at full magnitude (locked in by a regression test).
+
+    Thread-safe: replica serving threads may ``observe`` concurrently
+    (the :class:`~repro.serve.service.observer.RateObserver` push path).
+    """
 
     def __init__(self, alpha: float):
         if not (0.0 < alpha <= 1.0):
             raise ValueError(f"ewma_alpha must be in (0, 1], got {alpha}")
         self.alpha = float(alpha)
+        self._lock = threading.Lock()
         self._ewma: Optional[np.ndarray] = None
         self.observations = 0
 
     @property
     def ewma(self) -> Optional[np.ndarray]:
         """Current smoothed A_j estimate (None before any observation)."""
-        return None if self._ewma is None else self._ewma.copy()
+        with self._lock:
+            return None if self._ewma is None else self._ewma.copy()
 
     def observe(self, replica_seconds_per_request: Sequence[float]) -> None:
-        """Fold one measurement vector into the moving average."""
+        """Fold one measurement vector into the moving average.
+
+        The first observation becomes the EWMA as-is (see the class
+        docstring); later ones blend in with weight ``alpha``.
+        """
         a = np.asarray(replica_seconds_per_request, np.float64)
         if a.ndim != 1 or not np.all(np.isfinite(a)) or np.any(a <= 0):
             raise ValueError(
                 "observed replica_seconds_per_request must be a 1-D vector "
                 f"of strictly positive finite values, got {a}")
-        if self._ewma is None:
-            self._ewma = a.copy()
-        else:
-            if a.shape != self._ewma.shape:
-                raise ValueError(
-                    f"observation has {a.size} replicas but the tracker "
-                    f"was started with {self._ewma.size}")
-            self._ewma = self.alpha * a + (1.0 - self.alpha) * self._ewma
-        self.observations += 1
+        with self._lock:
+            if self._ewma is None:
+                self._ewma = a.copy()
+            else:
+                if a.shape != self._ewma.shape:
+                    raise ValueError(
+                        f"observation has {a.size} replicas but the tracker "
+                        f"was started with {self._ewma.size}")
+                self._ewma = self.alpha * a + (1.0 - self.alpha) * self._ewma
+            self.observations += 1
 
     def relative_drift(self, baseline: Sequence[float]) -> float:
         """max_j |ewma_j - baseline_j| / baseline_j (0.0 if no data)."""
-        if self._ewma is None:
-            return 0.0
-        b = np.asarray(baseline, np.float64)
-        return float(np.max(np.abs(self._ewma - b) / b))
+        with self._lock:
+            ewma = self._ewma
+            if ewma is None:
+                return 0.0
+            b = np.asarray(baseline, np.float64)
+            return float(np.max(np.abs(ewma - b) / b))
 
     def drifted(self, baseline: Sequence[float], threshold: float) -> bool:
         return self.relative_drift(baseline) > threshold

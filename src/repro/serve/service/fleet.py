@@ -1,0 +1,174 @@
+"""N concurrent routing fleets over one shared DLT engine session.
+
+The paper's multi-source analysis is about many independent load
+sources sharing one processing fabric; ``RouterService`` (PR 8) gave
+each source an always-on admission loop, but only ever ONE loop per
+process.  ``FleetRouter`` runs one ``RouterService`` per fleet — each
+with its own admission queue, deadline-window daemon thread, drift
+tracker and stats ledger — all solving through one shared ``DLTEngine``
+session, so the fleets amortize a single compile LRU (the engine's
+striped compile latches make a missing shape a one-compile event no
+matter how many loops race for it) and one stats ledger.
+
+Determinism carries over: every fleet's windows pad onto the same
+micro-batch ladder and compiled executables are pure functions of
+their cache key, so each fleet's decisions stay bit-identical to
+one-shot ``route_requests`` no matter how many sibling loops run
+concurrently — the property the bench's ``concurrency`` phase asserts.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Mapping, Optional, Union
+
+from repro.core.dlt import get_default_engine
+
+from ..engine import RouterStats
+from .observer import RateObserver
+from .service import RouterService, ServiceConfig
+
+__all__ = ["FleetRouter"]
+
+FleetSpec = Union[RouterStats, tuple]
+
+
+class FleetRouter:
+    """Per-fleet admission loops sharing one engine session.
+
+    Args:
+        fleets: mapping of fleet name -> ``RouterStats`` (that fleet's
+            replica/frontend rates), or name -> ``(RouterStats,
+            ServiceConfig)`` to override the shared config per fleet.
+        config: default ``ServiceConfig`` for fleets without their own.
+        engine: the shared ``DLTEngine`` session (default: the
+            process-wide default engine).  Every fleet solves through
+            it concurrently — safe because engine sessions are
+            thread-safe (see the ``DLTEngine`` concurrency model).
+    """
+
+    def __init__(self, fleets: Mapping[str, FleetSpec],
+                 config: Optional[ServiceConfig] = None, *, engine=None):
+        if not fleets:
+            raise ValueError("FleetRouter needs at least one fleet")
+        self._engine = engine if engine is not None else get_default_engine()
+        self._config = config if config is not None else ServiceConfig()
+        self._services: Dict[str, RouterService] = {}
+        for name, spec in fleets.items():
+            if isinstance(spec, tuple):
+                stats, cfg = spec
+            else:
+                stats, cfg = spec, self._config
+            self._services[str(name)] = RouterService(
+                stats, cfg, engine=self._engine)
+        self._mu = threading.Lock()
+        self._started = False
+
+    # -- per-fleet access ---------------------------------------------------
+
+    @property
+    def names(self) -> tuple:
+        return tuple(self._services)
+
+    @property
+    def engine(self):
+        return self._engine
+
+    def service(self, fleet: str) -> RouterService:
+        """The named fleet's ``RouterService`` (KeyError names fleets)."""
+        try:
+            return self._services[fleet]
+        except KeyError:
+            raise KeyError(
+                f"unknown fleet {fleet!r}: have {list(self._services)}"
+            ) from None
+
+    def submit(self, fleet: str, num_requests: int):
+        """Enqueue a route query on one fleet; returns its future."""
+        return self.service(fleet).submit(num_requests)
+
+    def observe(self, fleet: str, replica_seconds_per_request) -> None:
+        """Manual drift observation for one fleet (the override path)."""
+        self.service(fleet).observe(replica_seconds_per_request)
+
+    def rate_observer(self, fleet: str, **kw) -> RateObserver:
+        """A ``RateObserver`` wired into one fleet's drift tracker."""
+        return self.service(fleet).rate_observer(**kw)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def prewarm(self) -> None:
+        """Compile every fleet's window executables before traffic.
+
+        Sequential on purpose: fleets sharing burst shapes hit the
+        shared compile LRU after the first fleet pays the compile, so
+        prewarm cost is one compile per DISTINCT shape, not per fleet.
+        """
+        for svc in self._services.values():
+            svc.prewarm()
+
+    def start(self) -> "FleetRouter":
+        """Start every fleet's admission loop (one daemon thread each)."""
+        with self._mu:
+            for svc in self._services.values():
+                svc.start()
+            self._started = True
+        return self
+
+    def stop(self, flush: bool = True) -> None:
+        """Stop every loop; by default drain pending admissions first."""
+        with self._mu:
+            for svc in self._services.values():
+                svc.stop(flush=flush)
+            self._started = False
+
+    def step(self, fleet: Optional[str] = None) -> int:
+        """Run one synchronous admission window (one fleet, or all)."""
+        if fleet is not None:
+            return self.service(fleet).step()
+        return sum(svc.step() for svc in self._services.values())
+
+    def flush(self) -> int:
+        """Drain every fleet's pending admissions; total decisions made."""
+        return sum(svc.flush() for svc in self._services.values())
+
+    def __enter__(self) -> "FleetRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, object]:
+        """Per-fleet counter snapshots, keyed by fleet name."""
+        return {name: svc.stats for name, svc in self._services.items()}
+
+    def aggregate_stats(self) -> Dict[str, float]:
+        """Counters summed across fleets (decision throughput view)."""
+        agg: Dict[str, float] = {}
+        for svc in self._services.values():
+            snap = svc.stats
+            for k in ("windows", "cold_windows", "warm_windows", "decisions",
+                      "failed_decisions", "drift_events", "transfer_lanes",
+                      "resolve_lanes", "fallback_lanes", "queue_depth",
+                      "solve_seconds_total"):
+                agg[k] = agg.get(k, 0) + getattr(snap, k)
+        agg["fleets"] = len(self._services)
+        return agg
+
+    def latency_summary(self) -> Dict[str, float]:
+        """SLO quantiles over ALL fleets' pooled decision latencies."""
+        from .stats import ServiceStats
+
+        pooled = ServiceStats(reservoir=sum(
+            svc.ledger.reservoir for svc in self._services.values()))
+        for svc in self._services.values():
+            for s in svc.ledger.latencies():
+                pooled.record_latency(s)
+        return pooled.latency_summary()
+
+    @property
+    def queue_depth(self) -> int:
+        return sum(svc.queue_depth for svc in self._services.values())

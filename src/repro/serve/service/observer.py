@@ -1,0 +1,121 @@
+"""Automatic replica-rate observation from measured serving timings.
+
+PR 8's drift loop was operator-driven: somebody had to call
+``RouterService.observe(measured_A)`` with a hand-assembled vector.  The
+``RateObserver`` closes the loop from real traffic instead: a timed
+``ServeEngine.generate`` stamps ``(replica, num_requests, seconds)``
+into the observer after every batch, the observer keeps a sliding
+window of seconds/request per replica, and whenever a replica has
+enough samples it pushes the full smoothed A_j vector into its sink —
+normally ``RouterService.observe`` — so drift-triggered warm re-solves
+fire from measured traffic.  Replicas with no samples yet report their
+baseline rate, so a partially observed fleet still yields a complete,
+valid vector.
+
+Manual ``observe()`` calls remain a first-class override: the observer
+is just another caller of the same entry point.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["RateObserver"]
+
+
+class RateObserver:
+    """Sliding-window seconds/request per replica, auto-fed to a sink.
+
+    Args:
+        baseline: the A_j vector (seconds/request per replica) the
+            service currently solves against — the fallback rate for
+            replicas that have not reported yet, and the definition of
+            the replica index space.
+        window: samples retained per replica (sliding window; the mean
+            over it is the reported rate).  Small windows react fast,
+            large windows smooth noisy batches — the EWMA downstream
+            smooths again, so the default stays small.
+        min_samples: how many samples a replica needs before a
+            ``record`` on it triggers a push to the sink.
+        sink: called with the full rates vector after each qualifying
+            ``record`` (normally ``RouterService.observe``).  ``None``
+            makes the observer a passive accumulator — read ``rates()``
+            yourself.
+
+    Thread-safety: ``record`` may be called concurrently from every
+    replica's serving thread; the sample store is lock-protected and
+    the sink is invoked OUTSIDE the lock (sinks take their own locks).
+    """
+
+    def __init__(self, baseline: Sequence[float], *, window: int = 32,
+                 min_samples: int = 1,
+                 sink: Optional[Callable[[np.ndarray], None]] = None):
+        base = np.asarray(baseline, np.float64)
+        if base.ndim != 1 or base.size < 1 or not np.all(base > 0):
+            raise ValueError(
+                "baseline must be a 1-D vector of positive "
+                f"seconds/request, got {base}")
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        if min_samples < 1:
+            raise ValueError(f"min_samples must be >= 1, got {min_samples}")
+        self._baseline = base.copy()
+        self._window = int(window)
+        self._min_samples = int(min_samples)
+        self._sink = sink
+        self._lock = threading.Lock()
+        self._samples: Dict[int, deque] = {}
+        self.records = 0
+
+    @property
+    def num_replicas(self) -> int:
+        return int(self._baseline.size)
+
+    def record(self, replica: int, num_requests: int,
+               seconds: float) -> None:
+        """Stamp one served batch: ``seconds`` wall time for a batch of
+        ``num_requests`` on ``replica``; pushes to the sink when the
+        replica has accumulated ``min_samples``."""
+        r = int(replica)
+        if not (0 <= r < self._baseline.size):
+            raise ValueError(
+                f"replica must be in [0, {self._baseline.size}), got {replica}")
+        n = int(num_requests)
+        if n < 1:
+            raise ValueError(f"num_requests must be >= 1, got {num_requests}")
+        s = float(seconds)
+        if not (s > 0 and np.isfinite(s)):
+            raise ValueError(f"seconds must be positive finite, got {seconds}")
+        push = None
+        with self._lock:
+            dq = self._samples.get(r)
+            if dq is None:
+                dq = self._samples[r] = deque(maxlen=self._window)
+            dq.append(s / n)
+            self.records += 1
+            if self._sink is not None and len(dq) >= self._min_samples:
+                push = self._rates_locked()
+        if push is not None:
+            self._sink(push)
+
+    def _rates_locked(self) -> np.ndarray:
+        rates = self._baseline.copy()
+        for r, dq in self._samples.items():
+            if dq:
+                rates[r] = float(np.mean(dq))
+        return rates
+
+    def rates(self) -> np.ndarray:
+        """Current A_j estimate: per-replica window means, baseline for
+        replicas with no samples yet (always a complete valid vector)."""
+        with self._lock:
+            return self._rates_locked()
+
+    def sample_counts(self) -> Dict[int, int]:
+        """Samples currently retained per observed replica."""
+        with self._lock:
+            return {r: len(dq) for r, dq in self._samples.items()}

@@ -44,8 +44,9 @@ from repro.core.dlt.executors import LANE_MICROBATCH
 
 from ..engine import RouterStats, _burst_specs, _decision
 from .drift import DriftTracker
+from .observer import RateObserver
 from .queue import AdmissionQueue
-from .stats import ServiceStats
+from .stats import _LATENCY_RESERVOIR, ServiceStats
 
 __all__ = ["ServiceConfig", "RouteDecision", "RouterService"]
 
@@ -90,6 +91,12 @@ class ServiceConfig:
             scan is the cheaper trade (see the SLO bench).  Turn off to
             reuse a long-running engine's existing adaptive-budget
             executables.
+        latency_reservoir: per-decision latencies retained for the SLO
+            quantiles (most recent window).  A quantile ``q`` needs
+            roughly ``1 / (1 - q)`` samples to mean anything — below
+            that the readout is the sample max (see
+            ``ServiceStats.latency_quantile``) — so keep this at least
+            ~1k if the p999 readout matters.
     """
 
     admit_window_ms: float = 5.0
@@ -101,6 +108,7 @@ class ServiceConfig:
     strict: bool = True
     refresh_on_drift: bool = True
     stable_shapes: bool = True
+    latency_reservoir: int = _LATENCY_RESERVOIR
 
     def __post_init__(self):
         if not (self.admit_window_ms > 0):
@@ -119,6 +127,9 @@ class ServiceConfig:
             raise ValueError(
                 f"warm_policy must be one of {_WARM_POLICIES}, "
                 f"got {self.warm_policy!r}")
+        if self.latency_reservoir < 1:
+            raise ValueError(
+                f"latency_reservoir must be >= 1, got {self.latency_reservoir}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,7 +168,7 @@ class RouterService:
         self._mu = threading.RLock()        # service state (stats/drift/carry)
         self._step_mu = threading.Lock()    # serializes admission windows
         self._queue = AdmissionQueue()
-        self._ledger = ServiceStats()
+        self._ledger = ServiceStats(reservoir=self.config.latency_reservoir)
         self._tracker = DriftTracker(self.config.ewma_alpha)
         self._stats = stats                 # RouterStats currently solved
         self._baseline_A = np.asarray(
@@ -181,7 +192,12 @@ class RouterService:
         return item.future
 
     def observe(self, replica_seconds_per_request: Sequence[float]) -> None:
-        """Feed one measured A_j vector into the drift tracker."""
+        """Feed one measured A_j vector into the drift tracker.
+
+        Both the manual override path and the sink a
+        :meth:`rate_observer` pushes through — safe to call from any
+        thread, including replica serving threads mid-``generate``.
+        """
         self._tracker.observe(replica_seconds_per_request)
         with self._mu:
             if (not self._drift_pending
@@ -189,6 +205,20 @@ class RouterService:
                                               self.config.drift_threshold)):
                 self._drift_pending = True
                 self._ledger.bump(drift_events=1)
+
+    def rate_observer(self, **kw) -> RateObserver:
+        """A :class:`RateObserver` feeding this service's drift tracker.
+
+        Hand the result to each replica's ``ServeEngine(observer=...,
+        replica=j)``: measured ``generate`` timings then flow into
+        :meth:`observe` automatically, so drift re-solves fire from
+        real traffic with no operator in the loop.  Keyword arguments
+        (``window``, ``min_samples``) pass through to the observer; the
+        baseline is the A_j vector the service currently solves against.
+        """
+        with self._mu:
+            baseline = self._baseline_A
+        return RateObserver(baseline, sink=self.observe, **kw)
 
     # -- the window ---------------------------------------------------------
 
@@ -246,22 +276,24 @@ class RouterService:
         counts = [it.count for it in items] if items else list(probe_counts)
         specs, pperm = _burst_specs(self._stats, counts)
         pad = max(LANE_MICROBATCH - len(specs), 0)
-        before = self._engine.stats
-        t0 = time.perf_counter()
-        sol, carry = self._solver.solve_batch_carry(
-            specs + [specs[-1]] * pad, frontend=self.config.frontend,
-            presorted=True, warm=warm,
-            carry_in=self._carry if warm else None)
-        dt = time.perf_counter() - t0
-        after = self._engine.stats
+        # counter_scope: this thread's engine-counter deltas only — a
+        # before/after stats snapshot would blame sibling fleets' lanes
+        # on this window when several loops share the session
+        with self._engine.counter_scope() as deltas:
+            t0 = time.perf_counter()
+            sol, carry = self._solver.solve_batch_carry(
+                specs + [specs[-1]] * pad, frontend=self.config.frontend,
+                presorted=True, warm=warm,
+                carry_in=self._carry if warm else None)
+            dt = time.perf_counter() - t0
         self._carry = carry if carry else self._carry
         self._last_counts = counts
         self._ledger.bump(
             windows=1,
             warm_windows=int(warm), cold_windows=int(not warm),
-            transfer_lanes=after.transfer_lanes - before.transfer_lanes,
-            resolve_lanes=after.resolve_lanes - before.resolve_lanes,
-            fallback_lanes=after.fallback_lanes - before.fallback_lanes,
+            transfer_lanes=deltas["transfer_lanes"],
+            resolve_lanes=deltas["resolve_lanes"],
+            fallback_lanes=deltas["fallback_lanes"],
             solve_seconds_total=dt)
         now = time.perf_counter()
         for k, it in enumerate(items):

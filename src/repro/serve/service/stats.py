@@ -16,9 +16,14 @@ import numpy as np
 
 __all__ = ["ServiceStats", "ServiceStatsSnapshot"]
 
-# Cap on retained per-decision latencies.  At say 1k decisions/sec a day
-# of uptime is ~86M samples; the reservoir keeps the most recent window
-# instead — SLOs are about recent behavior anyway.
+# Default cap on retained per-decision latencies (override per ledger
+# via ``ServiceStats(reservoir=...)`` / the service's ``latency_reservoir``
+# knob).  At say 1k decisions/sec a day of uptime is ~86M samples; the
+# reservoir keeps the most recent window instead — SLOs are about recent
+# behavior anyway.  Sizing note: a quantile ``q`` needs roughly
+# ``1 / (1 - q)`` samples before its readout means anything (p999 ~1k),
+# so shrinking the reservoir below that silently degrades the tail
+# quantiles to the max (see ``latency_quantile``).
 _LATENCY_RESERVOIR = 65536
 
 
@@ -42,7 +47,10 @@ class ServiceStatsSnapshot:
 class ServiceStats:
     """Mutable, thread-safe ledger owned by a ``RouterService``."""
 
-    def __init__(self):
+    def __init__(self, reservoir: int = _LATENCY_RESERVOIR):
+        if reservoir < 1:
+            raise ValueError(f"reservoir must be >= 1, got {reservoir}")
+        self.reservoir = int(reservoir)
         self._lock = threading.Lock()
         self.windows = 0
         self.cold_windows = 0
@@ -64,22 +72,45 @@ class ServiceStats:
     def record_latency(self, seconds: float) -> None:
         with self._lock:
             self._latencies.append(float(seconds))
-            if len(self._latencies) > _LATENCY_RESERVOIR:
+            if len(self._latencies) > self.reservoir:
                 del self._latencies[: len(self._latencies)
-                                    - _LATENCY_RESERVOIR]
+                                    - self.reservoir]
+
+    def latencies(self) -> List[float]:
+        """Copy of the retained per-decision latencies (seconds)."""
+        with self._lock:
+            return list(self._latencies)
 
     def latency_quantile(self, q: float) -> float:
-        """Admission-to-decision latency quantile in seconds (NaN if none)."""
+        """Admission-to-decision latency quantile in seconds (NaN if none).
+
+        Small-sample honesty: a quantile ``q`` estimated from ``n``
+        samples with fewer than one expected sample above it
+        (``n * (1 - q) < 1`` — e.g. p999 below ~1k observations) would
+        just interpolate between the top two order statistics, reading
+        as a confident tail number that the data cannot support.  Those
+        readouts return the sample MAX instead — pessimistic, never
+        fabricated — and ``latency_summary`` reports ``n`` alongside so
+        a consumer can tell which quantiles are saturated.
+        """
         with self._lock:
             if not self._latencies:
                 return float("nan")
-            return float(np.quantile(np.asarray(self._latencies), q))
+            arr = np.asarray(self._latencies)
+            if arr.size * (1.0 - q) < 1.0:
+                return float(arr.max())
+            return float(np.quantile(arr, q))
 
     def latency_summary(self) -> Dict[str, float]:
-        """The SLO triple: p50 / p99 / p999 in seconds."""
+        """The SLO triple p50 / p99 / p999 in seconds, plus ``n`` — the
+        sample count backing them (quantiles with ``n * (1 - q) < 1``
+        are the sample max, see :meth:`latency_quantile`)."""
+        with self._lock:
+            n = len(self._latencies)
         return {"p50": self.latency_quantile(0.50),
                 "p99": self.latency_quantile(0.99),
-                "p999": self.latency_quantile(0.999)}
+                "p999": self.latency_quantile(0.999),
+                "n": n}
 
     def snapshot(self, queue_depth: int = 0) -> ServiceStatsSnapshot:
         with self._lock:

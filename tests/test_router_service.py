@@ -24,11 +24,11 @@ import pytest
 
 from repro.core.dlt import SystemSpec, get_default_engine, solve
 from repro.core.dlt.executors import LANE_MICROBATCH
-from repro.serve import (RouteDecision, RouterService, RouterStats,
-                         ServiceConfig)
+from repro.serve import (RateObserver, RouteDecision, RouterService,
+                         RouterStats, ServiceConfig)
 from repro.serve.engine import (_round_shares, route_requests,
                                 route_requests_batch)
-from repro.serve.service import DriftTracker
+from repro.serve.service import DriftTracker, ServiceStats
 
 FLEET_G = [0.001, 0.002]
 FLEET_R = [0.0, 0.0]
@@ -394,7 +394,113 @@ def test_stop_flushes_pending():
     (dict(ewma_alpha=0.0), "ewma_alpha"),
     (dict(ewma_alpha=1.5), "ewma_alpha"),
     (dict(warm_policy="lukewarm"), "warm_policy"),
+    (dict(latency_reservoir=0), "latency_reservoir"),
 ])
 def test_service_config_validation(kwargs, match):
     with pytest.raises(ValueError, match=match):
         ServiceConfig(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# drift tracker cold start (regression: EWMA must seed from the FIRST
+# observation, never from the configured rates)
+# ---------------------------------------------------------------------------
+
+def test_drift_tracker_seeds_from_first_observation():
+    t = DriftTracker(alpha=0.3)
+    baseline = [0.1, 0.1]
+    t.observe([0.3, 0.1])
+    # the first observation IS the ewma — no blend with any baseline
+    np.testing.assert_array_equal(t.ewma, [0.3, 0.1])
+    # so a genuinely drifted cold start registers at full magnitude
+    # after ONE window, not after 1/(1-alpha)^k of them
+    assert t.relative_drift(baseline) == pytest.approx(2.0)
+    assert t.drifted(baseline, threshold=0.15)
+
+
+def test_drift_fires_on_first_observation_through_the_service():
+    svc = RouterService(fleet(), ServiceConfig(drift_threshold=0.15))
+    svc.observe([a * 2.0 for a in FLEET_A])   # single cold-start sample
+    assert svc.stats.drift_events == 1
+
+
+# ---------------------------------------------------------------------------
+# latency ledger: small-sample quantiles + the reservoir knob
+# ---------------------------------------------------------------------------
+
+def test_latency_quantile_small_sample_returns_max():
+    led = ServiceStats()
+    for ms in range(1, 11):                   # n = 10 samples
+        led.record_latency(ms / 1000.0)
+    q = led.latency_summary()
+    assert q["n"] == 10
+    # p50 has 5 expected samples above it: interpolation is honest
+    assert q["p50"] == pytest.approx(0.0055)
+    # p99/p999 have < 1 expected sample above: the readout is the max,
+    # never an interpolated tail the data cannot support
+    assert q["p99"] == 0.010
+    assert q["p999"] == 0.010
+    # past ~1/(1-q) samples the quantile interpolates again
+    for ms in range(11, 1201):
+        led.record_latency(ms / 1000.0)
+    assert led.latency_quantile(0.999) < 1.2
+
+
+def test_latency_reservoir_knob_bounds_retention():
+    led = ServiceStats(reservoir=4)
+    for ms in (1, 2, 3, 4, 5, 6):
+        led.record_latency(float(ms))
+    assert led.latencies() == [3.0, 4.0, 5.0, 6.0]   # most recent window
+    with pytest.raises(ValueError, match="reservoir"):
+        ServiceStats(reservoir=0)
+    svc = RouterService(fleet(), ServiceConfig(latency_reservoir=2))
+    assert svc.ledger.reservoir == 2
+
+
+# ---------------------------------------------------------------------------
+# rate observer: measured generate() timings -> drift tracker
+# ---------------------------------------------------------------------------
+
+def test_rate_observer_reports_baseline_until_observed():
+    obs = RateObserver(FLEET_A, window=4)
+    np.testing.assert_array_equal(obs.rates(), FLEET_A)
+    obs.record(2, num_requests=4, seconds=1.6)       # 0.4 s/request
+    got = obs.rates()
+    assert got[2] == pytest.approx(0.4)
+    np.testing.assert_array_equal(np.delete(got, 2),
+                                  np.delete(np.asarray(FLEET_A), 2))
+    assert obs.sample_counts() == {2: 1}
+
+
+def test_rate_observer_window_mean_and_validation():
+    obs = RateObserver([0.1], window=2)
+    obs.record(0, 1, 0.1)
+    obs.record(0, 1, 0.2)
+    obs.record(0, 1, 0.4)                 # evicts the 0.1 sample
+    assert obs.rates()[0] == pytest.approx(0.3)
+    with pytest.raises(ValueError, match="replica"):
+        obs.record(1, 1, 0.1)
+    with pytest.raises(ValueError, match="num_requests"):
+        obs.record(0, 0, 0.1)
+    with pytest.raises(ValueError, match="seconds"):
+        obs.record(0, 1, -0.1)
+    with pytest.raises(ValueError, match="window"):
+        RateObserver([0.1], window=0)
+    with pytest.raises(ValueError, match="baseline"):
+        RateObserver([0.0])
+
+
+def test_rate_observer_feeds_service_drift_automatically():
+    svc = RouterService(fleet(), ServiceConfig(drift_threshold=0.15))
+    obs = svc.rate_observer(window=4)
+    assert obs.num_replicas == len(FLEET_A)
+    # replica 1 measured at 2x its solved-against rate: one qualifying
+    # sample pushes the full vector into observe() and trips drift,
+    # with no operator call anywhere
+    obs.record(1, num_requests=2, seconds=2 * 2 * FLEET_A[1])
+    assert svc.stats.drift_events == 1
+    ewma = svc._tracker.ewma
+    assert ewma[1] == pytest.approx(2 * FLEET_A[1])
+    # unobserved replicas came through at baseline: no phantom drift
+    np.testing.assert_allclose(np.delete(ewma, 1),
+                               np.delete(np.asarray(FLEET_A), 1))

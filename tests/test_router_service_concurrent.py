@@ -1,0 +1,299 @@
+"""Concurrent routing: fleets sharing one engine, compile-latch cache.
+
+The threaded stress tier (``pytest -m concurrency`` — CI runs it under
+a hard timeout so a deadlock fails fast).  Covers the PR-10 concurrency
+contract:
+
+* ``RouterService.submit`` hammered from >= 8 threads: no lost futures,
+  no duplicate window decisions, every decision bit-identical to the
+  one-shot route,
+* the engine's compile-latch LRU under a race for the SAME missing
+  shape: exactly one compile (no thundering herd), counters consistent
+  (``hits + misses == lookups``) under any interleaving,
+* ``DLTEngine.counter_scope`` attributing lane counters to the thread
+  that solved them, not to whichever thread read ``stats`` last,
+* ``FleetRouter``: N admission loops over one shared session, each
+  fleet's decisions bit-identical to its own one-shot baseline while
+  sibling fleets race the same compile cache.
+
+Every test builds a FRESH engine (no process-default sharing): the
+cache counters under test must start at zero.
+"""
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro.core.dlt import DLTEngine, SystemSpec
+from repro.core.dlt.executors import LANE_MICROBATCH
+from repro.serve import (FleetRouter, RouterService, RouterStats,
+                         ServiceConfig)
+from repro.serve.engine import route_requests_batch
+
+pytestmark = pytest.mark.concurrency
+
+FLEET_G = [0.001, 0.002]
+FLEET_R = [0.0, 0.0]
+FLEET_A = [0.05, 0.10, 0.20, 0.08]
+
+
+def fleet(scale: float = 1.0) -> RouterStats:
+    return RouterStats(FLEET_G, FLEET_R,
+                       [a * scale for a in FLEET_A])
+
+
+def spec(m: int = 6) -> SystemSpec:
+    return SystemSpec(G=[0.5, 0.8], R=[0.0, 0.1], A=[1.0 / (j + 1)
+                                                     for j in range(m)])
+
+
+# ---------------------------------------------------------------------------
+# submit hammered from many threads
+# ---------------------------------------------------------------------------
+
+def test_concurrent_submit_no_lost_futures_no_duplicates():
+    eng = DLTEngine()
+    svc = RouterService(fleet(), ServiceConfig(admit_window_ms=1.0),
+                        engine=eng)
+    svc.prewarm()
+    n_threads, per_thread = 8, 12
+    futures = [[] for _ in range(n_threads)]
+    start = threading.Barrier(n_threads + 1)
+
+    def hammer(t):
+        start.wait()
+        rng = np.random.default_rng(t)
+        for _ in range(per_thread):
+            futures[t].append(svc.submit(int(rng.integers(1, 9))))
+
+    with svc:
+        workers = [threading.Thread(target=hammer, args=(t,))
+                   for t in range(n_threads)]
+        for w in workers:
+            w.start()
+        start.wait()
+        for w in workers:
+            w.join()
+    # stop() flushed: every future must be resolved, none lost
+    flat = [f for per in futures for f in per]
+    assert len(flat) == n_threads * per_thread
+    decisions = [f.result(timeout=30) for f in flat]
+    assert all(d.shares.sum() >= 1 for d in decisions)
+    snap = svc.stats
+    assert snap.decisions == len(flat)
+    assert snap.failed_decisions == 0
+    assert snap.queue_depth == 0
+    # no duplicate decisions: windows account for every admission once
+    assert sum(d.window_size for d in decisions) >= len(flat)
+    info = eng.compile_cache_info()
+    assert info["hits"] + info["misses"] == info["lookups"]
+
+
+def test_concurrent_submits_bit_identical_to_one_shot():
+    eng = DLTEngine()
+    stats = fleet()
+    svc = RouterService(stats, ServiceConfig(admit_window_ms=1.0),
+                        engine=eng)
+    svc.prewarm()
+    counts = list(range(1, 9)) * 4
+    futs = {n: [] for n in set(counts)}
+    with svc:
+        with ThreadPoolExecutor(max_workers=8) as pool:
+            pending = [(n, pool.submit(svc.submit, n)) for n in counts]
+            # wait for every submit() to have run BEFORE the service stops
+            for n, sf in pending:
+                futs[n].append(sf.result(timeout=30))
+    oneshot = {n: route_requests_batch(stats, [n], engine=eng)[0]
+               for n in sorted(set(counts))}
+    for n, submitted in futs.items():
+        for f in submitted:
+            dec = f.result(timeout=30)
+            np.testing.assert_array_equal(dec.shares,
+                                          oneshot[n]["shares"])
+
+
+# ---------------------------------------------------------------------------
+# compile-latch cache: one compile per missing shape, consistent counters
+# ---------------------------------------------------------------------------
+
+def test_compile_latch_single_compile_for_racing_threads():
+    # single-threaded reference: how many compiles does this workload take?
+    ref = DLTEngine()
+    batch = [spec()] * LANE_MICROBATCH
+    ref.solve_batch(batch)
+    ref_misses = ref.compile_cache_info()["misses"]
+
+    eng = DLTEngine()
+    start = threading.Barrier(8)
+
+    def racer():
+        start.wait()
+        eng.solve_batch(batch)
+
+    threads = [threading.Thread(target=racer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    info = eng.compile_cache_info()
+    # the latch protocol: racing threads never duplicate a compile
+    assert info["misses"] == ref_misses
+    assert info["hits"] + info["misses"] == info["lookups"]
+    assert info["in_flight"] == 0
+    # 8 threads, >= 1 shared shape: someone must have blocked on a latch
+    # (not guaranteed on a 1-core host if threads serialize perfectly,
+    # so only sanity-bound it)
+    assert 0 <= info["contention"] <= info["lookups"]
+
+
+def test_cache_counters_consistent_under_mixed_shapes():
+    eng = DLTEngine()
+    shapes = [spec(4), spec(6), spec(8), spec(12)]
+    start = threading.Barrier(8)
+
+    def racer(t):
+        start.wait()
+        for k in range(3):
+            eng.solve_batch([shapes[(t + k) % len(shapes)]]
+                            * LANE_MICROBATCH)
+
+    threads = [threading.Thread(target=racer, args=(t,)) for t in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    info = eng.compile_cache_info()
+    assert info["hits"] + info["misses"] == info["lookups"]
+    assert info["in_flight"] == 0
+    assert eng.stats.cache_lookups == info["lookups"]
+    assert eng.stats.cache_contention == info["contention"]
+
+
+def test_counter_scope_is_thread_local():
+    eng = DLTEngine()
+    eng.solve_batch([spec()] * LANE_MICROBATCH)  # compile outside scopes
+    sizes = {"a": LANE_MICROBATCH, "b": 2 * LANE_MICROBATCH}
+    scopes = {}
+    start = threading.Barrier(2)
+
+    def worker(name):
+        with eng.counter_scope() as deltas:
+            start.wait()
+            eng.solve_batch([spec()] * sizes[name])
+        scopes[name] = deltas
+
+    threads = [threading.Thread(target=worker, args=(n,)) for n in sizes]
+    before = eng.stats
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    after = eng.stats
+    # each scope saw exactly its own thread's lanes...
+    assert scopes["a"]["lanes"] == sizes["a"]
+    assert scopes["b"]["lanes"] == sizes["b"]
+    # ...and the global ledger saw the sum
+    assert after.lanes - before.lanes == sizes["a"] + sizes["b"]
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter: N loops, one session
+# ---------------------------------------------------------------------------
+
+def test_fleet_router_decisions_bit_identical_per_fleet():
+    eng = DLTEngine()
+    fleets = {"f0": fleet(1.0), "f1": fleet(1.3), "f2": fleet(0.7)}
+    router = FleetRouter(fleets, ServiceConfig(admit_window_ms=1.0),
+                        engine=eng)
+    router.prewarm()
+    counts = list(range(1, 7)) * 2
+    futs = {name: [] for name in fleets}
+    with router:
+        for n in counts:
+            for name in fleets:
+                futs[name].append((n, router.submit(name, n)))
+    for name, stats in fleets.items():
+        oneshot = {n: route_requests_batch(stats, [n], engine=eng)[0]
+                   for n in sorted(set(counts))}
+        for n, f in futs[name]:
+            dec = f.result(timeout=30)
+            np.testing.assert_array_equal(dec.shares, oneshot[n]["shares"])
+    agg = router.aggregate_stats()
+    assert agg["decisions"] == len(counts) * len(fleets)
+    assert agg["failed_decisions"] == 0
+    assert agg["fleets"] == len(fleets)
+    info = eng.compile_cache_info()
+    assert info["hits"] + info["misses"] == info["lookups"]
+
+
+def test_fleet_router_validation_and_introspection():
+    eng = DLTEngine()
+    router = FleetRouter(
+        {"x": fleet(), "y": (fleet(1.1),
+                             ServiceConfig(admit_window_ms=2.0))},
+        engine=eng)
+    assert router.names == ("x", "y")
+    assert router.service("y").config.admit_window_ms == 2.0
+    with pytest.raises(KeyError, match="unknown fleet"):
+        router.service("nope")
+    with pytest.raises(ValueError, match="at least one fleet"):
+        FleetRouter({}, engine=eng)
+    router.submit("x", 3)
+    assert router.queue_depth == 1
+    assert router.flush() == 1
+    assert router.stats["x"].decisions == 1
+    # pooled latency summary reports its sample count
+    assert router.latency_summary()["n"] == 1
+
+
+def test_fleet_router_synchronous_step_per_fleet():
+    eng = DLTEngine()
+    router = FleetRouter({"a": fleet(), "b": fleet(1.2)},
+                        config=ServiceConfig(admit_window_ms=1.0),
+                        engine=eng)
+    router.submit("a", 2)
+    router.submit("b", 3)
+    assert router.step("a") == 1
+    assert router.step() == 1      # drains the rest ("b")
+    assert router.queue_depth == 0
+
+
+# ---------------------------------------------------------------------------
+# hammered shared engine: fleets + raw solve traffic at once
+# ---------------------------------------------------------------------------
+
+def test_shared_engine_hammered_by_fleets_and_direct_solves():
+    eng = DLTEngine()
+    router = FleetRouter({"a": fleet(), "b": fleet(1.5)},
+                        config=ServiceConfig(admit_window_ms=1.0),
+                        engine=eng)
+    router.prewarm()
+    stop = threading.Event()
+    errors = []
+
+    def direct():
+        try:
+            while not stop.is_set():
+                eng.solve_batch([spec()] * LANE_MICROBATCH)
+        except Exception as exc:           # pragma: no cover - failure path
+            errors.append(exc)
+
+    solver = threading.Thread(target=direct)
+    futs = []
+    with router:
+        solver.start()
+        for k in range(24):
+            futs.append(router.submit("a" if k % 2 else "b",
+                                      1 + k % 6))
+            time.sleep(0.001)
+    stop.set()
+    solver.join()
+    assert not errors
+    for f in futs:
+        f.result(timeout=30)
+    info = eng.compile_cache_info()
+    assert info["hits"] + info["misses"] == info["lookups"]
+    assert info["in_flight"] == 0

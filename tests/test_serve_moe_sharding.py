@@ -38,6 +38,29 @@ def test_engine_generates_tokens():
         assert (o >= 0).all() and (o < cfg.vocab_size).all()
 
 
+def test_engine_generate_stamps_rate_observer():
+    from repro.serve import RateObserver
+
+    cfg = get_config("llama3-8b").reduced(num_layers=2)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    recorded = []
+    obs = RateObserver([1.0, 1.0], sink=recorded.append)
+    engine = ServeEngine(cfg, params, max_batch=3, max_seq=48,
+                         observer=obs, replica=1)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rng.integers(0, cfg.vocab_size, 8, dtype=np.int32),
+                    max_new_tokens=3, request_id=i) for i in range(2)]
+    engine.generate(reqs)
+    # one generate -> one (replica, batch, seconds) stamp -> one push
+    assert obs.sample_counts() == {1: 1}
+    assert len(recorded) == 1
+    assert recorded[0][1] > 0 and recorded[0][0] == 1.0  # replica 0 untouched
+    # empty batches are not recorded
+    engine.generate([])
+    assert obs.records == 1
+
+
 def test_engine_greedy_deterministic():
     cfg = get_config("rwkv6-7b").reduced(num_layers=2)
     model = LM(cfg)
